@@ -1,0 +1,242 @@
+"""Benchmark harness — one function per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows.
+
+* fig12_applicability — programs completing under a memory budget, per
+  backend, with/without optimization           (paper Fig. 12)
+* fig13_exec_time     — absolute runtime per backend, optimized (Fig. 13)
+* fig14_speedup       — % runtime improvement from the optimizer (Fig. 14)
+* fig15_memory        — % peak-memory reduction (streaming meter) (Fig. 15)
+* analysis_overhead   — JIT static-analysis wall time        (paper §5.3)
+* ablation_persist    — reuse-heavy program, persist on/off  (paper §5.3/5.4)
+* kernels             — dataframe-kernel microbenchmarks (XLA oracle path)
+* roofline            — summary of dryrun_baseline.json when present
+
+Scale: REPRO_BENCH_SCALE rows for the taxi table (default 200k ≈ laptop
+seconds; the paper's 1.4/4.2/12.6 GB correspond to ~2e7/6e7/1.8e8 rows).
+"""
+from __future__ import annotations
+
+import json
+import os
+import time
+
+import numpy as np
+
+SCALE = int(os.environ.get("REPRO_BENCH_SCALE", 200_000))
+_ROWS: list[str] = []
+
+
+def emit(name: str, us_per_call: float, derived: str = ""):
+    row = f"{name},{us_per_call:.1f},{derived}"
+    _ROWS.append(row)
+    print(row, flush=True)
+
+
+def _fresh_ctx(backend, budget=None):
+    from repro.core import get_context
+    ctx = get_context()
+    ctx.reset()
+    ctx.backend = backend
+    ctx.memory_budget = budget
+    ctx.print_fn = lambda *a: None
+    return ctx
+
+
+def _run_program(fn, sources, backend, budget=None, optimize=True):
+    """Returns (seconds, peak_bytes, ok)."""
+    from repro.core.backends import MemoryBudgetExceeded
+    ctx = _fresh_ctx(backend, budget)
+    if not optimize:
+        import repro.core.runtime as rt
+        import repro.core.optimizer as opt
+        orig = opt.optimize
+        rt.optimize = lambda roots, c=None, enable=(): orig(roots, c, ())
+    t0 = time.perf_counter()
+    ok = True
+    try:
+        fn(sources)
+    except MemoryBudgetExceeded:
+        ok = False
+    finally:
+        if not optimize:
+            import repro.core.optimizer as opt
+            import repro.core.runtime as rt
+            rt.optimize = opt.optimize
+    return time.perf_counter() - t0, ctx.last_peak_bytes, ok
+
+
+def fig12_applicability():
+    """Programs that complete under a memory budget (out-of-memory analogue
+    of the paper's 12.6 GB runs — the budget is ~35% of the dataset)."""
+    from repro.core import BackendEngines
+    from .programs import PROGRAMS, build_sources
+    sources = build_sources(SCALE)
+    taxi = sources["taxi"]
+    dataset_bytes = taxi.total_rows() * taxi.schema.row_bytes()
+    budget = int(dataset_bytes * 0.35)
+    for backend in (BackendEngines.STREAMING,):
+        for optimize in (False, True):
+            t0 = time.perf_counter()
+            succ = 0
+            for name, fn in PROGRAMS.items():
+                _, _, ok = _run_program(fn, sources, backend, budget,
+                                        optimize)
+                succ += int(ok)
+            label = "LaFP" if optimize else "plain"
+            emit(f"fig12_{backend.value}_{label}",
+                 (time.perf_counter() - t0) * 1e6,
+                 f"{succ}/{len(PROGRAMS)} programs under "
+                 f"{budget / 1e6:.0f}MB budget")
+
+
+def fig13_exec_time():
+    import tempfile
+    from repro.core import BackendEngines
+    from .programs import PROGRAMS, build_sources
+    with tempfile.TemporaryDirectory() as td:
+        sources = build_sources(SCALE, tmpdir=td)   # disk-backed (paper CSVs)
+        for backend in (BackendEngines.EAGER, BackendEngines.STREAMING,
+                        BackendEngines.DISTRIBUTED):
+            for name, fn in PROGRAMS.items():
+                secs, _, ok = _run_program(fn, sources, backend)
+                emit(f"fig13_{backend.value}_{name}", secs * 1e6,
+                     "ok" if ok else "fail")
+
+
+def fig14_speedup():
+    import tempfile
+    from repro.core import BackendEngines
+    from .programs import PROGRAMS, build_sources
+    with tempfile.TemporaryDirectory() as td:
+        sources = build_sources(SCALE, tmpdir=td)   # disk-backed (paper CSVs)
+        for backend in (BackendEngines.EAGER, BackendEngines.STREAMING):
+            for name, fn in PROGRAMS.items():
+                t_plain, _, ok1 = _run_program(fn, sources, backend,
+                                               optimize=False)
+                t_opt, _, ok2 = _run_program(fn, sources, backend,
+                                             optimize=True)
+                if ok1 and ok2 and t_plain > 0:
+                    imp = 100.0 * (t_plain - t_opt) / t_plain
+                    emit(f"fig14_{backend.value}_{name}", t_opt * 1e6,
+                         f"improvement={imp:.1f}%")
+
+
+def fig15_memory():
+    from repro.core import BackendEngines
+    from .programs import PROGRAMS, build_sources
+    sources = build_sources(SCALE)
+    for name, fn in PROGRAMS.items():
+        _, m_plain, ok1 = _run_program(fn, sources, BackendEngines.STREAMING,
+                                       optimize=False)
+        _, m_opt, ok2 = _run_program(fn, sources, BackendEngines.STREAMING,
+                                     optimize=True)
+        if ok1 and ok2 and m_plain:
+            red = 100.0 * (m_plain - m_opt) / m_plain
+            emit(f"fig15_{name}", m_opt, f"mem_reduction={red:.1f}%")
+
+
+def analysis_overhead():
+    """Paper §5.3: 0.04–0.59 s static-analysis overhead."""
+    import inspect
+    from repro.core.source_analysis import analyze_source
+    from . import programs
+    src = inspect.getsource(programs)
+    t0 = time.perf_counter()
+    for _ in range(5):
+        analyze_source(src)
+    dt = (time.perf_counter() - t0) / 5
+    emit("analysis_overhead_whole_module", dt * 1e6, f"{dt * 1000:.1f}ms")
+
+
+def ablation_persist():
+    """Paper §5.3/§5.4: reuse-heavy program with persist on/off ('stu':
+    13× speedup at 2.3× memory in the paper)."""
+    from repro.core import BackendEngines
+    from .programs import build_sources, prog_reuse_stu
+
+    import tempfile
+
+    def run(use_live):
+        ctx = _fresh_ctx(BackendEngines.STREAMING)
+        with tempfile.TemporaryDirectory() as td:
+            # disk-backed + 8× scale: recompute really re-reads (the paper's
+            # 13× shows at 12.6 GB; the effect needs IO-bound reuse)
+            sources = build_sources(SCALE * 8, tmpdir=td)
+            import repro.core.runtime as rt
+            orig = rt.plan_persists   # patch the name runtime actually calls
+            if not use_live:
+                rt.plan_persists = lambda roots, live: set()
+            try:
+                t0 = time.perf_counter()
+                prog_reuse_stu(sources)
+                dt = time.perf_counter() - t0
+            finally:
+                rt.plan_persists = orig
+        return dt, ctx.last_peak_bytes
+
+    t_on, m_on = run(True)
+    t_off, m_off = run(False)
+    emit("ablation_persist_on", t_on * 1e6, f"peak={m_on/1e6:.1f}MB")
+    emit("ablation_persist_off", t_off * 1e6,
+         f"peak={m_off/1e6:.1f}MB speedup={t_off/max(t_on,1e-9):.2f}x "
+         f"mem_ratio={m_on/max(m_off,1):.2f}x")
+
+
+def kernels():
+    import jax
+    import jax.numpy as jnp
+    from repro.kernels import ops
+    rng = np.random.default_rng(0)
+    n = 1 << 18
+    codes = jnp.asarray(rng.integers(0, 64, n).astype(np.int32))
+    vals = jnp.asarray(rng.normal(size=n).astype(np.float32))
+    mask = jnp.asarray(rng.random(n) < 0.5)
+    cfg = ops.KernelConfig(impl="xla")
+    for name, fn in [
+        ("groupby_sum", lambda: ops.groupby_sum(codes, vals, 64, cfg)),
+        ("filter_compact", lambda: ops.filter_compact(vals, mask, cfg)),
+        ("zonemap", lambda: ops.zonemap(vals, 4096, cfg)),
+    ]:
+        jax.block_until_ready(fn())  # warmup
+        reps = 20
+        t0 = time.perf_counter()
+        for _ in range(reps):
+            r = fn()
+        jax.block_until_ready(r)
+        dt = (time.perf_counter() - t0) / reps
+        emit(f"kernel_{name}_xla_n{n}", dt * 1e6,
+             f"{n / dt / 1e6:.0f}M rows/s")
+
+
+def roofline():
+    path = os.path.join(os.path.dirname(__file__), "..",
+                        "dryrun_baseline.json")
+    if not os.path.exists(path):
+        emit("roofline_table", 0.0, "dryrun_baseline.json missing — run "
+             "python -m repro.launch.dryrun --all --mesh both --out it")
+        return
+    rows = json.load(open(path))
+    for r in rows:
+        if r["status"] != "ok":
+            continue
+        rf = r["roofline"]
+        emit(f"roofline_{r['arch']}_{r['shape']}_{r['mesh']}",
+             rf[rf["dominant"] + "_s"] * 1e6,
+             f"dom={rf['dominant']} frac={r['roofline_fraction']:.3f}")
+
+
+def main() -> None:
+    t0 = time.perf_counter()
+    for fn in (fig12_applicability, fig13_exec_time, fig14_speedup,
+               fig15_memory, analysis_overhead, ablation_persist, kernels,
+               roofline):
+        try:
+            fn()
+        except Exception as e:  # noqa: BLE001
+            emit(f"ERROR_{fn.__name__}", 0.0, f"{type(e).__name__}: {e}")
+    emit("total_wall", (time.perf_counter() - t0) * 1e6, "")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,244 @@
+"""Architecture configs (assigned pool) + input shapes.
+
+Each ``configs/<id>.py`` defines ``ARCH = ArchConfig(...)`` with the exact
+assigned hyperparameters; ``ArchConfig.smoke()`` derives the reduced same-
+family config used by CPU smoke tests.  ``input_specs`` builds the
+ShapeDtypeStruct stand-ins for dry-run lowering (no allocation).
+"""
+from __future__ import annotations
+
+import dataclasses
+import importlib
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from ..models.transformer import LayerSpec, cache_shapes
+
+
+@dataclasses.dataclass(frozen=True)
+class ArchConfig:
+    name: str
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    head_dim: int
+    d_ff: int
+    vocab: int
+    prelude: tuple[LayerSpec, ...] = ()
+    group: tuple[LayerSpec, ...] = ()
+    n_groups: int = 0
+    postlude: tuple[LayerSpec, ...] = ()
+    modality: str = "text"              # text | embed_in (audio/vlm stub)
+    qkv_bias: bool = False
+    rope_theta: float = 10000.0
+    norm_eps: float = 1e-6
+    embed_scale: bool = False
+    # MoE
+    moe_routed: int = 0
+    moe_shared: int = 0
+    moe_top_k: int = 0
+    moe_d_ff: int = 0
+    moe_capacity: float = 1.25
+    # MLA
+    kv_lora_rank: int | None = None
+    qk_rope_dim: int = 64
+    v_head_dim: int | None = None
+    # SSM / xLSTM
+    xlstm_proj_factor: float = 2.0
+    mamba_d_state: int = 16
+    ssm_chunk: int = 128
+    ssm_scan_dtype: str = "float32"   # "bfloat16": §Perf jamba iteration
+    sharding_profile: str = "fsdp_tp"   # dp_tp: replicate params over data
+                                        # (small models; kills FSDP gathers)
+    # policy
+    activation_dtype: Any = jnp.bfloat16
+    remat: bool = True
+    sub_quadratic: bool = False         # runs long_500k
+    family: str = "dense"               # dense|moe|ssm|hybrid|audio|vlm
+    attn_impl: str = "chunked"          # flash-style default; "dense" = naive baseline
+    kv_chunk: int = 1024
+
+    # -- sub-config helpers -------------------------------------------------
+    def attn_config(self, ls: LayerSpec):
+        from ..models.attention import AttnConfig
+        return AttnConfig(
+            d_model=self.d_model, n_heads=self.n_heads,
+            n_kv_heads=self.n_kv_heads, head_dim=self.head_dim,
+            qkv_bias=self.qkv_bias, window=ls.window,
+            rope_theta=self.rope_theta, kv_lora_rank=self.kv_lora_rank,
+            qk_rope_dim=self.qk_rope_dim, v_head_dim=self.v_head_dim,
+            attn_impl=self.attn_impl, kv_chunk=self.kv_chunk)
+
+    def moe_config(self):
+        from ..models.moe import MoEConfig
+        return MoEConfig(d_model=self.d_model, n_routed=self.moe_routed,
+                         n_shared=self.moe_shared, top_k=self.moe_top_k,
+                         d_ff_expert=self.moe_d_ff,
+                         capacity_factor=self.moe_capacity)
+
+    def mamba_config(self):
+        from ..models.ssm import MambaConfig
+        return MambaConfig(d_model=self.d_model, d_state=self.mamba_d_state,
+                           chunk=self.ssm_chunk,
+                           scan_dtype=self.ssm_scan_dtype)
+
+    def xlstm_config(self):
+        from ..models.xlstm import XLSTMConfig
+        return XLSTMConfig(d_model=self.d_model, n_heads=self.n_heads,
+                           proj_factor=self.xlstm_proj_factor,
+                           chunk=self.ssm_chunk)
+
+    @property
+    def n_layers(self) -> int:
+        return (len(self.prelude) + self.n_groups * len(self.group)
+                + len(self.postlude))
+
+    def param_count(self) -> tuple[int, int]:
+        """(total, active) parameter counts from the spec (embed table
+        excluded from both, unembed included — the 6ND convention)."""
+        from ..models.transformer import model_spec
+        spec = model_spec(self)
+        total = active = 0
+        for path, (shape, _dt, _ax) in spec.items():
+            n = 1
+            for d in shape:
+                n *= d
+            if path == "embed":
+                continue
+            total += n
+            if "/ffn/w_" in path and self.moe_routed:
+                active += n * self.moe_top_k // self.moe_routed
+            else:
+                active += n
+        return total, active
+
+    def group_param_count(self) -> int:
+        """Active params in ONE scan group (for scan-body FLOPs correction)."""
+        from ..models.transformer import model_spec
+        spec = model_spec(self)
+        active = 0
+        for path, (shape, _dt, _ax) in spec.items():
+            if not path.startswith("group/"):
+                continue
+            n = 1
+            for d in shape:
+                n *= d
+            n //= max(self.n_groups, 1)
+            if "/ffn/w_" in path and self.moe_routed:
+                active += n * self.moe_top_k // self.moe_routed
+            else:
+                active += n
+        return active
+
+    def smoke(self) -> "ArchConfig":
+        """Reduced same-family config for CPU smoke tests: same stacking
+        pattern, tiny widths."""
+        heads = min(self.n_heads, 4)
+        kv = max(1, min(self.n_kv_heads, heads))
+        return dataclasses.replace(
+            self,
+            name=self.name + "-smoke",
+            d_model=64, n_heads=heads, n_kv_heads=kv, head_dim=16,
+            d_ff=128 if self.d_ff else 0, vocab=128,
+            n_groups=min(self.n_groups, 2),
+            prelude=self.prelude[:1], postlude=self.postlude[:1],
+            moe_routed=min(self.moe_routed, 8) if self.moe_routed else 0,
+            moe_top_k=min(self.moe_top_k, 2) if self.moe_top_k else 0,
+            moe_d_ff=32 if self.moe_routed else 0,
+            moe_capacity=8.0,    # no drops at smoke scale (decode≡train)
+            kv_lora_rank=32 if self.kv_lora_rank else None,
+            qk_rope_dim=8 if self.kv_lora_rank else 64,
+            v_head_dim=16 if self.v_head_dim else None,
+            ssm_chunk=8,
+            ssm_scan_dtype="float32",   # exact chunk↔step equivalence
+            activation_dtype=jnp.float32, remat=False)
+
+
+# ---------------------------------------------------------------------------
+# Shapes
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeConfig:
+    name: str
+    kind: str            # train | prefill | decode
+    seq: int
+    global_batch: int
+
+
+SHAPES = {
+    "train_4k": ShapeConfig("train_4k", "train", 4096, 256),
+    "prefill_32k": ShapeConfig("prefill_32k", "prefill", 32768, 32),
+    "decode_32k": ShapeConfig("decode_32k", "decode", 32768, 128),
+    "long_500k": ShapeConfig("long_500k", "decode", 524288, 1),
+}
+
+
+def shape_applicable(arch: ArchConfig, shape: ShapeConfig) -> tuple[bool, str]:
+    """long_500k only for sub-quadratic families (DESIGN §4)."""
+    if shape.name == "long_500k" and not arch.sub_quadratic:
+        return False, ("skipped: pure full-attention arch at 524k context "
+                       "(assignment skip rule; see DESIGN.md §4)")
+    return True, ""
+
+
+def input_specs(arch: ArchConfig, shape: ShapeConfig,
+                cache_dtype=jnp.bfloat16) -> dict:
+    """ShapeDtypeStruct stand-ins for every model input of the step function
+    that the dry-run lowers — weak-type-correct, shardable, no allocation."""
+    B, S = shape.global_batch, shape.seq
+    tok = jax.ShapeDtypeStruct((B, S), jnp.int32)
+    if shape.kind == "train":
+        if arch.modality == "text":
+            return {"tokens": tok,
+                    "labels": jax.ShapeDtypeStruct((B, S), jnp.int32)}
+        return {"embeds": jax.ShapeDtypeStruct((B, S, arch.d_model),
+                                               jnp.bfloat16),
+                "labels": jax.ShapeDtypeStruct((B, S), jnp.int32)}
+    if shape.kind == "prefill":
+        if arch.modality == "text":
+            return {"tokens": tok}
+        return {"embeds": jax.ShapeDtypeStruct((B, S, arch.d_model),
+                                               jnp.bfloat16)}
+    # decode: one new token against an S-token cache
+    new = {"tokens": jax.ShapeDtypeStruct((B, 1), jnp.int32)} \
+        if arch.modality == "text" else \
+        {"embeds": jax.ShapeDtypeStruct((B, 1, arch.d_model), jnp.bfloat16)}
+    new["cache"] = cache_shapes(arch, B, S, cache_dtype)
+    new["cache_len"] = jax.ShapeDtypeStruct((B,), jnp.int32)
+    return new
+
+
+# ---------------------------------------------------------------------------
+# Registry
+
+ARCH_IDS = [
+    "musicgen_large", "deepseek_moe_16b", "deepseek_v2_lite_16b",
+    "qwen2_5_3b", "mistral_nemo_12b", "gemma3_4b", "llama3_2_3b",
+    "phi_3_vision_4_2b", "xlstm_350m", "jamba_v0_1_52b",
+]
+
+_ALIASES = {
+    "musicgen-large": "musicgen_large",
+    "deepseek-moe-16b": "deepseek_moe_16b",
+    "deepseek-v2-lite-16b": "deepseek_v2_lite_16b",
+    "qwen2.5-3b": "qwen2_5_3b",
+    "mistral-nemo-12b": "mistral_nemo_12b",
+    "gemma3-4b": "gemma3_4b",
+    "llama3.2-3b": "llama3_2_3b",
+    "phi-3-vision-4.2b": "phi_3_vision_4_2b",
+    "xlstm-350m": "xlstm_350m",
+    "jamba-v0.1-52b": "jamba_v0_1_52b",
+}
+
+
+def get_config(name: str) -> ArchConfig:
+    mod_name = _ALIASES.get(name, name)
+    mod = importlib.import_module(f"repro.configs.{mod_name}")
+    return mod.ARCH
+
+
+def list_archs() -> list[str]:
+    return list(ARCH_IDS)

@@ -1,0 +1,15 @@
+"""deepseek-moe-16b [moe]: 28L d_model=2048 16H (kv=16) d_ff=1408(expert)
+vocab=102400, MoE 64 routed top-6 + 2 shared, fine-grained
+[arXiv:2401.06066; hf].  Layer 0 is a dense FFN (d_ff 10944) per the paper."""
+from repro.configs import ArchConfig
+from repro.models.transformer import LayerSpec
+
+ARCH = ArchConfig(
+    name="deepseek-moe-16b",
+    d_model=2048, n_heads=16, n_kv_heads=16, head_dim=128,
+    d_ff=10944, vocab=102400,
+    prelude=(LayerSpec("attn", "dense"),),
+    group=(LayerSpec("attn", "moe"),), n_groups=27,
+    moe_routed=64, moe_shared=2, moe_top_k=6, moe_d_ff=1408,
+    family="moe",
+)

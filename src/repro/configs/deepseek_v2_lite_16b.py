@@ -1,0 +1,20 @@
+"""deepseek-v2-lite-16b [moe]: 27L d_model=2048 16H d_ff=1408(expert)
+vocab=102400, MLA kv_lora=512, MoE 64 routed top-6 + 2 shared
+[arXiv:2405.04434; hf].
+
+Assignment-spec note (DESIGN §4): the line gives both "64e top-6" and
+"160 routed"; we follow the primary spec (64 routed).  Layer 0 dense
+(d_ff 10944) per the paper."""
+from repro.configs import ArchConfig
+from repro.models.transformer import LayerSpec
+
+ARCH = ArchConfig(
+    name="deepseek-v2-lite-16b",
+    d_model=2048, n_heads=16, n_kv_heads=16, head_dim=128,
+    d_ff=10944, vocab=102400,
+    prelude=(LayerSpec("mla", "dense"),),
+    group=(LayerSpec("mla", "moe"),), n_groups=26,
+    moe_routed=64, moe_shared=2, moe_top_k=6, moe_d_ff=1408,
+    kv_lora_rank=512, qk_rope_dim=64, v_head_dim=128,
+    family="moe",
+)

@@ -1,0 +1,20 @@
+"""gemma3-4b [dense]: 34L d_model=2560 8H (GQA kv=4) d_ff=10240
+vocab=262144 — 5:1 local(window 1024):global, 128k ctx
+[hf:google/gemma-3-4b-pt].
+
+Stacking: 5 groups of (5 local + 1 global) + 4 trailing local layers.
+long_500k is SKIPPED: the global layers are quadratic (DESIGN §4)."""
+from repro.configs import ArchConfig
+from repro.models.transformer import LayerSpec
+
+_LOCAL = LayerSpec("attn", "dense", window=1024)
+_GLOBAL = LayerSpec("attn", "dense")
+
+ARCH = ArchConfig(
+    name="gemma3-4b",
+    d_model=2560, n_heads=8, n_kv_heads=4, head_dim=256,
+    d_ff=10240, vocab=262144, embed_scale=True, rope_theta=1_000_000.0,
+    group=(_LOCAL, _LOCAL, _LOCAL, _LOCAL, _LOCAL, _GLOBAL), n_groups=5,
+    postlude=(_LOCAL, _LOCAL, _LOCAL, _LOCAL),
+    family="dense",
+)

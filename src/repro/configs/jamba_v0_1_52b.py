@@ -1,0 +1,30 @@
+"""jamba-v0.1-52b [hybrid]: 32L d_model=4096 32H (GQA kv=8) d_ff=14336
+vocab=65536, MoE 16e top-2, Mamba:attention 1:7 [arXiv:2403.19887].
+
+Stacking: 4 groups of 8 (attention at index 4 of each group, MoE on every
+other layer).  Sub-quadratic: Mamba state + KV cache only on 4 attention
+layers → runs long_500k."""
+from repro.configs import ArchConfig
+from repro.models.transformer import LayerSpec
+
+_G = (
+    LayerSpec("mamba", "dense"),
+    LayerSpec("mamba", "moe"),
+    LayerSpec("mamba", "dense"),
+    LayerSpec("mamba", "moe"),
+    LayerSpec("attn", "dense"),
+    LayerSpec("mamba", "moe"),
+    LayerSpec("mamba", "dense"),
+    LayerSpec("mamba", "moe"),
+)
+
+ARCH = ArchConfig(
+    name="jamba-v0.1-52b",
+    d_model=4096, n_heads=32, n_kv_heads=8, head_dim=128,
+    d_ff=14336, vocab=65536,
+    group=_G, n_groups=4,
+    moe_routed=16, moe_shared=0, moe_top_k=2, moe_d_ff=14336,
+    ssm_chunk=128,
+    ssm_scan_dtype="bfloat16",   # §Perf: halves SSM scan HBM traffic
+    sub_quadratic=True, family="hybrid",
+)

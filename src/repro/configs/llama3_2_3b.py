@@ -1,0 +1,12 @@
+"""llama3.2-3b [dense]: 28L d_model=3072 24H (GQA kv=8) d_ff=8192
+vocab=128256 [hf:meta-llama/Llama-3.2-3B]."""
+from repro.configs import ArchConfig
+from repro.models.transformer import LayerSpec
+
+ARCH = ArchConfig(
+    name="llama3.2-3b",
+    d_model=3072, n_heads=24, n_kv_heads=8, head_dim=128,
+    d_ff=8192, vocab=128256, rope_theta=500_000.0,
+    group=(LayerSpec("attn", "dense"),), n_groups=28,
+    family="dense",
+)

@@ -1,0 +1,13 @@
+"""mistral-nemo-12b [dense]: 40L d_model=5120 32H (GQA kv=8) d_ff=14336
+vocab=131072 — 128k ctx, head_dim 128 (≠ d_model/heads, per Nemo)
+[hf:mistralai/Mistral-Nemo-Base-2407]."""
+from repro.configs import ArchConfig
+from repro.models.transformer import LayerSpec
+
+ARCH = ArchConfig(
+    name="mistral-nemo-12b",
+    d_model=5120, n_heads=32, n_kv_heads=8, head_dim=128,
+    d_ff=14336, vocab=131072, rope_theta=1_000_000.0,
+    group=(LayerSpec("attn", "dense"),), n_groups=40,
+    family="dense",
+)

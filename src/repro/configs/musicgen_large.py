@@ -1,0 +1,15 @@
+"""musicgen-large [audio]: 48L d_model=2048 32H (MHA kv=32) d_ff=8192
+vocab=2048 — decoder-only over EnCodec tokens [arXiv:2306.05284; hf].
+
+Modality frontend (EnCodec encoder) is a STUB: input_specs feeds precomputed
+frame embeddings (B, S, d_model); the LM head predicts codebook tokens."""
+from repro.configs import ArchConfig
+from repro.models.transformer import LayerSpec
+
+ARCH = ArchConfig(
+    name="musicgen-large",
+    d_model=2048, n_heads=32, n_kv_heads=32, head_dim=64,
+    d_ff=8192, vocab=2048,
+    group=(LayerSpec("attn", "dense"),), n_groups=48,
+    modality="embed_in", family="audio",
+)

@@ -1,0 +1,16 @@
+"""phi-3-vision-4.2b [vlm]: 32L d_model=3072 32H (MHA kv=32) d_ff=8192
+vocab=32064 — phi3-mini backbone + CLIP frontend
+[hf:microsoft/Phi-3-vision-128k-instruct].
+
+The CLIP vision tower is a STUB: input_specs feeds precomputed patch
+embeddings merged into the token stream (B, S, d_model)."""
+from repro.configs import ArchConfig
+from repro.models.transformer import LayerSpec
+
+ARCH = ArchConfig(
+    name="phi-3-vision-4.2b",
+    d_model=3072, n_heads=32, n_kv_heads=32, head_dim=96,
+    d_ff=8192, vocab=32064,
+    group=(LayerSpec("attn", "dense"),), n_groups=32,
+    modality="embed_in", family="vlm",
+)

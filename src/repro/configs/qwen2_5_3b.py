@@ -1,0 +1,12 @@
+"""qwen2.5-3b [dense]: 36L d_model=2048 16H (GQA kv=2) d_ff=11008
+vocab=151936 — QKV bias [hf:Qwen/Qwen2.5-3B]."""
+from repro.configs import ArchConfig
+from repro.models.transformer import LayerSpec
+
+ARCH = ArchConfig(
+    name="qwen2.5-3b",
+    d_model=2048, n_heads=16, n_kv_heads=2, head_dim=128,
+    d_ff=11008, vocab=151936, qkv_bias=True, rope_theta=1_000_000.0,
+    group=(LayerSpec("attn", "dense"),), n_groups=36,
+    family="dense",
+)

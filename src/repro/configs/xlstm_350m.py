@@ -1,0 +1,18 @@
+"""xlstm-350m [ssm]: 24L d_model=1024 4H d_ff=0 vocab=50304 — alternating
+sLSTM + mLSTM blocks [arXiv:2405.04517].
+
+No FFN (the xLSTM blocks contain their own up/down projections).
+Sub-quadratic: runs long_500k (O(1)-state decode)."""
+from repro.configs import ArchConfig
+from repro.models.transformer import LayerSpec
+
+ARCH = ArchConfig(
+    name="xlstm-350m",
+    d_model=1024, n_heads=4, n_kv_heads=4, head_dim=256,
+    d_ff=0, vocab=50304,
+    group=(LayerSpec("slstm", "none"), LayerSpec("mlstm", "none")),
+    n_groups=12,
+    xlstm_proj_factor=2.0,
+    sub_quadratic=True, family="ssm",
+    sharding_profile="dp_tp",   # §Perf: 350M params — FSDP gathers cost more than replication
+)

@@ -1,0 +1,16 @@
+# The paper's primary contribution: the Lazy Fat Pandas engine in JAX —
+# lazy task-graph construction (graph, lazyframe), JIT static analysis
+# (tracer, source_analysis), DAG optimization (optimizer, liveness), lazy
+# sinks (sinks, func), metadata (metadata), and pluggable backends
+# (backends.eager / backends.streaming / backends.distributed).
+from .context import BackendEngines, get_context
+from .lazyframe import LazyFrame, Result, from_arrays, read_npz, read_source
+from .runtime import execute, flush
+from .source import InMemorySource, NpzDirectorySource, encode_strings, write_npz_source
+from .tracer import analyze
+
+__all__ = [
+    "BackendEngines", "get_context", "LazyFrame", "Result", "from_arrays",
+    "read_npz", "read_source", "execute", "flush", "InMemorySource",
+    "NpzDirectorySource", "encode_strings", "write_npz_source", "analyze",
+]

@@ -1,0 +1,54 @@
+"""Pluggable execution backends (paper §2.6).
+
+* eager       — whole-table, device-resident jnp (the Pandas analogue)
+* streaming   — partition-at-a-time host execution, bounded memory, out-of-
+                core (the Dask analogue)
+* distributed — shard_map over the mesh data axis (the Modin/cluster
+                analogue); unsupported ops fall back to eager, mirroring the
+                paper's convert-to-Pandas fallback.
+"""
+from __future__ import annotations
+
+from ..context import BackendEngines
+
+
+class MemoryBudgetExceeded(RuntimeError):
+    def __init__(self, needed: int, budget: int, where: str):
+        super().__init__(
+            f"memory budget exceeded at {where}: needs {needed/1e6:.1f} MB, "
+            f"budget {budget/1e6:.1f} MB")
+        self.needed = needed
+        self.budget = budget
+
+
+class MemoryMeter:
+    """Deterministic memory accounting for the streaming backend — lets the
+    benchmark reproduce the paper's OOM behaviour (Fig. 12) without actually
+    exhausting RAM."""
+
+    def __init__(self, budget: int | None):
+        self.budget = budget
+        self.current = 0
+        self.peak = 0
+
+    def alloc(self, nbytes: int, where: str = "?"):
+        self.current += int(nbytes)
+        self.peak = max(self.peak, self.current)
+        if self.budget is not None and self.current > self.budget:
+            raise MemoryBudgetExceeded(self.current, self.budget, where)
+
+    def free(self, nbytes: int):
+        self.current -= int(nbytes)
+
+
+def get_backend(kind: BackendEngines, **options):
+    if kind == BackendEngines.EAGER:
+        from .eager import EagerBackend
+        return EagerBackend(**options)
+    if kind == BackendEngines.STREAMING:
+        from .streaming import StreamingBackend
+        return StreamingBackend(**options)
+    if kind == BackendEngines.DISTRIBUTED:
+        from .distributed import DistributedBackend
+        return DistributedBackend(**options)
+    raise ValueError(kind)

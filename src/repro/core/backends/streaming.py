@@ -1,0 +1,317 @@
+"""Streaming backend: partition-at-a-time, out-of-core host execution (the
+Dask analogue), with deterministic memory accounting.
+
+The DAG is executed as pull-based partition streams.  Row-preserving ops map
+over partitions; pipeline breakers (group-by, reductions, sort, join build
+side, distinct) hold bounded combiner state — group-by uses partial
+aggregation + combine (``exec_common.partial_aggs``), so memory scales with
+the number of groups, not rows.  ``Head`` short-circuits the stream.
+
+Nodes with multiple consumers are materialized once and re-streamed (and
+accounted); persist-marked nodes go to the context cache (paper §3.5 — this
+is what produced the paper's 2.3× memory / 13× speed trade-off, reproduced
+in benchmarks/ablation_persist.py).
+"""
+from __future__ import annotations
+
+from typing import Any, Iterator
+
+import numpy as np
+
+from .. import exec_common as X
+from .. import graph as G
+from ..context import LaFPContext
+from . import MemoryMeter
+
+Table = dict
+
+_STREAM_ROWWISE = ("filter", "project", "assign", "rename", "astype",
+                   "fillna", "map_rows")
+
+
+def _part_stream_from_table(table: Table, chunk: int) -> Iterator[Table]:
+    rows = X.table_rows(table)
+    if rows == 0:
+        yield table
+        return
+    for lo in range(0, rows, chunk):
+        yield {k: v[lo:lo + chunk] for k, v in table.items()}
+
+
+class StreamingBackend:
+    name = "streaming"
+
+    def __init__(self, chunk_rows: int = 1 << 16):
+        self.chunk_rows = chunk_rows
+
+    # ------------------------------------------------------------------
+    def execute(self, roots: list[G.Node], ctx: LaFPContext) -> dict[int, Any]:
+        meter = MemoryMeter(ctx.memory_budget)
+        parents = G.parents_map(roots)
+        shared_ids = {nid for nid, ps in parents.items() if len(ps) > 1}
+        memo: dict[int, Any] = {}       # materialized tables for shared nodes
+        results: dict[int, Any] = {}
+        self._meter = meter
+        self._ctx = ctx
+        self._shared = shared_ids
+        self._memo = memo
+        self._value_memo: dict[int, Any] = {}
+        self._parents = parents
+        for r in roots:
+            results[r.id] = self._collect_value(r)
+        # accumulate across force points (reset() clears) so program-level
+        # peaks are visible to the benchmarks
+        ctx.last_peak_bytes = max(ctx.last_peak_bytes, meter.peak)
+        return results
+
+    # ------------------------------------------------------------------
+    def _cached(self, n: G.Node):
+        key = getattr(n, "cache_key", None) or n.key()
+        if not isinstance(n, G.SinkPrint) and key in self._ctx.persist_cache:
+            self._ctx.persist_stats["hits"] += 1
+            return self._ctx.persist_cache[key]
+        return None
+
+    def _maybe_persist(self, n: G.Node, table: Table):
+        if n.persist and not isinstance(n, (G.SinkPrint, G.Materialized)):
+            self._ctx.persist_stats["misses"] += 1
+            key = getattr(n, "cache_key", None) or n.key()
+            self._ctx.persist_cache[key] = table
+            self._meter.alloc(X.table_nbytes(table), f"persist:{n.op}#{n.id}")
+
+    def stream(self, n: G.Node) -> Iterator[Table]:
+        """Yield partitions of n's output. Caller must consume fully."""
+        cached = self._cached(n)
+        if cached is not None and isinstance(cached, dict):
+            yield from _part_stream_from_table(cached, self.chunk_rows)
+            return
+        if n.id in self._memo:
+            yield from _part_stream_from_table(self._memo[n.id], self.chunk_rows)
+            return
+        if n.id in self._shared or n.persist:
+            table = self._materialize(n)
+            yield from _part_stream_from_table(table, self.chunk_rows)
+            return
+        yield from self._stream_fresh(n)
+
+    def _stream_fresh(self, n: G.Node) -> Iterator[Table]:
+        meter = self._meter
+        if isinstance(n, G.Materialized):
+            yield from _part_stream_from_table(n.table, self.chunk_rows)
+            return
+        if isinstance(n, G.Scan):
+            yielded = False
+            for pi in range(n.source.n_partitions):
+                if pi in n.skip_partitions:
+                    continue
+                part = n.source.load_partition(pi, n.columns)
+                part = {k: np.asarray(v) for k, v in part.items()}
+                for c, dt in n.dtype_overrides.items():
+                    if c in part:
+                        part[c] = part[c].astype(dt)
+                nb = X.table_nbytes(part)
+                meter.alloc(nb, f"scan#{n.id}")
+                yielded = True
+                yield part
+                meter.free(nb)
+            if not yielded:
+                # all partitions zone-map-pruned: 0-row table, schema intact
+                cols = n.columns or n.source.schema.names
+                yield {c: np.zeros(0, n.source.schema.col(c).np_dtype)
+                       for c in cols}
+            return
+        if n.op in _STREAM_ROWWISE:
+            for part in self.stream(n.inputs[0]):
+                out = self._rowwise(n, part)
+                nb = X.table_nbytes(out)
+                meter.alloc(nb, f"{n.op}#{n.id}")
+                yield out
+                meter.free(nb)
+            return
+        if isinstance(n, G.Head):
+            got = 0
+            for part in self.stream(n.inputs[0]):
+                take = min(n.n - got, X.table_rows(part))
+                # always yield (0-row parts keep the schema downstream)
+                yield {k: v[:take] for k, v in part.items()}
+                got += take
+                if got >= n.n:
+                    break  # early exit: upstream generators are abandoned
+            return
+        if isinstance(n, G.Concat):
+            for child in n.inputs:
+                yield from self.stream(child)
+            return
+        if isinstance(n, G.Join):
+            build = self._materialize(n.inputs[1])     # build side held
+            nb = X.table_nbytes(build)
+            meter.alloc(nb, f"join_build#{n.id}")
+            for part in self.stream(n.inputs[0]):
+                out = X.apply_join(part, build, n.on, n.how, n.suffixes)
+                ob = X.table_nbytes(out)
+                meter.alloc(ob, f"join_probe#{n.id}")
+                yield out
+                meter.free(ob)
+            meter.free(nb)
+            return
+        if isinstance(n, G.DropDuplicates):
+            # incremental distinct: `seen` holds deduped rows so far; since
+            # apply_drop_duplicates keeps first occurrences in order, the new
+            # unique rows of each chunk are the tail beyond len(seen).
+            seen: Table | None = None
+            cols = list(n.subset) if n.subset else None
+            yielded = False
+            for part in self.stream(n.inputs[0]):
+                merged = part if seen is None else {
+                    k: np.concatenate([seen[k], part[k]]) for k in seen}
+                out_all = X.apply_drop_duplicates(merged, cols or list(merged))
+                prev_rows = X.table_rows(seen) if seen is not None else 0
+                if X.table_rows(out_all) > prev_rows:
+                    yielded = True
+                    yield {k: v[prev_rows:] for k, v in out_all.items()}
+                prev_bytes = X.table_nbytes(seen) if seen is not None else 0
+                seen = out_all
+                meter.alloc(max(0, X.table_nbytes(seen) - prev_bytes),
+                            f"distinct#{n.id}")
+            if not yielded and seen is not None:
+                yield {k: v[:0] for k, v in seen.items()}  # keep schema
+            return
+        # group-by / sort / reduce et al. produce single-partition output
+        value = self._collect_value(n)
+        if isinstance(value, dict):
+            yield from _part_stream_from_table(value, self.chunk_rows)
+        else:
+            raise RuntimeError(f"cannot stream scalar node {n.op}")
+
+    def _rowwise(self, n: G.Node, part: Table) -> Table:
+        if isinstance(n, G.Filter):
+            return X.apply_filter(part, n.predicate)
+        if isinstance(n, G.Project):
+            return X.apply_project(part, n.columns)
+        if isinstance(n, G.Assign):
+            return X.apply_assign(part, n.name, n.expr)
+        if isinstance(n, G.Rename):
+            return X.apply_rename(part, n.mapping)
+        if isinstance(n, G.AsType):
+            return X.apply_astype(part, n.dtypes)
+        if isinstance(n, G.FillNa):
+            return X.apply_fillna(part, n.value, n.columns)
+        if isinstance(n, G.MapRows):
+            return X.apply_map_rows(part, n.fn)
+        raise NotImplementedError(n.op)
+
+    def _materialize(self, n: G.Node) -> Table:
+        cached = self._cached(n)
+        if cached is not None and isinstance(cached, dict):
+            return cached
+        if n.id in self._memo:
+            return self._memo[n.id]
+        parts = list(self._stream_fresh(n))
+        table = (X.apply_concat(parts) if len(parts) > 1 else
+                 (parts[0] if parts else {}))
+        self._meter.alloc(X.table_nbytes(table), f"materialize:{n.op}#{n.id}")
+        if n.id in self._shared:
+            self._memo[n.id] = table
+        self._maybe_persist(n, table)
+        return table
+
+    # ------------------------------------------------------------------
+    def _collect_value(self, n: G.Node) -> Any:
+        meter = self._meter
+        if n.id in self._value_memo:
+            return self._value_memo[n.id]
+        out = self._collect_value_inner(n)
+        self._value_memo[n.id] = out
+        return out
+
+    def _collect_value_inner(self, n: G.Node) -> Any:
+        meter = self._meter
+        cached = self._cached(n)
+        if cached is not None:
+            return cached
+        if isinstance(n, G.SinkPrint):
+            # ordering edge (last input) forces the prior sink to print first
+            if len(n.inputs) > n.n_data:
+                self._collect_value(n.inputs[n.n_data])
+            vals = [self._collect_value(i) for i in n.inputs[: n.n_data]]
+            from ..sinks import render_sink
+            render_sink(n, vals, self._ctx)
+            return None
+        if isinstance(n, G.Length):
+            child = n.inputs[0]
+            # fast path: pure scan → metadata row counts, no IO
+            if isinstance(child, G.Scan):
+                total = 0
+                metas_ok = True
+                for pi in range(child.source.n_partitions):
+                    if pi in child.skip_partitions:
+                        continue
+                    m = child.source.partition_meta(pi)
+                    if "rows" not in m:
+                        metas_ok = False
+                        break
+                    total += m["rows"]
+                if metas_ok:
+                    return total
+            return sum(X.table_rows(p) for p in self.stream(child))
+        if isinstance(n, G.Reduce):
+            return self._reduce_streaming(n)
+        if isinstance(n, G.GroupByAgg):
+            partial_spec = X.partial_aggs(n.aggs)
+            partials = []
+            for part in self.stream(n.inputs[0]):
+                p = X.apply_groupby_agg(part, n.keys, partial_spec)
+                meter.alloc(X.table_nbytes(p), f"gb_partial#{n.id}")
+                partials.append(p)
+            if not partials:
+                return {k: np.zeros(0) for k in list(n.keys) + list(n.aggs)}
+            out = X.combine_partials(n.keys, partials, n.aggs)
+            for p in partials:
+                meter.free(X.table_nbytes(p))
+            self._maybe_persist(n, out)
+            return out
+        if isinstance(n, G.SortValues):
+            table = self._materialize_for_breaker(n.inputs[0], f"sort#{n.id}")
+            out = X.apply_sort(table, n.by, n.ascending)
+            self._maybe_persist(n, out)
+            return out
+        # generic: materialize the stream
+        table = self._materialize(n)
+        return table
+
+    def _materialize_for_breaker(self, child: G.Node, where: str) -> Table:
+        parts = list(self.stream(child))
+        table = X.apply_concat(parts) if len(parts) > 1 else (
+            parts[0] if parts else {})
+        self._meter.alloc(X.table_nbytes(table), where)
+        return table
+
+    def _reduce_streaming(self, n: G.Reduce):
+        fn = n.fn
+        if fn == "mean":
+            s, c = 0.0, 0
+            for part in self.stream(n.inputs[0]):
+                v = np.asarray(part[n.column], dtype=np.float64)
+                s += float(v.sum())
+                c += v.shape[0]
+            return s / max(c, 1)
+        if fn == "nunique":
+            uniq = None
+            for part in self.stream(n.inputs[0]):
+                u = np.unique(np.asarray(part[n.column]))
+                uniq = u if uniq is None else np.unique(np.concatenate([uniq, u]))
+                self._meter.alloc(0, f"nunique#{n.id}")
+            return int(uniq.shape[0]) if uniq is not None else 0
+        if fn == "count":
+            return sum(X.table_rows(p) for p in self.stream(n.inputs[0]))
+        acc = None
+        for part in self.stream(n.inputs[0]):
+            v = np.asarray(part[n.column])
+            if v.size == 0:
+                continue
+            x = {"sum": v.sum, "min": v.min, "max": v.max}[fn]()
+            if acc is None:
+                acc = x
+            else:
+                acc = {"sum": np.add, "min": np.minimum, "max": np.maximum}[fn](acc, x)
+        return acc

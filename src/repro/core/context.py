@@ -1,0 +1,57 @@
+"""Session context: backend choice, sink ordering chain, persist cache,
+static-analysis hints (the runtime side of the paper's JIT analysis)."""
+from __future__ import annotations
+
+import enum
+from typing import Any
+
+from . import graph
+
+
+class BackendEngines(enum.Enum):
+    EAGER = "eager"            # device-resident jnp, whole-table (Pandas analogue)
+    STREAMING = "streaming"    # host out-of-core, partition-at-a-time (Dask analogue)
+    DISTRIBUTED = "distributed"  # shard_map over mesh data axis (Modin/cluster analogue)
+
+
+class LaFPContext:
+    def __init__(self):
+        self.backend: BackendEngines = BackendEngines.EAGER
+        self.backend_options: dict[str, Any] = {}
+        # §3.3 lazy print: chain of sink nodes not yet flushed.
+        self.last_sink: graph.SinkPrint | None = None
+        self.pending_sinks: list[graph.SinkPrint] = []
+        # §3.5 common computation reuse: structural-key → materialized value.
+        self.persist_cache: dict[tuple, Any] = {}
+        self.persist_stats = {"hits": 0, "misses": 0}
+        # JIT static analysis results (source_analysis.py):
+        #   usecols:   {(var, lineno) | var: tuple(cols) | None}
+        #   live_at:   {lineno: [frame var names]}
+        self.analysis: dict[str, Any] = {}
+        # registry for f-string escapes (§3.3): uid -> node
+        self.scalar_registry: dict[int, graph.Node] = {}
+        # live frame tracking: var name -> LazyFrame (filled by analyze())
+        self.optimizer_trace: list[str] = []
+        self.memory_budget: int | None = None   # bytes; streaming backend enforces
+        self.last_peak_bytes: int = 0           # streaming backend peak accounting
+        self.print_fn = print                   # patched in tests
+        # metrics
+        self.exec_count = 0
+
+    def reset(self):
+        self.__init__()
+
+    def sink_chain_add(self, sink: graph.SinkPrint):
+        self.last_sink = sink
+        self.pending_sinks.append(sink)
+
+    def sinks_flushed(self):
+        self.pending_sinks.clear()
+        self.last_sink = None
+
+
+_CTX = LaFPContext()
+
+
+def get_context() -> LaFPContext:
+    return _CTX

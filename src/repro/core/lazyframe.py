@@ -1,0 +1,395 @@
+"""LazyFrame / LazyColumn / LazyScalar — the plain-Pandas-shaped lazy API
+(paper §2.5).  Every call builds a task-graph node; nothing executes until a
+force point (materialize / external call / flush)."""
+from __future__ import annotations
+
+from typing import Any, Mapping, Sequence
+
+import numpy as np
+
+from . import expr as E
+from . import graph as G
+from .context import get_context
+from .source import InMemorySource, Source
+
+
+def _to_expr(v) -> E.Expr:
+    if isinstance(v, LazyColumn):
+        return v.expr
+    if isinstance(v, E.Expr):
+        return v
+    return E.Lit(v)
+
+
+class DtAccessor:
+    def __init__(self, col: "LazyColumn"):
+        self._col = col
+
+    def __getattr__(self, field):
+        if field.startswith("_"):
+            raise AttributeError(field)
+        return LazyColumn(self._col.frame, E.DtField(self._col.expr, field))
+
+
+class LazyColumn:
+    """A column-valued expression over a frame (no new DAG node until used)."""
+
+    def __init__(self, frame: "LazyFrame", expr_: E.Expr):
+        self.frame = frame
+        self.expr = expr_
+
+    # arithmetic / comparison build Expr trees
+    def _bin(self, op, other, reflect=False):
+        l, r = self.expr, _to_expr(other)
+        if reflect:
+            l, r = r, l
+        return LazyColumn(self.frame, E.BinOp(op, l, r))
+
+    def __add__(self, o): return self._bin("add", o)
+    def __radd__(self, o): return self._bin("add", o, True)
+    def __sub__(self, o): return self._bin("sub", o)
+    def __rsub__(self, o): return self._bin("sub", o, True)
+    def __mul__(self, o): return self._bin("mul", o)
+    def __rmul__(self, o): return self._bin("mul", o, True)
+    def __truediv__(self, o): return self._bin("truediv", o)
+    def __rtruediv__(self, o): return self._bin("truediv", o, True)
+    def __floordiv__(self, o): return self._bin("floordiv", o)
+    def __mod__(self, o): return self._bin("mod", o)
+    def __eq__(self, o): return self._bin("eq", o)      # type: ignore[override]
+    def __ne__(self, o): return self._bin("ne", o)      # type: ignore[override]
+    def __lt__(self, o): return self._bin("lt", o)
+    def __le__(self, o): return self._bin("le", o)
+    def __gt__(self, o): return self._bin("gt", o)
+    def __ge__(self, o): return self._bin("ge", o)
+    def __and__(self, o): return self._bin("and", o)
+    def __or__(self, o): return self._bin("or", o)
+    def __invert__(self): return LazyColumn(self.frame, E.Not(self.expr))
+    def __hash__(self):
+        return id(self)
+
+    def isin(self, values):
+        return LazyColumn(self.frame, E.IsIn(self.expr, tuple(values)))
+
+    def astype(self, dtype):
+        return LazyColumn(self.frame, E.Cast(self.expr, str(np.dtype(dtype))))
+
+    def apply(self, fn):
+        return LazyColumn(self.frame, E.UDF(fn, (self.expr,)))
+
+    def fillna(self, value):
+        def _fill(a, v=value):
+            if getattr(a, "dtype", None) is not None and a.dtype.kind == "f":
+                import jax.numpy as jnp
+                xp = jnp if not isinstance(a, np.ndarray) else np
+                return xp.where(xp.isnan(a), xp.asarray(v, dtype=a.dtype), a)
+            return a
+        return LazyColumn(self.frame, E.UDF(_fill, (self.expr,), name="fillna"))
+
+    @property
+    def dt(self):
+        return DtAccessor(self)
+
+    @property
+    def str(self):
+        return StrAccessor(self)
+
+    # reductions → LazyScalar
+    def _reduce(self, fn):
+        node = self.frame._node_for_expr_column(self.expr)
+        name = node._col_name
+        return LazyScalar(G.Reduce(node._inner, name, fn))
+
+    def sum(self): return self._reduce("sum")
+    def mean(self): return self._reduce("mean")
+    def min(self): return self._reduce("min")
+    def max(self): return self._reduce("max")
+    def count(self): return self._reduce("count")
+    def nunique(self): return self._reduce("nunique")
+
+    def compute(self, live_df=None):
+        node = self.frame._node_for_expr_column(self.expr)
+        res = _execute([node._inner], live_df)[0]
+        return res[node._col_name]
+
+    def head(self, n=5):
+        node = self.frame._node_for_expr_column(self.expr)
+        return LazyFrame(G.Head(node._inner, n), source_vocab=self.frame._vocab)
+
+
+class StrAccessor:
+    """Dict-encoded string ops: equality/isin against vocab (TPU adaptation —
+    comparisons happen on int32 codes)."""
+
+    def __init__(self, col: LazyColumn):
+        self._col = col
+
+    def _codes_for(self, values):
+        vocab = self._col.frame._vocab_for(self._col.expr)
+        idx = {v: i for i, v in enumerate(vocab)}
+        return [idx[v] for v in values if v in idx]
+
+    def eq(self, value):
+        codes = self._codes_for([value])
+        if not codes:
+            return LazyColumn(self._col.frame,
+                              E.BinOp("lt", self._col.expr, E.Lit(0)))  # all-False
+        return LazyColumn(self._col.frame,
+                          E.BinOp("eq", self._col.expr, E.Lit(codes[0])))
+
+    def isin(self, values):
+        codes = self._codes_for(values)
+        if not codes:
+            return LazyColumn(self._col.frame,
+                              E.BinOp("lt", self._col.expr, E.Lit(0)))
+        return LazyColumn(self._col.frame, E.IsIn(self._col.expr, tuple(codes)))
+
+
+class _BoundNode:
+    def __init__(self, inner: G.Node, col_name: str):
+        self._inner = inner
+        self._col_name = col_name
+
+
+class LazyScalar:
+    """Lazy scalar (len(), .mean(), …).  Supports deferred f-string printing
+    via the escape-marker mechanism of paper §3.3."""
+
+    ESC = "\x00LAFP:"
+
+    def __init__(self, node: G.Node):
+        self.node = node
+        get_context().scalar_registry[node.id] = node
+
+    def compute(self, live_df=None):
+        return _execute([self.node], live_df)[0]
+
+    def __format__(self, spec):
+        return f"{self.ESC}{self.node.id}\x00"
+
+    def __str__(self):
+        return self.__format__("")
+
+    def __float__(self):
+        return float(self.compute())
+
+    def __int__(self):
+        return int(self.compute())
+
+
+class GroupBy:
+    def __init__(self, frame: "LazyFrame", keys: Sequence[str]):
+        self.frame = frame
+        self.keys = [keys] if isinstance(keys, str) else list(keys)
+
+    def __getitem__(self, col):
+        return GroupByColumn(self, col)
+
+    def agg(self, spec: Mapping[str, tuple[str, str]]):
+        node = G.GroupByAgg(self.frame._node, self.keys, dict(spec))
+        return LazyFrame(node, source_vocab=self.frame._vocab)
+
+    def size(self):
+        return self.agg({"size": (None, "count")})
+
+
+class GroupByColumn:
+    def __init__(self, gb: GroupBy, col: str):
+        self.gb = gb
+        self.col = col
+
+    def _agg(self, fn):
+        return self.gb.agg({self.col: (self.col, fn)})
+
+    def sum(self): return self._agg("sum")
+    def mean(self): return self._agg("mean")
+    def min(self): return self._agg("min")
+    def max(self): return self._agg("max")
+    def count(self): return self._agg("count")
+    def nunique(self): return self._agg("nunique")
+
+
+class LazyFrame:
+    """The Fat DataFrame.  Wraps a DAG node; assignment mutates the binding
+    (pandas semantics), each op adds a node (lazy semantics)."""
+
+    def __init__(self, node: G.Node, source_vocab: Mapping[str, list] | None = None):
+        self.__dict__["_node"] = node
+        self.__dict__["_vocab"] = dict(source_vocab or {})
+
+    # -- column access ------------------------------------------------------
+    def __getitem__(self, key):
+        if isinstance(key, str):
+            return LazyColumn(self, E.Col(key))
+        if isinstance(key, list):
+            return LazyFrame(G.Project(self._node, key), source_vocab=self._vocab)
+        if isinstance(key, LazyColumn):
+            return LazyFrame(G.Filter(self._node, key.expr), source_vocab=self._vocab)
+        raise TypeError(f"cannot index LazyFrame with {type(key)}")
+
+    def __getattr__(self, name):
+        if name.startswith("_"):
+            raise AttributeError(name)
+        return LazyColumn(self, E.Col(name))
+
+    def __setitem__(self, key: str, value):
+        self.__dict__["_node"] = G.Assign(self._node, key, _to_expr(value))
+
+    def __setattr__(self, key, value):
+        if key.startswith("_"):
+            self.__dict__[key] = value
+        else:
+            self[key] = value
+
+    # -- pandas-shaped ops ----------------------------------------------------
+    def assign(self, **kwargs):
+        node = self._node
+        for k, v in kwargs.items():
+            node = G.Assign(node, k, _to_expr(v))
+        return LazyFrame(node, source_vocab=self._vocab)
+
+    def rename(self, columns: Mapping[str, str]):
+        return LazyFrame(G.Rename(self._node, columns), source_vocab=self._vocab)
+
+    def astype(self, dtypes):
+        if isinstance(dtypes, str):
+            raise TypeError("astype requires {col: dtype}")
+        return LazyFrame(G.AsType(self._node, {k: str(np.dtype(v))
+                                               for k, v in dtypes.items()}),
+                         source_vocab=self._vocab)
+
+    def fillna(self, value):
+        return LazyFrame(G.FillNa(self._node, value), source_vocab=self._vocab)
+
+    def sort_values(self, by, ascending=True):
+        by = [by] if isinstance(by, str) else list(by)
+        return LazyFrame(G.SortValues(self._node, by, ascending),
+                         source_vocab=self._vocab)
+
+    def drop_duplicates(self, subset=None):
+        subset = tuple(subset) if subset is not None else None
+        return LazyFrame(G.DropDuplicates(self._node, subset),
+                         source_vocab=self._vocab)
+
+    def head(self, n=5):
+        return LazyFrame(G.Head(self._node, n), source_vocab=self._vocab)
+
+    def groupby(self, keys):
+        return GroupBy(self, keys)
+
+    def merge(self, other: "LazyFrame", on, how="inner", suffixes=("_x", "_y")):
+        on = [on] if isinstance(on, str) else list(on)
+        vocab = {**other._vocab, **self._vocab}
+        return LazyFrame(G.Join(self._node, other._node, on, how, suffixes),
+                         source_vocab=vocab)
+
+    def apply_rows(self, fn, name="udf"):
+        """Whole-frame UDF escape hatch (pushdown barrier)."""
+        return LazyFrame(G.MapRows(self._node, fn, name), source_vocab=self._vocab)
+
+    def describe(self):
+        # Paper §3.1 heuristic: describe/info/head don't make columns live;
+        # handled in the optimizer — here it's a plain reduce-per-column sink.
+        return LazyFrame(G.Head(self._node, 0), source_vocab=self._vocab)
+
+    # -- force points ---------------------------------------------------------
+    def compute(self, live_df=None):
+        """Force materialization (paper compute()).  ``live_df`` is the
+        §3.5 live-frame hint — normally injected by analyze()."""
+        return _execute([self._node], live_df)[0]
+
+    def materialize(self, live_df=None):
+        return self.compute(live_df)
+
+    def to_numpy_table(self, live_df=None):
+        res = self.compute(live_df)
+        return {k: np.asarray(v) for k, v in res.columns.items()}
+
+    def __len__(self):
+        return int(_execute([G.Length(self._node)], None)[0])
+
+    # -- helpers ---------------------------------------------------------------
+    def _node_for_expr_column(self, expr_: E.Expr) -> _BoundNode:
+        """Bind an expression to a concrete (node, column-name) pair, adding
+        an Assign for composed expressions."""
+        if isinstance(expr_, E.Col):
+            return _BoundNode(self._node, expr_.name)
+        name = f"__expr_{abs(hash(expr_.key())) % (1 << 30)}"
+        return _BoundNode(G.Assign(self._node, name, expr_), name)
+
+    def _vocab_for(self, expr_: E.Expr) -> list:
+        if isinstance(expr_, E.Col) and expr_.name in self._vocab:
+            return self._vocab[expr_.name]
+        raise KeyError("no vocab for expression (str ops need a dict-encoded "
+                       f"source column): {expr_}")
+
+    def __repr__(self):
+        return f"LazyFrame({self._node!r})"
+
+
+class Result:
+    """Materialized frame: dict of arrays + vocab decoding for display."""
+
+    def __init__(self, columns: Mapping[str, Any], vocab=None):
+        self.columns = dict(columns)
+        self.vocab = dict(vocab or {})
+
+    def rows(self) -> int:
+        for v in self.columns.values():
+            return int(v.shape[0])
+        return 0
+
+    def __getitem__(self, k):
+        return self.columns[k]
+
+    def decode(self, col: str):
+        codes = np.asarray(self.columns[col])
+        vocab = self.vocab[col]
+        return np.asarray([vocab[c] for c in codes], dtype=object)
+
+    def __repr__(self):
+        n = self.rows()
+        cols = ", ".join(f"{k}:{getattr(v, 'dtype', '?')}"
+                         for k, v in self.columns.items())
+        lines = [f"<Result {n} rows [{cols}]>"]
+        show = min(n, 10)
+        names = list(self.columns)
+        lines.append(" | ".join(f"{x:>12}" for x in names))
+        for i in range(show):
+            vals = []
+            for c in names:
+                v = self.columns[c][i]
+                if c in self.vocab:
+                    v = self.vocab[c][int(v)]
+                vals.append(f"{v!s:>12.12}")
+            lines.append(" | ".join(vals))
+        if n > show:
+            lines.append(f"... ({n - show} more rows)")
+        return "\n".join(lines)
+
+
+# ---------------------------------------------------------------------------
+# Constructors ("pd." namespace functions)
+
+
+def read_source(source: Source) -> LazyFrame:
+    return LazyFrame(G.Scan(source), source_vocab=source.dicts)
+
+
+def from_arrays(arrays: Mapping[str, np.ndarray], partition_rows: int = 1 << 16,
+                dicts=None, datetimes=(), name="mem") -> LazyFrame:
+    src = InMemorySource(arrays, partition_rows, dicts, datetimes, name)
+    return read_source(src)
+
+
+def read_npz(path: str) -> LazyFrame:
+    from .source import NpzDirectorySource
+    return read_source(NpzDirectorySource(path))
+
+
+# ---------------------------------------------------------------------------
+# Execution entry (shared by frames/scalars/sinks)
+
+
+def _execute(roots: list[G.Node], live_df=None) -> list[Any]:
+    from .runtime import execute  # late import: runtime pulls optimizer+backends
+    return execute(roots, live_df)

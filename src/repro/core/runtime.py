@@ -1,0 +1,110 @@
+"""Execution orchestration: optimize → plan persists → dispatch to backend →
+flush sinks in order (paper §2.6).
+"""
+from __future__ import annotations
+
+from typing import Any
+
+from . import graph as G
+from .context import get_context
+from .liveness import apply_persist_marks, evict_dead_entries, plan_persists
+from .optimizer import optimize
+
+
+def _live_nodes_from(live_df) -> list[G.Node]:
+    if not live_df:
+        return []
+    nodes = []
+    for f in live_df:
+        node = getattr(f, "_node", None)
+        nodes.append(node if node is not None else f)
+    return nodes
+
+
+def execute(roots: list[G.Node], live_df=None) -> list[Any]:
+    """Force computation of ``roots``.  Any pending lazy sinks are chained in
+    front (paper §3.4: forced computation processes pending prints first, in
+    order).  Returns materialized values for ``roots``."""
+    ctx = get_context()
+    ctx.exec_count += 1
+    live_nodes = _live_nodes_from(live_df)
+
+    all_roots = list(roots)
+    sink_roots: list[G.Node] = []
+    if ctx.last_sink is not None:
+        sink_roots = [ctx.last_sink]
+        all_roots = sink_roots + all_roots
+
+    # §3.5 reuse: substitute cached subexpressions BEFORE optimization so
+    # physical rewrites (column narrowing, dead-assign elimination) can't
+    # change the lookup key.
+    if ctx.persist_cache:
+        from .optimizer import _rebuild
+        replace = {}
+        for n in G.walk(all_roots):
+            if isinstance(n, G.Materialized) or isinstance(n, G.SinkPrint):
+                continue
+            hit = ctx.persist_cache.get(n.key())
+            if hit is not None and isinstance(hit, dict):
+                ctx.persist_stats["hits"] += 1
+                replace[n.id] = G.Materialized(hit, n.key())
+        if replace:
+            all_roots, sub_map = _rebuild(all_roots, replace)
+            live_nodes = [sub_map.get(n.id, n) for n in live_nodes]
+            roots = [sub_map.get(n.id, n) for n in roots]
+            if sink_roots:
+                sink_roots = [all_roots[0]]
+
+    persist_ids = plan_persists(all_roots, live_nodes)
+    apply_persist_marks(all_roots, persist_ids)
+    logical_keys = {n.id: n.key() for n in G.walk(all_roots)}
+
+    opt_roots, idmap = optimize(all_roots, ctx)
+    # re-mark persists on the rewritten nodes; store under the LOGICAL key
+    for old_id in persist_ids:
+        if old_id in idmap:
+            idmap[old_id].persist = True
+            idmap[old_id].cache_key = logical_keys[old_id]
+
+    backend = _get_backend(ctx)
+    results = backend.execute(opt_roots, ctx)
+
+    if sink_roots:
+        ctx.sinks_flushed()
+    # eviction compares LOGICAL keys — use the pre-optimization live nodes
+    evict_dead_entries(ctx, live_nodes)
+
+    out = []
+    for r in roots:
+        rn = idmap.get(r.id, r)
+        out.append(_wrap(rn, results[rn.id]))
+    return out
+
+
+def flush():
+    """Execute all pending lazy sinks (pd.flush(), paper §3.3)."""
+    ctx = get_context()
+    if ctx.last_sink is None:
+        return
+    execute([], None)
+
+
+def _wrap(node: G.Node, value):
+    from .lazyframe import Result
+    if isinstance(node, (G.Reduce, G.Length, G.SinkPrint)):
+        return value
+    vocab = _collect_vocab(node)
+    return Result(value, vocab)
+
+
+def _collect_vocab(node: G.Node):
+    vocab = {}
+    for n in G.walk([node]):
+        if isinstance(n, G.Scan):
+            vocab.update(n.source.dicts)
+    return vocab
+
+
+def _get_backend(ctx):
+    from .backends import get_backend
+    return get_backend(ctx.backend, **ctx.backend_options)

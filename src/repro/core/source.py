@@ -1,0 +1,182 @@
+"""Partitioned columnar sources.
+
+A Source is the leaf of the task graph: an ordered list of partitions, each a
+dict of 1-D column arrays.  Partition-major order is the engine's row order
+(this replaces Dask's "no row order" caveat from the paper — our streaming
+and distributed backends preserve partition-major order, see DESIGN §2).
+
+Per-partition zone maps (min/max/rows) back the metadata store (§3.6) and
+beyond-paper partition pruning.
+"""
+from __future__ import annotations
+
+import json
+import os
+from typing import Mapping, Sequence
+
+import numpy as np
+
+from .schema import TableSchema, infer_schema, narrow_int_dtype
+
+
+class Source:
+    """Protocol: subclasses provide schema, dicts, n_partitions,
+    load_partition, partition_meta."""
+
+    schema: TableSchema
+    dicts: dict[str, list]          # vocab per dict-encoded column
+    name: str = "source"
+
+    @property
+    def n_partitions(self) -> int:
+        raise NotImplementedError
+
+    def load_partition(self, i: int, columns: Sequence[str] | None = None
+                       ) -> dict[str, np.ndarray]:
+        raise NotImplementedError
+
+    def partition_meta(self, i: int) -> dict:
+        """{'rows': int, 'zonemap': {col: (min, max)}} — may be {} if stats
+        were never computed."""
+        return {}
+
+    def total_rows(self) -> int | None:
+        metas = [self.partition_meta(i) for i in range(self.n_partitions)]
+        if any("rows" not in m for m in metas):
+            return None
+        return sum(m["rows"] for m in metas)
+
+
+def _zonemap(arrays: Mapping[str, np.ndarray]) -> dict:
+    zm = {}
+    for name, arr in arrays.items():
+        if arr.dtype.kind in "ifu" and arr.size:
+            zm[name] = (arr.min().item(), arr.max().item())
+    return zm
+
+
+class InMemorySource(Source):
+    """Arrays held in memory, split into fixed-size partitions."""
+
+    def __init__(self, arrays: Mapping[str, np.ndarray],
+                 partition_rows: int = 1 << 16,
+                 dicts: Mapping[str, Sequence] | None = None,
+                 datetimes: Sequence[str] = (),
+                 name: str = "mem"):
+        lengths = {len(a) for a in arrays.values()}
+        if len(lengths) != 1:
+            raise ValueError("ragged columns")
+        self._arrays = {k: np.asarray(v) for k, v in arrays.items()}
+        self._rows = lengths.pop()
+        self._part_rows = partition_rows
+        self.dicts = {k: list(v) for k, v in (dicts or {}).items()}
+        self.schema = infer_schema(self._arrays, self.dicts, datetimes)
+        self.name = name
+        self._metas = None
+
+    @property
+    def n_partitions(self):
+        return max(1, -(-self._rows // self._part_rows))
+
+    def _bounds(self, i):
+        lo = i * self._part_rows
+        return lo, min(lo + self._part_rows, self._rows)
+
+    def load_partition(self, i, columns=None):
+        lo, hi = self._bounds(i)
+        names = columns if columns is not None else list(self._arrays)
+        return {n: self._arrays[n][lo:hi] for n in names}
+
+    def partition_meta(self, i):
+        if self._metas is None:
+            self._metas = {}
+        if i not in self._metas:
+            lo, hi = self._bounds(i)
+            part = {n: a[lo:hi] for n, a in self._arrays.items()}
+            self._metas[i] = {"rows": hi - lo, "zonemap": _zonemap(part)}
+        return self._metas[i]
+
+
+class NpzDirectorySource(Source):
+    """Out-of-core source: directory of part-NNNNN.npz files + _meta.json.
+
+    This is the engine's "larger than memory" substrate — partitions are
+    loaded one at a time by the streaming backend.  ``write_npz_source``
+    builds one (and its metadata, incl. zone maps) from arrays or a
+    generator.
+    """
+
+    def __init__(self, path: str):
+        self.path = path
+        with open(os.path.join(path, "_meta.json")) as f:
+            meta = json.load(f)
+        self._parts = meta["partitions"]          # list of {file, rows, zonemap}
+        self.dicts = meta.get("dicts", {})
+        cols = meta["columns"]                    # {name: {dtype, is_dict, is_datetime}}
+        from .schema import ColumnSchema
+        self.schema = TableSchema(tuple(
+            ColumnSchema(n, c["dtype"], is_dict=c.get("is_dict", False),
+                         dict_size=len(self.dicts.get(n, [])) or None,
+                         is_datetime=c.get("is_datetime", False))
+            for n, c in cols.items()))
+        self.name = os.path.basename(path.rstrip("/"))
+
+    @property
+    def n_partitions(self):
+        return len(self._parts)
+
+    def load_partition(self, i, columns=None):
+        with np.load(os.path.join(self.path, self._parts[i]["file"])) as z:
+            names = columns if columns is not None else list(z.files)
+            return {n: z[n] for n in names}
+
+    def partition_meta(self, i):
+        p = self._parts[i]
+        return {"rows": p["rows"],
+                "zonemap": {k: tuple(v) for k, v in p.get("zonemap", {}).items()}}
+
+
+def write_npz_source(path: str, arrays: Mapping[str, np.ndarray],
+                     partition_rows: int = 1 << 18,
+                     dicts: Mapping[str, Sequence] | None = None,
+                     datetimes: Sequence[str] = ()) -> NpzDirectorySource:
+    os.makedirs(path, exist_ok=True)
+    arrays = {k: np.asarray(v) for k, v in arrays.items()}
+    dicts = {k: list(v) for k, v in (dicts or {}).items()}
+    rows = len(next(iter(arrays.values())))
+    parts = []
+    for pi, lo in enumerate(range(0, rows, partition_rows)):
+        hi = min(lo + partition_rows, rows)
+        part = {k: a[lo:hi] for k, a in arrays.items()}
+        fname = f"part-{pi:05d}.npz"
+        np.savez(os.path.join(path, fname), **part)
+        parts.append({"file": fname, "rows": hi - lo, "zonemap": _zonemap(part)})
+    cols = {}
+    for name, arr in arrays.items():
+        cols[name] = {"dtype": str(arr.dtype), "is_dict": name in dicts,
+                      "is_datetime": name in datetimes}
+    meta = {"partitions": parts, "columns": cols, "dicts": dicts}
+    with open(os.path.join(path, "_meta.json"), "w") as f:
+        json.dump(meta, f)
+    return NpzDirectorySource(path)
+
+
+def encode_strings(values: Sequence[str]) -> tuple[np.ndarray, list]:
+    """Dictionary-encode a string column (paper §3.6 category optimization)."""
+    vocab, codes = np.unique(np.asarray(values, dtype=object), return_inverse=True)
+    return codes.astype(np.int32), [str(v) for v in vocab]
+
+
+def narrow_arrays(arrays: Mapping[str, np.ndarray],
+                  float32: bool = True) -> dict[str, np.ndarray]:
+    """Metadata-driven dtype narrowing (paper §3.6): ints to the smallest
+    width that fits; float64→float32 when allowed."""
+    out = {}
+    for name, arr in arrays.items():
+        if arr.dtype.kind == "i" and arr.size:
+            out[name] = arr.astype(narrow_int_dtype(int(arr.min()), int(arr.max())))
+        elif arr.dtype == np.float64 and float32:
+            out[name] = arr.astype(np.float32)
+        else:
+            out[name] = arr
+    return out

@@ -1,0 +1,112 @@
+"""`analyze()` — Just-in-Time static analysis entry point (paper §2.4).
+
+Two forms, both using reflection to find the program source (paper Fig. 5):
+
+* ``pd.analyze()`` as the first statement of a script — inspects the calling
+  module's source, runs the `ast` analyses, and installs the results in the
+  context.  Because our API is already lazy, no textual rewrite is needed:
+  the "rewritten program" is the original program executing against hints
+  (usecols at read sites, live_df at force sites) looked up by call-site
+  line number — semantically identical to the paper's injected arguments.
+
+* ``@analyze`` on a function — analyzes the function body and installs hints
+  before invoking it.
+"""
+from __future__ import annotations
+
+import functools
+import inspect
+import sys
+import time
+
+from .context import get_context
+from .source_analysis import analyze_source
+
+_CORE_PREFIX = __name__.rsplit(".", 1)[0]  # 'repro.core'
+
+
+def analyze(fn=None):
+    ctx = get_context()
+    if fn is None:
+        # script mode: reflect on the caller
+        frame = sys._getframe(1)
+        # skip the lazy-namespace shim if called via repro.core.lazy.analyze
+        while frame and frame.f_globals.get("__name__", "").startswith(_CORE_PREFIX):
+            frame = frame.f_back
+        try:
+            source = inspect.getsource(sys.modules[frame.f_globals["__name__"]])
+        except Exception:
+            try:
+                with open(frame.f_code.co_filename) as f:
+                    source = f.read()
+            except Exception:
+                ctx.analysis = {}
+                return None
+        t0 = time.perf_counter()
+        res = analyze_source(source)
+        ctx.analysis = res.as_context_dict()
+        ctx.analysis["jit_seconds"] = time.perf_counter() - t0
+        return res
+
+    @functools.wraps(fn)
+    def wrapped(*args, **kwargs):
+        t0 = time.perf_counter()
+        try:
+            source = inspect.getsource(fn)
+            res = analyze_source(source)
+            ctx.analysis = res.as_context_dict()
+        except (OSError, TypeError):
+            ctx.analysis = {}
+        ctx.analysis["jit_seconds"] = time.perf_counter() - t0
+        return fn(*args, **kwargs)
+
+    return wrapped
+
+
+def user_call_lineno() -> int | None:
+    """Line number of the nearest stack frame outside repro.core — the
+    call-site key for static-analysis hints."""
+    frame = sys._getframe(1)
+    while frame is not None:
+        mod = frame.f_globals.get("__name__", "")
+        if not mod.startswith(_CORE_PREFIX):
+            return frame.f_lineno
+        frame = frame.f_back
+    return None
+
+
+def user_frame_locals() -> dict:
+    frame = sys._getframe(1)
+    while frame is not None:
+        mod = frame.f_globals.get("__name__", "")
+        if not mod.startswith(_CORE_PREFIX):
+            return frame.f_locals
+        frame = frame.f_back
+    return {}
+
+
+def usecols_hint() -> list[str] | None:
+    """usecols for the read_* call currently executing, if analysis has one."""
+    ctx = get_context()
+    usecols = ctx.analysis.get("usecols") if ctx.analysis else None
+    if not usecols:
+        return None
+    lineno = user_call_lineno()
+    return usecols.get(lineno) if lineno is not None else None
+
+
+def live_frames_hint() -> list | None:
+    """live_df for the force point currently executing (paper §3.5)."""
+    from .lazyframe import LazyFrame
+    ctx = get_context()
+    live_at = ctx.analysis.get("live_at") if ctx.analysis else None
+    if not live_at:
+        return None
+    lineno = user_call_lineno()
+    if lineno is None or lineno not in live_at:
+        return None
+    names = live_at[lineno]
+    local = user_frame_locals()
+    frames = [local[n] for n in names
+              if isinstance(local.get(n), LazyFrame)]
+    return frames or None

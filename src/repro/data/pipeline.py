@@ -1,0 +1,161 @@
+"""Training input pipeline built ON the LaFP engine — this is where the
+paper's technique integrates into the trainer (DESIGN §3).
+
+Token shards are a partitioned columnar source (columns: tokens, doc_len,
+quality, domain, …).  Filtering / column selection / batching are LazyFrame
+ops, so the full LaFP optimizer applies:
+
+* column selection drops unused metadata columns at the read (usecols),
+* predicate pushdown + zone-map pruning skip shards that can't contain
+  surviving rows (e.g. quality or length filters),
+* the streaming backend bounds host memory for larger-than-RAM corpora,
+* lazy sinks batch metrics/logging host transfers like lazy print.
+
+The pipeline yields fixed-shape (B, S) token/label batches; a bounded
+prefetch thread overlaps host prep with device steps, and the cursor state
+(shard index, rng) is checkpointable (fault tolerance — a restarted host
+resumes mid-epoch deterministically).
+"""
+from __future__ import annotations
+
+import dataclasses
+import queue
+import threading
+from typing import Iterator
+
+import numpy as np
+
+from ..core import BackendEngines, get_context
+from ..core.lazyframe import LazyFrame, read_source
+from ..core.source import InMemorySource, Source, write_npz_source
+
+
+@dataclasses.dataclass
+class PipelineConfig:
+    batch: int
+    seq: int
+    min_doc_len: int = 1
+    min_quality: float = -1e9
+    shuffle: bool = True
+    seed: int = 0
+    prefetch: int = 2
+    backend: BackendEngines = BackendEngines.STREAMING
+    drop_remainder: bool = True
+
+
+@dataclasses.dataclass
+class PipelineState:
+    """Checkpointable cursor."""
+    epoch: int = 0
+    batch_index: int = 0
+    rng_state: int = 0
+
+    def to_dict(self):
+        return dataclasses.asdict(self)
+
+    @classmethod
+    def from_dict(cls, d):
+        return cls(**d)
+
+
+def synthetic_token_source(n_docs: int, seq: int, vocab: int, seed: int = 0,
+                           partition_rows: int = 1024,
+                           path: str | None = None) -> Source:
+    """Synthetic corpus: packed token rows + metadata columns the filters
+    exercise (doc_len, quality, domain)."""
+    rng = np.random.default_rng(seed)
+    tokens = rng.integers(0, vocab, (n_docs, seq), dtype=np.int32)
+    arrays = {
+        **{f"tok_{i}": tokens[:, i] for i in range(seq)},
+        "doc_len": rng.integers(1, seq + 1, n_docs).astype(np.int32),
+        "quality": rng.uniform(0, 1, n_docs).astype(np.float32),
+        "domain": rng.integers(0, 8, n_docs).astype(np.int32),
+    }
+    if path is not None:
+        return write_npz_source(path, arrays, partition_rows)
+    return InMemorySource(arrays, partition_rows, name="synthetic")
+
+
+class TokenPipeline:
+    """LazyFrame-backed batch iterator."""
+
+    def __init__(self, source: Source, cfg: PipelineConfig, seq: int | None = None):
+        self.source = source
+        self.cfg = cfg
+        self.seq = seq or cfg.seq
+        self.state = PipelineState(rng_state=cfg.seed)
+        self._tok_cols = [c for c in source.schema.names
+                          if c.startswith("tok_")][: self.seq]
+
+    def _frame(self) -> LazyFrame:
+        df = read_source(self.source)
+        if self.cfg.min_doc_len > 1:
+            df = df[df["doc_len"] >= self.cfg.min_doc_len]
+        if self.cfg.min_quality > -1e9:
+            df = df[df["quality"] >= self.cfg.min_quality]
+        # column selection: only token columns survive to the device
+        return df[self._tok_cols]
+
+    def _materialize_epoch(self) -> np.ndarray:
+        ctx = get_context()
+        prev = ctx.backend
+        ctx.backend = self.cfg.backend
+        try:
+            res = self._frame().compute()
+        finally:
+            ctx.backend = prev
+        # LaFP dtype narrowing may have narrowed token columns to int8/16;
+        # device batches are always int32 (embedding gather index type).
+        mat = np.stack([np.asarray(res[c]) for c in self._tok_cols],
+                       axis=1).astype(np.int32)
+        return mat  # (rows, seq)
+
+    def __iter__(self) -> Iterator[dict]:
+        B = self.cfg.batch
+        while True:
+            mat = self._materialize_epoch()
+            n = mat.shape[0]
+            order = np.arange(n)
+            if self.cfg.shuffle:
+                rng = np.random.default_rng(self.cfg.seed + self.state.epoch)
+                rng.shuffle(order)
+            nb = n // B if self.cfg.drop_remainder else -(-n // B)
+            start = self.state.batch_index
+            for bi in range(start, nb):
+                rows = order[bi * B:(bi + 1) * B]
+                toks = mat[rows]
+                labels = np.concatenate(
+                    [toks[:, 1:], np.full((toks.shape[0], 1), -100,
+                                          np.int32)], axis=1)
+                self.state.batch_index = bi + 1
+                yield {"tokens": toks, "labels": labels}
+            self.state.epoch += 1
+            self.state.batch_index = 0
+
+
+class PrefetchIterator:
+    """Bounded background prefetch: a slow host degrades prefetch depth
+    instead of stalling the device step (straggler mitigation)."""
+
+    def __init__(self, it: Iterator, depth: int = 2):
+        self._it = it
+        self._q: queue.Queue = queue.Queue(maxsize=depth)
+        self._done = object()
+        self._thread = threading.Thread(target=self._fill, daemon=True)
+        self._thread.start()
+
+    def _fill(self):
+        try:
+            for item in self._it:
+                self._q.put(item)
+        finally:
+            self._q.put(self._done)
+
+    def __iter__(self):
+        return self
+
+    def __next__(self):
+        item = self._q.get()
+        if item is self._done:
+            raise StopIteration
+        return item

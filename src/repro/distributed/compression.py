@@ -1,0 +1,85 @@
+"""Gradient compression for the slow (DCN / pod) axis: int8 block
+quantization with error feedback.
+
+At 1000+-node scale the cross-pod gradient all-reduce is DCN-bound (~25
+GB/s/host vs 50 GB/s/link ICI); int8 quantization cuts those bytes 4× at the
+cost of quantization noise, which error feedback (residual carry) removes in
+expectation.  Used by train_step when ``compress_pod_grads=True``.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+BLOCK = 256
+
+
+def quantize_int8(x: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """Blockwise symmetric int8 quantization → (q int8, scales f32)."""
+    flat = x.reshape(-1)
+    n = flat.shape[0]
+    pad = (-n) % BLOCK
+    flat = jnp.concatenate([flat, jnp.zeros((pad,), flat.dtype)]) if pad else flat
+    blocks = flat.reshape(-1, BLOCK).astype(jnp.float32)
+    scale = jnp.max(jnp.abs(blocks), axis=1, keepdims=True) / 127.0
+    scale = jnp.maximum(scale, 1e-12)
+    q = jnp.clip(jnp.round(blocks / scale), -127, 127).astype(jnp.int8)
+    return q, scale[:, 0]
+
+
+def dequantize_int8(q: jax.Array, scale: jax.Array, shape, dtype=jnp.float32
+                    ) -> jax.Array:
+    blocks = q.astype(jnp.float32) * scale[:, None]
+    flat = blocks.reshape(-1)
+    n = 1
+    for d in shape:
+        n *= d
+    return flat[:n].reshape(shape).astype(dtype)
+
+
+def compressed_psum(x: jax.Array, axis_name: str,
+                    residual: jax.Array | None = None
+                    ) -> tuple[jax.Array, jax.Array]:
+    """All-reduce with int8 on the wire + error feedback (shard_map form).
+
+    Per-shard blockwise scales cannot be summed remotely, so the exchange is
+    an all-gather of (int8 payload, f32 block scales) followed by a local
+    dequantize-and-sum — 8·N + 32·N/BLOCK wire bits vs 32·N for a float
+    all-reduce (≈3.9× fewer bytes).  Error feedback carries the quantization
+    residual into the next step."""
+    if residual is not None:
+        x = x + residual.astype(x.dtype)
+    q, scale = quantize_int8(x)
+    deq_local = dequantize_int8(q, scale, x.shape, jnp.float32)
+    new_residual = x.astype(jnp.float32) - deq_local     # error feedback
+    q_all = jax.lax.all_gather(q, axis_name)             # (P, nblk, BLOCK) int8
+    s_all = jax.lax.all_gather(scale, axis_name)         # (P, nblk)
+    deq_all = q_all.astype(jnp.float32) * s_all[..., None]
+    flat = jnp.sum(deq_all, axis=0).reshape(-1)
+    n = 1
+    for d in x.shape:
+        n *= d
+    summed = flat[:n].reshape(x.shape)
+    return summed.astype(x.dtype), new_residual
+
+
+def compress_tree(grads, residuals):
+    """Elementwise error-feedback quantize/dequantize of a gradient pytree —
+    models the wire format; the actual psum happens in the caller's pjit
+    (GSPMD inserts the cross-pod all-reduce on the dequantized values).
+
+    Returns (quantized-dequantized grads, new residuals)."""
+    def one(g, r):
+        x = g.astype(jnp.float32) + (r if r is not None else 0.0)
+        q, scale = quantize_int8(x)
+        deq = dequantize_int8(q, scale, x.shape, jnp.float32)
+        return deq.astype(g.dtype), x - deq
+    if residuals is None:
+        residuals = jax.tree.map(lambda g: jnp.zeros_like(g, jnp.float32),
+                                 grads)
+    pairs = jax.tree.map(one, grads, residuals)
+    new_g = jax.tree.map(lambda p: p[0], pairs,
+                         is_leaf=lambda x: isinstance(x, tuple))
+    new_r = jax.tree.map(lambda p: p[1], pairs,
+                         is_leaf=lambda x: isinstance(x, tuple))
+    return new_g, new_r

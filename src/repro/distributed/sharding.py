@@ -1,0 +1,178 @@
+"""Logical-axis → mesh-axis sharding rules (FSDP × TP × EP × SP).
+
+Every model weight carries logical axes (models/layers.py); these rules bind
+them to the physical mesh:
+
+* TP over ``model``: vocab, attention heads, FFN hidden, experts
+* FSDP over ``data``: the d_model ("embed") dim of every weight
+* ``pod`` (multi-pod): pure DP — parameters replicated across pods, so the
+  only DCN-crossing collective is the gradient all-reduce
+* KV/state caches: batch over ``data`` when divisible, and the largest
+  model-divisible dim (sequence for KV caches → sequence parallelism at
+  decode; d_inner for SSM states) over ``model``.
+
+Divisibility fallback: a dim that does not divide its mesh axis is
+replicated instead (e.g. kv_heads=2 with model=16 — the kv projections are
+tiny, replication is the standard GQA-TP practice).
+"""
+from __future__ import annotations
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+DEFAULT_RULES: dict[str | None, str | None] = {
+    "vocab": "model",
+    "embed": "data",
+    "embed2": "model",
+    "heads": "model",
+    "mlp": "model",
+    "expert": "model",
+    "layers": None,
+    None: None,
+}
+
+
+def _axis_size(mesh: Mesh, axis: str | None) -> int:
+    if axis is None:
+        return 1
+    return mesh.shape[axis]
+
+
+def spec_for(shape: tuple, axes: tuple, mesh: Mesh,
+             rules: dict | None = None) -> P:
+    rules = rules or DEFAULT_RULES
+    out = []
+    for dim, ax in zip(shape, axes):
+        phys = rules.get(ax)
+        if phys is not None and dim % _axis_size(mesh, phys) != 0:
+            phys = None                       # divisibility fallback
+        out.append(phys)
+    return P(*out)
+
+
+def param_shardings(spec, mesh: Mesh, rules: dict | None = None):
+    """ParamSpec → pytree (nested dict) of NamedSharding."""
+    from ..models.layers import unflatten
+    flat = {path: NamedSharding(mesh, spec_for(shape, axes, mesh, rules))
+            for path, (shape, _dt, axes) in spec.items()}
+    return unflatten(flat)
+
+
+def batch_axes(mesh: Mesh) -> tuple:
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+
+# ---------------------------------------------------------------------------
+# Activation sharding context — GSPMD propagation alone resolves the
+# embed-gather conflict (embedding D sharded over data vs batch over data) by
+# replicating the batch dim, which explodes activation memory 16×; explicit
+# constraints at the residual-stream boundaries pin the intended layout.
+
+_ACT_CTX: dict = {"mesh": None, "batch": None, "vocab": None}
+
+
+def set_activation_context(mesh: Mesh | None):
+    """Install (or clear, with None) the activation-sharding context used by
+    model forward passes under pjit."""
+    if mesh is None:
+        _ACT_CTX.update(mesh=None, batch=None, vocab=None)
+        return
+    _ACT_CTX.update(mesh=mesh, batch=batch_axes(mesh),
+                    vocab="model" if "model" in mesh.axis_names else None)
+
+
+def _batch_spec(mesh, b: int):
+    ba = _ACT_CTX["batch"]
+    total = 1
+    for a in ba or ():
+        total *= mesh.shape[a]
+    return ba if (ba and b % total == 0) else None
+
+
+def shard_activations(x):
+    """Constrain (B, T, D) residual-stream activations to batch-over-data
+    (skipped when the batch doesn't divide, e.g. long_500k B=1)."""
+    mesh = _ACT_CTX["mesh"]
+    if mesh is None or x.ndim < 2:
+        return x
+    spec = [_batch_spec(mesh, x.shape[0])] + [None] * (x.ndim - 1)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, P(*spec)))
+
+
+def shard_attn_heads(x):
+    """Constrain (B, T, H, hd) q/k/v projections: heads over model when the
+    head count divides; otherwise fall back to sequence sharding over model
+    (context parallelism) — without this, archs whose head count doesn't
+    divide the TP axis (llama 24H, gemma3 8H, GQA kv<16) replicate their
+    (B, H, T, S) attention scores and blow past HBM."""
+    mesh = _ACT_CTX["mesh"]
+    if mesh is None or x.ndim != 4:
+        return x
+    B, T, H, hd = x.shape
+    msize = mesh.shape["model"] if "model" in mesh.axis_names else 1
+    batch = _batch_spec(mesh, B)
+    if msize > 1 and H % msize == 0:
+        spec = P(batch, None, "model", None)
+    elif msize > 1 and T % msize == 0 and T > 1:
+        spec = P(batch, "model", None, None)
+    else:
+        spec = P(batch, None, None, None)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+
+def shard_logits(x):
+    """Constrain (B, T, V) logits to batch-over-data, vocab-over-model."""
+    mesh = _ACT_CTX["mesh"]
+    if mesh is None or x.ndim != 3:
+        return x
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(mesh, P(_batch_spec(mesh, x.shape[0]), None,
+                                 _ACT_CTX["vocab"])))
+
+
+def data_sharding(mesh: Mesh, global_batch: int, *trailing) -> NamedSharding:
+    """Batch dim over (pod,)data when divisible, else replicated."""
+    ba = batch_axes(mesh)
+    total = 1
+    for a in ba:
+        total *= mesh.shape[a]
+    if global_batch % total != 0:
+        ba = None
+    return NamedSharding(mesh, P(ba, *trailing))
+
+
+def replicated(mesh: Mesh) -> NamedSharding:
+    return NamedSharding(mesh, P())
+
+
+def cache_shardings(mesh: Mesh, cache_tree, global_batch: int):
+    """Structural cache sharding.  cache_tree is the transformer cache dict
+    {"prelude": [...], "group": <stacked leaves, leading n_groups dim>,
+    "postlude": [...]}: batch dim over data when divisible, plus the largest
+    model-divisible later dim over model (sequence for KV caches → SP at
+    decode; d_inner for SSM states)."""
+    ba = batch_axes(mesh)
+    btotal = 1
+    for a in ba:
+        btotal *= mesh.shape[a]
+    msize = mesh.shape["model"] if "model" in mesh.axis_names else 1
+
+    def one(sd, batch_dim: int):
+        shape = sd.shape
+        spec: list = [None] * len(shape)
+        if len(shape) > batch_dim and shape[batch_dim] % btotal == 0 \
+                and btotal > 1:
+            spec[batch_dim] = ba
+        best, best_dim = None, 0
+        for i in range(batch_dim + 1, len(shape)):
+            if shape[i] % msize == 0 and shape[i] > best_dim and msize > 1:
+                best, best_dim = i, shape[i]
+        if best is not None:
+            spec[best] = "model"
+        return NamedSharding(mesh, P(*spec))
+
+    out = {}
+    for key, sub in cache_tree.items():
+        bd = 1 if key == "group" else 0     # group leaves: (n_groups, B, …)
+        out[key] = jax.tree.map(lambda sd, b=bd: one(sd, b), sub)
+    return out

@@ -1,0 +1,92 @@
+"""Filter + stream compaction kernel (TPU adaptation of LaFP's filter hot
+path, DESIGN §2).
+
+GPU compaction uses warp ballots and shared-memory scans; neither exists on
+TPU.  The TPU-native design:
+
+* grid steps run **sequentially** on a TensorCore, so a running output
+  offset lives in an SMEM scratch cell and threads the blocks together
+  (a decoupled look-back scan without the look-back);
+* within a block, compaction is a **permutation matmul** on the MXU:
+  ``packed = onehotᵀ · values`` where ``onehot[j, cumsum(mask)_j-1] = mask_j``
+  — scatter-free, branch-free;
+* the packed block is stored at the running offset with a dynamic slice
+  into the full VMEM-resident output; garbage beyond each block's count is
+  overwritten by the next block (the valid prefix grows monotonically).
+
+Output must fit VMEM (~4M f32 rows); `ops.filter_compact_chunked` stitches
+larger arrays in 1M-row chunks.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _compact_kernel(mask_ref, values_ref, out_ref, count_ref, off_ref):
+    i = pl.program_id(0)
+
+    @pl.when(i == 0)
+    def _init():
+        off_ref[0] = 0
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    mask = mask_ref[...]                       # (B,) bool
+    values = values_ref[...]                   # (B,) f32
+    b = mask.shape[0]
+    pos = jnp.cumsum(mask.astype(jnp.int32)) - 1          # in-block slot
+    cnt = jnp.sum(mask.astype(jnp.int32))
+    slots = jax.lax.broadcasted_iota(jnp.int32, (b, b), 1)
+    onehot = ((pos[:, None] == slots) & mask[:, None]).astype(jnp.float32)
+    packed = jax.lax.dot_general(
+        onehot, values.astype(jnp.float32),
+        dimension_numbers=(((0,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)               # (B,) permuted
+    off = off_ref[0]
+    out_ref[pl.ds(off, b)] = packed
+    off_ref[0] = off + cnt
+
+    @pl.when(i == pl.num_programs(0) - 1)
+    def _fin():
+        count_ref[0] = off + cnt
+
+
+@functools.partial(jax.jit, static_argnames=("block_rows", "interpret"))
+def filter_compact(values: jax.Array, mask: jax.Array, block_rows: int = 512,
+                   interpret: bool = True) -> tuple[jax.Array, jax.Array]:
+    """Pack values[mask] to the front (stable); returns (packed (N,), count).
+
+    Slots ≥ count are zeroed."""
+    n = values.shape[0]
+    nb = -(-max(n, block_rows) // block_rows) * block_rows
+    vals_p = jnp.zeros((nb,), jnp.float32).at[:n].set(
+        values.astype(jnp.float32))
+    mask_p = jnp.zeros((nb,), bool).at[:n].set(mask)
+    grid = nb // block_rows
+    packed, count = pl.pallas_call(
+        _compact_kernel,
+        grid=(grid,),
+        in_specs=[
+            pl.BlockSpec((block_rows,), lambda i: (i,)),
+            pl.BlockSpec((block_rows,), lambda i: (i,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((nb + block_rows,), lambda i: (0,)),
+            pl.BlockSpec(memory_space=pltpu.SMEM),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((nb + block_rows,), jnp.float32),
+            jax.ShapeDtypeStruct((1,), jnp.int32),
+        ],
+        scratch_shapes=[pltpu.SMEM((1,), jnp.int32)],
+        interpret=interpret,
+    )(mask_p, vals_p)
+    count = count[0]
+    valid = jnp.arange(n) < count
+    out = jnp.where(valid, packed[:n], 0).astype(values.dtype) \
+        if values.dtype != jnp.float32 else jnp.where(valid, packed[:n], 0)
+    return out, count

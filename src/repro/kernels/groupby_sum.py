@@ -1,0 +1,86 @@
+"""MXU group-by aggregation kernel (TPU adaptation of LaFP's group-by hot
+path, DESIGN §2).
+
+GPU/CPU dataframe engines aggregate via hash tables — branchy scalar probing
+that has no TPU analogue.  The TPU-native rethink: per row-block, build a
+one-hot matrix of the group codes and *matmul* it against the value block on
+the MXU:
+
+    out[g, v] += Σ_j onehot[j, g] · values[j, v]      (Gp,B)·(B,Vp)
+
+The output block (Gp, Vp) stays resident in VMEM across all grid steps
+(constant index_map), so the aggregation is a single pass over HBM with
+arithmetic intensity B·G·V / (B·V) = G — compute-bound for G ≥ ~100, versus
+the memory-bound scatter a hash aggregation would be.
+
+Block shapes: rows B=256 (sublane multiple), groups padded to 8·k, value
+columns padded to 128·k (lane width).  Dict-encoded (category) key columns
+from the metadata store guarantee a dense, bounded code domain — the same
+invariant the distributed backend's segment-sum path uses.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _groupby_kernel(codes_ref, values_ref, out_ref, *, num_groups_padded: int):
+    i = pl.program_id(0)
+
+    @pl.when(i == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    codes = codes_ref[...]            # (B,)
+    values = values_ref[...]          # (B, Vp) f32
+    groups = jax.lax.broadcasted_iota(jnp.int32, (codes.shape[0],
+                                                  num_groups_padded), 1)
+    onehot = (codes[:, None] == groups).astype(jnp.float32)   # (B, Gp)
+    # MXU: (Gp, B) @ (B, Vp) — accumulate into the resident output block
+    contrib = jax.lax.dot_general(
+        onehot, values,
+        dimension_numbers=(((0,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)                    # (Gp, Vp)
+    out_ref[...] += contrib
+
+
+def _pad_to(x: int, m: int) -> int:
+    return -(-x // m) * m
+
+
+@functools.partial(jax.jit, static_argnames=("num_groups", "block_rows",
+                                             "interpret"))
+def groupby_sum(codes: jax.Array, values: jax.Array, num_groups: int,
+                block_rows: int = 256, interpret: bool = True) -> jax.Array:
+    """Segment-sum values (N,) or (N, V) by codes (N,) → (G,) or (G, V).
+
+    Rows with codes outside [0, num_groups) contribute nothing (they hit
+    padded one-hot columns)."""
+    squeeze = values.ndim == 1
+    if squeeze:
+        values = values[:, None]
+    n, v = values.shape
+    gp = _pad_to(max(num_groups, 8), 8)
+    vp = _pad_to(max(v, 128), 128)
+    nb = _pad_to(max(n, block_rows), block_rows)
+    codes_p = jnp.full((nb,), gp, jnp.int32).at[:n].set(
+        codes.astype(jnp.int32))                    # pad rows → dead group
+    values_p = jnp.zeros((nb, vp), jnp.float32).at[:n, :v].set(
+        values.astype(jnp.float32))
+    grid = nb // block_rows
+    out = pl.pallas_call(
+        functools.partial(_groupby_kernel, num_groups_padded=gp),
+        grid=(grid,),
+        in_specs=[
+            pl.BlockSpec((block_rows,), lambda i: (i,)),
+            pl.BlockSpec((block_rows, vp), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((gp, vp), lambda i: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((gp, vp), jnp.float32),
+        interpret=interpret,
+    )(codes_p, values_p)
+    out = out[:num_groups, :v]
+    return out[:, 0] if squeeze else out

@@ -1,0 +1,92 @@
+"""jit'd dispatch wrappers for the Pallas kernels.
+
+``impl`` selects:
+* ``"pallas"``   — TPU-target kernels (validated with interpret=True on CPU;
+                   on a real TPU pass interpret=False via KernelConfig)
+* ``"xla"``      — the pure-jnp reference path (production fallback; also
+                   the oracle used in tests)
+
+The engine picks "xla" on CPU hosts and "pallas" on TPU; this mirrors the
+paper's backend-capability fallback.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from . import ref
+from .filter_compact import filter_compact as _filter_compact_pallas
+from .groupby_sum import groupby_sum as _groupby_sum_pallas
+from .zonemap import zonemap as _zonemap_pallas
+
+
+@dataclasses.dataclass(frozen=True)
+class KernelConfig:
+    impl: str = "auto"          # auto | pallas | xla
+    interpret: bool = True      # Pallas interpret mode (CPU validation)
+
+    def resolved(self) -> str:
+        if self.impl != "auto":
+            return self.impl
+        platform = jax.devices()[0].platform
+        return "pallas" if platform == "tpu" else "xla"
+
+
+_CONFIG = KernelConfig()
+
+
+def set_kernel_config(cfg: KernelConfig):
+    global _CONFIG
+    _CONFIG = cfg
+
+
+def get_kernel_config() -> KernelConfig:
+    return _CONFIG
+
+
+def groupby_sum(codes, values, num_groups: int, cfg: KernelConfig | None = None):
+    cfg = cfg or _CONFIG
+    if cfg.resolved() == "pallas":
+        return _groupby_sum_pallas(codes, values, num_groups,
+                                   interpret=cfg.interpret)
+    return ref.groupby_sum_ref(codes, values, num_groups)
+
+
+def filter_compact(values, mask, cfg: KernelConfig | None = None):
+    cfg = cfg or _CONFIG
+    if cfg.resolved() == "pallas":
+        return _filter_compact_pallas(values, mask, interpret=cfg.interpret)
+    return ref.filter_compact_ref(values, mask)
+
+
+def filter_compact_chunked(values, mask, chunk: int = 1 << 20,
+                           cfg: KernelConfig | None = None):
+    """Two-level compaction for arrays beyond VMEM residency: compact each
+    chunk, then compact the concatenated survivors' prefix mask."""
+    n = values.shape[0]
+    if n <= chunk:
+        return filter_compact(values, mask, cfg)
+    packed_parts, counts = [], []
+    for lo in range(0, n, chunk):
+        p, c = filter_compact(values[lo:lo + chunk], mask[lo:lo + chunk], cfg)
+        packed_parts.append(p)
+        counts.append(c)
+    packed = jnp.concatenate(packed_parts)
+    counts = jnp.stack(counts)
+    # validity mask of the concatenated chunks, then one more compaction
+    sizes = jnp.asarray([p.shape[0] for p in packed_parts])
+    offs = jnp.cumsum(sizes) - sizes
+    idx = jnp.arange(packed.shape[0])
+    chunk_id = jnp.searchsorted(offs, idx, side="right") - 1
+    valid = (idx - offs[chunk_id]) < counts[chunk_id]
+    return filter_compact(packed, valid, cfg)
+
+
+def zonemap(values, block_rows: int = 4096, cfg: KernelConfig | None = None):
+    cfg = cfg or _CONFIG
+    if cfg.resolved() == "pallas":
+        return _zonemap_pallas(values, block_rows=block_rows,
+                               interpret=cfg.interpret)
+    return ref.zonemap_ref(values, block_rows)

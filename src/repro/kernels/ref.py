@@ -1,0 +1,59 @@
+"""Pure-jnp oracles for the Pallas kernels.
+
+Each function is the semantic ground truth; kernel tests sweep shapes/dtypes
+and assert_allclose against these.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def groupby_sum_ref(codes: jnp.ndarray, values: jnp.ndarray,
+                    num_groups: int) -> jnp.ndarray:
+    """Segment-sum of ``values`` (N,) or (N, V) by int ``codes`` (N,) into
+    (G,) or (G, V).  Out-of-range codes contribute nothing."""
+    import jax
+    valid = (codes >= 0) & (codes < num_groups)
+    safe = jnp.where(valid, codes, num_groups)
+    if values.ndim == 1:
+        vals = jnp.where(valid, values, 0)
+        return jax.ops.segment_sum(vals, safe, num_groups + 1)[:num_groups]
+    vals = jnp.where(valid[:, None], values, 0)
+    return jax.ops.segment_sum(vals, safe, num_groups + 1)[:num_groups]
+
+
+def filter_count_ref(mask: jnp.ndarray) -> jnp.ndarray:
+    """Number of surviving rows."""
+    return jnp.sum(mask.astype(jnp.int32))
+
+
+def filter_compact_ref(values: jnp.ndarray, mask: jnp.ndarray
+                       ) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Stable compaction: surviving values packed to the front, padded with
+    zeros; returns (packed (N,), count ())."""
+    n = values.shape[0]
+    idx = jnp.cumsum(mask.astype(jnp.int32)) - 1          # target slot per row
+    count = jnp.sum(mask.astype(jnp.int32))
+    safe_idx = jnp.where(mask, idx, n)                    # masked rows → spill
+    out = jnp.zeros((n + 1,), values.dtype).at[safe_idx].set(values)[:n]
+    valid = jnp.arange(n) < count
+    return jnp.where(valid, out, 0), count
+
+
+def zonemap_ref(values: jnp.ndarray, block: int
+                ) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Per-block (min, max) over a 1-D array padded to a multiple of block.
+    Padding uses +inf/-inf identities."""
+    n = values.shape[0]
+    nb = -(-n // block)
+    pad = nb * block - n
+    if values.dtype.kind == "f":
+        lo_id, hi_id = jnp.inf, -jnp.inf
+    else:
+        info = jnp.iinfo(values.dtype)
+        lo_id, hi_id = info.max, info.min
+    v_lo = jnp.concatenate([values, jnp.full((pad,), lo_id, values.dtype)])
+    v_hi = jnp.concatenate([values, jnp.full((pad,), hi_id, values.dtype)])
+    mins = v_lo.reshape(nb, block).min(axis=1)
+    maxs = v_hi.reshape(nb, block).max(axis=1)
+    return mins, maxs

@@ -1,0 +1,56 @@
+"""Zone-map statistics kernel: per-block (min, max, count) for the metadata
+store (paper §3.6) and partition pruning (DESIGN §6).
+
+One pass over HBM; each grid step reduces a (B,) tile in VMEM to one output
+row.  Output rows are (NB, 1) tiles (index-mapped per step).  Runs at read
+time on the device so the "background metadata task" costs one streaming
+read of the column.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _zonemap_kernel(values_ref, mins_ref, maxs_ref, *, rows: int,
+                    block_rows: int):
+    i = pl.program_id(0)
+    vals = values_ref[...]                      # (B,)
+    b = vals.shape[0]
+    # mask out padding in the final block with reduction identities
+    idx = jax.lax.broadcasted_iota(jnp.int32, (b,), 0) + i * block_rows
+    in_range = idx < rows
+    lo = jnp.where(in_range, vals, jnp.inf)
+    hi = jnp.where(in_range, vals, -jnp.inf)
+    mins_ref[0, 0] = jnp.min(lo)
+    maxs_ref[0, 0] = jnp.max(hi)
+
+
+@functools.partial(jax.jit, static_argnames=("block_rows", "interpret"))
+def zonemap(values: jax.Array, block_rows: int = 4096,
+            interpret: bool = True) -> tuple[jax.Array, jax.Array]:
+    """Per-block (min, max) of a 1-D array; blocks of ``block_rows``."""
+    n = values.shape[0]
+    nb = -(-max(n, 1) // block_rows)
+    pad = nb * block_rows - n
+    vals_p = jnp.concatenate(
+        [values.astype(jnp.float32),
+         jnp.zeros((pad,), jnp.float32)]) if pad else values.astype(jnp.float32)
+    mins, maxs = pl.pallas_call(
+        functools.partial(_zonemap_kernel, rows=n, block_rows=block_rows),
+        grid=(nb,),
+        in_specs=[pl.BlockSpec((block_rows,), lambda i: (i,))],
+        out_specs=[
+            pl.BlockSpec((1, 1), lambda i: (i, 0)),
+            pl.BlockSpec((1, 1), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((nb, 1), jnp.float32),
+            jax.ShapeDtypeStruct((nb, 1), jnp.float32),
+        ],
+        interpret=interpret,
+    )(vals_p)
+    return mins[:, 0], maxs[:, 0]

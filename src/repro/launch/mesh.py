@@ -1,0 +1,23 @@
+"""Production mesh construction.
+
+A FUNCTION (not module-level constant) so importing never touches jax device
+state.  Single pod: (data=16, model=16) = 256 chips (v5e pod).  Multi-pod:
+(pod=2, data=16, model=16) = 512 chips; the ``pod`` axis is pure DP over DCN.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh(model: int = 1):
+    """Whatever this host has (tests / smoke runs)."""
+    n = len(jax.devices())
+    if model > 1 and n % model == 0:
+        return jax.make_mesh((n // model, model), ("data", "model"))
+    return jax.make_mesh((n, 1), ("data", "model"))

@@ -1,0 +1,334 @@
+"""Roofline-term extraction from compiled dry-run artifacts.
+
+Three terms per (arch × shape × mesh), all in seconds-per-step *per chip*:
+
+    compute    = HLO_FLOPs / peak_FLOPs            (cost_analysis flops)
+    memory     = HLO_bytes / HBM_bw                (cost_analysis bytes)
+    collective = collective_bytes / link_bw        (parsed from HLO text)
+
+``cost_analysis`` on the SPMD-partitioned module reports **per-device**
+numbers, so no further division by chip count is needed (the spec's
+"/ chips" with global numerators is the same quantity).
+
+collective_bytes sums the operand sizes of every all-gather / all-reduce /
+reduce-scatter / all-to-all / collective-permute op in the compiled module
+(per spec).  Hardware: TPU v5e — 197 TFLOP/s bf16, 819 GB/s HBM,
+~50 GB/s/link ICI.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+
+PEAK_FLOPS = 197e12        # bf16 per chip
+HBM_BW = 819e9             # bytes/s per chip
+LINK_BW = 50e9             # bytes/s per ICI link
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16, "s4": 1, "u4": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+# e.g.  f32[16,1024]{1,0}   bf16[8]   pred[]
+_SHAPE_RE = re.compile(r"\b([a-z0-9]+)\[([0-9,]*)\]")
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    if dtype not in _DTYPE_BYTES:
+        return 0
+    n = 1
+    if dims:
+        for d in dims.split(","):
+            n *= int(d)
+    return n * _DTYPE_BYTES[dtype]
+
+
+_COLL_LINE_RE = re.compile(
+    r"=\s*(\(?)([a-z0-9]+\[[0-9,]*\][^)\s]*(?:,\s*[a-z0-9]+\[[0-9,]*\][^)\s]*)*)\)?\s*"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(-start)?\(")
+_GROUPS_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+
+
+def collective_bytes(hlo_text: str) -> dict[str, int]:
+    """Per-device collective bytes from compiled HLO text.
+
+    Compiled modules don't annotate operand shapes inline, so bytes come
+    from the *result* shape, adjusted per op so the number approximates the
+    operand-bytes convention of the spec: all-gather result = operand ×
+    group (we report the result — the bytes a device materializes over the
+    ring); reduce-scatter result = operand / group (× group to recover
+    operand bytes); all-reduce / all-to-all / collective-permute results
+    equal their operands.  ``-done`` halves of async pairs are skipped to
+    avoid double counting."""
+    out: dict[str, int] = {k: 0 for k in _COLLECTIVES}
+    out["count"] = 0
+    for line in hlo_text.splitlines():
+        stripped = line.strip()
+        if "-done(" in stripped or "-done.clone(" in stripped:
+            continue
+        m = _COLL_LINE_RE.search(stripped)
+        if not m:
+            continue
+        shapes = _SHAPE_RE.findall(m.group(2))
+        nbytes = sum(_shape_bytes(dt, dims) for dt, dims in shapes)
+        op = m.group(3)
+        if op == "reduce-scatter":
+            g = _GROUPS_RE.search(stripped)
+            if g:
+                nbytes *= int(g.group(2))
+        out[op] += nbytes
+        out["count"] += 1
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Scan-aware HLO accounting.
+#
+# `lax.scan` lowers to a While whose body appears ONCE in the module, so a
+# naive static walk undercounts per-layer collectives/bytes by ~n_groups.
+# This walker segments the module into computations, finds While trip counts
+# from their condition computations, and multiplies each computation's
+# contribution by the product of enclosing trip counts.  Fusion-internal
+# instructions don't touch HBM and are excluded from the bytes proxy.
+
+_NAME_RE = re.compile(r"^(?:ENTRY\s+)?%?([\w\.\-]+)")
+_WHILE_ATTR_RE = re.compile(r"condition=%?([\w\.\-]+).*?body=%?([\w\.\-]+)",
+                            re.S)
+_TRIP_RE = re.compile(r'"known_trip_count":\{"n":"(\d+)"\}')
+_CONST_RE = re.compile(r"constant\((\d+)\)")
+_CALLS_RE = re.compile(r"calls=%?([\w\.\-]+)")
+_RESULT_RE = re.compile(r"^\s*(?:ROOT\s+)?%?[\w\.\-]+\s*=\s*(\(?[^=]*?)\s*"
+                        r"([a-z][a-z0-9\-]*)\(")
+
+
+def _parse_computations(hlo_text: str):
+    """Split the module into computations.  Header lines end with '{' and
+    contain a '->' return annotation (params may nest tuples, so no paren
+    matching)."""
+    comps: dict[str, list[str]] = {}
+    cur = None
+    for line in hlo_text.splitlines():
+        stripped = line.strip()
+        if stripped.endswith("{") and ") -> " in stripped:
+            m = _NAME_RE.match(stripped)
+            if m:
+                cur = m.group(1)
+                comps[cur] = []
+                continue
+        if cur is not None:
+            if stripped == "}":
+                cur = None
+                continue
+            comps[cur].append(line)
+    return comps
+
+
+def scan_aware_analysis(hlo_text: str) -> dict:
+    """Returns {"coll": {kind: bytes}, "coll_count": int,
+    "result_bytes": float} with While-trip multipliers applied."""
+    comps = _parse_computations(hlo_text)
+    # fusion-internal computations: excluded from byte accounting
+    fusion_comps: set[str] = set()
+    # while wiring: body/cond comp -> (trip count, caller comp)
+    called_by: dict[str, tuple[int, str]] = {}
+    for cname, lines in comps.items():
+        for line in lines:
+            if " fusion(" in line or line.strip().startswith("fusion("):
+                for fc in _CALLS_RE.findall(line):
+                    fusion_comps.add(fc)
+            if " while(" in line:
+                wm = _WHILE_ATTR_RE.search(line)
+                if not wm:
+                    continue
+                cond, body = wm.group(1), wm.group(2)
+                tm = _TRIP_RE.search(line)
+                if tm:
+                    trips = int(tm.group(1))
+                else:
+                    consts = [int(c) for c in _CONST_RE.findall(
+                        "\n".join(comps.get(cond, ())))]
+                    big = [c for c in consts if 1 < c < 1_000_000]
+                    trips = max(big) if big else 1
+                called_by[body] = (trips, cname)
+                called_by[cond] = (trips, cname)
+                fusion_comps.discard(body)
+
+    mult_memo: dict[str, int] = {}
+
+    def multiplier(cname: str) -> int:
+        if cname in mult_memo:
+            return mult_memo[cname]
+        m = 1
+        if cname in called_by:
+            trips, caller = called_by[cname]
+            mult_memo[cname] = 1  # break cycles
+            m = trips * multiplier(caller)
+        mult_memo[cname] = m
+        return m
+
+    # fusions containing a dynamic-update-slice act as loop accumulators
+    # (the DUS may feed a ROOT tuple, so scan the whole body)
+    dus_fusions: set[str] = set()
+    for fc in fusion_comps:
+        for line in comps.get(fc, ()):
+            if "dynamic-update-slice(" in line:
+                dus_fusions.add(fc)
+                break
+
+    coll = {k: 0 for k in _COLLECTIVES}
+    count = 0
+    result_bytes = 0.0
+    for cname, lines in comps.items():
+        mul = multiplier(cname)
+        own_trips = called_by.get(cname, (1, None))[0]
+        in_fusion = cname in fusion_comps
+        for line in lines:
+            s = line.strip()
+            if "-done(" in s:
+                continue
+            rm = _RESULT_RE.match(s)
+            if not rm:
+                continue
+            shapes = _SHAPE_RE.findall(rm.group(1))
+            nbytes = sum(_shape_bytes(dt, dims) for dt, dims in shapes)
+            op = rm.group(2)
+            base = None
+            for c in _COLLECTIVES:
+                if op == c or op == c + "-start":
+                    base = c
+                    break
+            if base is not None:
+                b = nbytes
+                if base == "reduce-scatter":
+                    g = _GROUPS_RE.search(s)
+                    if g:
+                        b *= int(g.group(2))
+                coll[base] += b * mul
+                count += 1
+            if not in_fusion and op not in ("parameter", "constant",
+                                            "get-tuple-element", "tuple",
+                                            "bitcast", "while"):
+                eff = nbytes
+                is_accum = op in ("dynamic-update-slice", "copy")
+                if op == "fusion":
+                    cm = _CALLS_RE.search(s)
+                    if cm and cm.group(1) in dus_fusions:
+                        is_accum = True
+                if is_accum:
+                    # loop-carried accumulators: the result shape is the
+                    # whole buffer but each iteration writes 1/trips of it
+                    eff = nbytes / max(own_trips, 1)
+                result_bytes += eff * mul
+    return {"coll": coll, "coll_count": count,
+            "result_bytes": result_bytes * 2.0}   # write + typical re-read
+
+
+@dataclasses.dataclass
+class RooflineTerms:
+    flops: float
+    hbm_bytes: float
+    coll_bytes: float
+    coll_breakdown: dict
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    # raw spec-literal values (static HLO walk / cost_analysis):
+    raw_flops: float = 0.0
+    raw_hbm_bytes: float = 0.0
+    raw_coll_bytes: float = 0.0
+
+    @property
+    def dominant(self) -> str:
+        terms = {"compute": self.compute_s, "memory": self.memory_s,
+                 "collective": self.collective_s}
+        return max(terms, key=terms.get)
+
+    @property
+    def step_s(self) -> float:
+        """Naive no-overlap upper bound."""
+        return self.compute_s + self.memory_s + self.collective_s
+
+    @property
+    def bound_s(self) -> float:
+        """Perfect-overlap lower bound = max term."""
+        return max(self.compute_s, self.memory_s, self.collective_s)
+
+    def roofline_fraction(self, model_flops_per_chip: float) -> float:
+        """useful-FLOPs time / achievable step time (perfect overlap).
+
+        The achievable step time is max(terms, ideal): XLA:CPU cost_analysis
+        does not count FLOPs inside fused computations, so the raw compute
+        term can fall below the 6ND ideal — the ideal is the physical floor,
+        which also caps the fraction at 1."""
+        ideal = model_flops_per_chip / PEAK_FLOPS
+        denom = max(self.bound_s, ideal)
+        return ideal / denom if denom else 0.0
+
+    def to_dict(self):
+        return {
+            "flops": self.flops, "hbm_bytes": self.hbm_bytes,
+            "coll_bytes": self.coll_bytes,
+            "coll_breakdown": self.coll_breakdown,
+            "compute_s": self.compute_s, "memory_s": self.memory_s,
+            "collective_s": self.collective_s, "dominant": self.dominant,
+            "raw_flops": self.raw_flops, "raw_hbm_bytes": self.raw_hbm_bytes,
+            "raw_coll_bytes": self.raw_coll_bytes,
+        }
+
+
+def analyze(compiled, hlo_text: str | None = None,
+            body_flops_correction: float = 0.0) -> RooflineTerms:
+    """Scan-aware roofline terms.
+
+    * memory / collective: from the While-trip-aware HLO walk (the static
+      spec-literal values are kept as raw_*).
+    * compute: cost_analysis FLOPs count scan bodies once and skip fused
+      ops on CPU; ``body_flops_correction`` adds the analytic
+      (n_groups − 1) × per-group FLOPs so depth is represented.
+    """
+    ca = compiled.cost_analysis()
+    if isinstance(ca, list):           # older API returns per-device list
+        ca = ca[0]
+    raw_flops = float(ca.get("flops", 0.0))
+    raw_bytes = float(ca.get("bytes accessed", 0.0))
+    text = hlo_text if hlo_text is not None else compiled.as_text()
+    raw_coll = collective_bytes(text)
+    raw_coll_total = float(sum(v for k, v in raw_coll.items() if k != "count"))
+    sa = scan_aware_analysis(text)
+    coll = dict(sa["coll"])
+    coll["count"] = sa["coll_count"]
+    total_coll = float(sum(v for k, v in coll.items() if k != "count"))
+    nbytes = max(sa["result_bytes"], raw_bytes)
+    flops = raw_flops + body_flops_correction
+    return RooflineTerms(
+        flops=flops, hbm_bytes=nbytes, coll_bytes=total_coll,
+        coll_breakdown=coll,
+        compute_s=flops / PEAK_FLOPS,
+        memory_s=nbytes / HBM_BW,
+        collective_s=total_coll / LINK_BW,
+        raw_flops=raw_flops, raw_hbm_bytes=raw_bytes,
+        raw_coll_bytes=raw_coll_total,
+    )
+
+
+def model_flops_per_step(arch, shape, n_chips: int) -> float:
+    """MODEL_FLOPS = 6·N·D (dense) / 6·N_active·D (MoE), per chip.
+
+    D = tokens processed per step.  For decode shapes D = global_batch new
+    tokens (the KV-cache read is memory, not FLOPs)."""
+    total, active = arch.param_count()
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq
+        factor = 6
+    elif shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq
+        factor = 2
+    else:
+        tokens = shape.global_batch
+        factor = 2
+    return factor * active * tokens / n_chips

@@ -1,0 +1,85 @@
+"""End-to-end training driver.
+
+    PYTHONPATH=src python -m repro.launch.train --arch llama3.2-3b --smoke \
+        --steps 200 --batch 8 --seq 128
+
+On this CPU container use ``--smoke`` (reduced config); on a pod the full
+config + production mesh apply unchanged.  The input pipeline is the LaFP
+lazy engine (repro.data.pipeline) — the paper's technique feeding the
+trainer.
+"""
+from __future__ import annotations
+
+import argparse
+
+import jax
+import jax.numpy as jnp
+
+from ..configs import get_config
+from ..data.pipeline import (PipelineConfig, PrefetchIterator, TokenPipeline,
+                             synthetic_token_source)
+from ..distributed.sharding import param_shardings
+from ..models.layers import init_from_spec
+from ..models.transformer import model_spec
+from ..train.loop import LoopConfig, Trainer
+from ..train.optim import OptimConfig, init_opt_state
+from ..train.train_step import TrainConfig, make_train_step
+from .mesh import make_host_mesh
+
+
+def build_state(arch, seed: int = 0, mesh=None):
+    spec = model_spec(arch)
+    params = init_from_spec(spec, jax.random.PRNGKey(seed))
+    if mesh is not None:
+        sh = param_shardings(spec, mesh)
+        params = jax.tree.map(jax.device_put, params, sh)
+    return {"params": params, "opt": init_opt_state(params)}
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="llama3.2-3b")
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--docs", type=int, default=512)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_train_ckpt")
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    ap.add_argument("--resume", action="store_true")
+    ap.add_argument("--loss-mode", default="sharded_vocab")
+    args = ap.parse_args(argv)
+
+    arch = get_config(args.arch)
+    if args.smoke:
+        arch = arch.smoke()
+    mesh = make_host_mesh()
+
+    tcfg = TrainConfig(
+        optim=OptimConfig(lr=args.lr, warmup_steps=max(args.steps // 20, 5),
+                          total_steps=args.steps),
+        microbatches=args.microbatches, loss_mode=args.loss_mode)
+    train_step = jax.jit(make_train_step(arch, tcfg), donate_argnums=(0,))
+
+    source = synthetic_token_source(args.docs, args.seq, arch.vocab)
+    pipe = TokenPipeline(source, PipelineConfig(batch=args.batch,
+                                                seq=args.seq))
+    data = PrefetchIterator(iter(pipe), depth=2)
+
+    state = build_state(arch, mesh=mesh)
+    trainer = Trainer(train_step, state, data,
+                      LoopConfig(total_steps=args.steps,
+                                 ckpt_every=args.ckpt_every,
+                                 ckpt_dir=args.ckpt_dir),
+                      pipeline_state=pipe.state)
+    if args.resume:
+        trainer.try_resume()
+    summary = trainer.run()
+    print({"summary": summary}, flush=True)
+    return summary
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,238 @@
+"""Attention mixers: GQA (optionally sliding-window) and MLA (DeepSeek-V2
+latent attention), with train / prefill / decode paths and KV caches.
+
+Caches:
+* GQA   — k/v: (B, S_max, H_kv, hd)
+* MLA   — latent c_kv: (B, S_max, r) + rope key: (B, S_max, rope_dim)
+          (this *is* MLA's memory win: r + rope_dim ≪ 2·H·hd)
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+
+import jax
+import jax.numpy as jnp
+
+from ..distributed.sharding import shard_attn_heads
+from .layers import ParamSpec, apply_rotary, leaf, rotary_cache
+
+NEG_INF = -2.0 ** 30
+
+
+@dataclasses.dataclass(frozen=True)
+class AttnConfig:
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    head_dim: int
+    qkv_bias: bool = False
+    window: int | None = None          # sliding-window size (local layers)
+    rope_theta: float = 10000.0
+    # MLA:
+    kv_lora_rank: int | None = None
+    qk_rope_dim: int = 64
+    v_head_dim: int | None = None
+    # implementation: "dense" materializes (T,S) logits; "chunked" is the
+    # flash-style online-softmax scan over KV chunks (O(T·C) working set)
+    attn_impl: str = "dense"
+    kv_chunk: int = 1024
+
+
+def gqa_spec(cfg: AttnConfig, prefix: str) -> ParamSpec:
+    D, H, Hkv, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    s = ParamSpec()
+    s[f"{prefix}/wq"] = leaf((D, H, hd), ("embed", "heads", None))
+    s[f"{prefix}/wk"] = leaf((D, Hkv, hd), ("embed", "heads", None))
+    s[f"{prefix}/wv"] = leaf((D, Hkv, hd), ("embed", "heads", None))
+    s[f"{prefix}/wo"] = leaf((H, hd, D), ("heads", None, "embed"))
+    if cfg.qkv_bias:
+        s[f"{prefix}/bq"] = leaf((H, hd), ("heads", None))
+        s[f"{prefix}/bk"] = leaf((Hkv, hd), ("heads", None))
+        s[f"{prefix}/bv"] = leaf((Hkv, hd), ("heads", None))
+    return s
+
+
+def mla_spec(cfg: AttnConfig, prefix: str) -> ParamSpec:
+    D, H = cfg.d_model, cfg.n_heads
+    r = cfg.kv_lora_rank
+    nope = cfg.head_dim
+    rope = cfg.qk_rope_dim
+    vhd = cfg.v_head_dim or cfg.head_dim
+    s = ParamSpec()
+    s[f"{prefix}/wq"] = leaf((D, H, nope + rope), ("embed", "heads", None))
+    s[f"{prefix}/w_dkv"] = leaf((D, r), ("embed", None))
+    s[f"{prefix}/w_krope"] = leaf((D, rope), ("embed", None))
+    s[f"{prefix}/w_uk"] = leaf((r, H, nope), (None, "heads", None))
+    s[f"{prefix}/w_uv"] = leaf((r, H, vhd), (None, "heads", None))
+    s[f"{prefix}/wo"] = leaf((H, vhd, D), ("heads", None, "embed"))
+    return s
+
+
+# ---------------------------------------------------------------------------
+# Core attention math
+
+
+def _sdpa(q, k, v, mask, scale):
+    """q: (B,T,H,hd) k/v: (B,S,Hkv,*) grouped-query attention."""
+    B, T, H, hd = q.shape
+    Hkv = k.shape[2]
+    G = H // Hkv
+    q = q.reshape(B, T, Hkv, G, hd)
+    logits = jnp.einsum("bthgd,bshd->bhgts", q, k,
+                        preferred_element_type=jnp.float32) * scale
+    logits = jnp.where(mask[:, None, None, :, :], logits, NEG_INF)
+    probs = jax.nn.softmax(logits, axis=-1).astype(v.dtype)
+    out = jnp.einsum("bhgts,bshe->bthge", probs, v)
+    return out.reshape(B, T, Hkv * G, -1)
+
+
+def _chunked_sdpa(q, k, v, scale, window, kv_chunk):
+    """Flash-style attention: `lax.scan` over KV chunks with online softmax.
+    Causal (train/prefill) only; working set is O(B·H·T·C) instead of
+    O(B·H·T·S).  TPU adaptation of flash attention — the online-softmax
+    rescale trick is hardware-agnostic; block sizes are picked for VMEM
+    tiles rather than SM shared memory."""
+    B, T, H, hd = q.shape
+    Hkv = k.shape[2]
+    G = H // Hkv
+    S = k.shape[1]
+    C = min(kv_chunk, S)
+    assert S % C == 0, (S, C)
+    nc = S // C
+    qg = q.reshape(B, T, Hkv, G, hd)
+    tpos = jnp.arange(T)[:, None]
+
+    k_c = k.reshape(B, nc, C, Hkv, hd).transpose(1, 0, 2, 3, 4)
+    v_c = v.reshape(B, nc, C, Hkv, hd).transpose(1, 0, 2, 3, 4)
+
+    def body(carry, inp):
+        m, l, acc = carry
+        kc, vc, j = inp
+        spos = j * C + jnp.arange(C)[None, :]
+        mask = spos <= tpos                       # (T, C) causal
+        if window is not None:
+            mask = mask & (tpos - spos < window)
+        s = jnp.einsum("bthgd,bshd->bhgts", qg, kc,
+                       preferred_element_type=jnp.float32) * scale
+        s = jnp.where(mask[None, None, None], s, NEG_INF)
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+        r = jnp.exp(m - m_new)
+        p = jnp.exp(s - m_new[..., None])
+        l = l * r + jnp.sum(p, axis=-1)
+        acc = acc * r[..., None] + jnp.einsum("bhgts,bshe->bhgte",
+                                              p.astype(vc.dtype), vc)
+        return (m_new, l, acc), None
+
+    m0 = jnp.full((B, Hkv, G, T), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((B, Hkv, G, T), jnp.float32)
+    a0 = jnp.zeros((B, Hkv, G, T, hd), jnp.float32)
+    (m, l, acc), _ = jax.lax.scan(body, (m0, l0, a0),
+                                  (k_c, v_c, jnp.arange(nc)))
+    out = acc / jnp.maximum(l, 1e-30)[..., None]
+    return out.transpose(0, 3, 1, 2, 4).reshape(B, T, H, hd).astype(q.dtype)
+
+
+def _causal_mask(T, S, offset, window):
+    """(T, S) mask: query t (absolute position offset+t) sees key s iff
+    s ≤ offset+t and (no window or offset+t-s < window)."""
+    tpos = jnp.arange(T)[:, None] + offset
+    spos = jnp.arange(S)[None, :]
+    m = spos <= tpos
+    if window is not None:
+        m = m & (tpos - spos < window)
+    return m
+
+
+def gqa_forward(params, cfg: AttnConfig, x, positions, cache=None,
+                cache_len=None):
+    """x: (B,T,D).  Train/prefill: cache None, positions (T,) or (B,T).
+    Decode: cache (k,v) with (B,S_max,...), cache_len (B,) current lengths.
+
+    Returns (out, new_cache)."""
+    B, T, D = x.shape
+    q = jnp.einsum("btd,dhk->bthk", x, params["wq"])
+    k = jnp.einsum("btd,dhk->bthk", x, params["wk"])
+    v = jnp.einsum("btd,dhk->bthk", x, params["wv"])
+    if cfg.qkv_bias:
+        q = q + params["bq"]
+        k = k + params["bk"]
+        v = v + params["bv"]
+    cos, sin = rotary_cache(positions, cfg.head_dim, cfg.rope_theta)
+    if cos.ndim == 2:            # (T, hd/2) → broadcast over batch
+        q = apply_rotary(q, cos, sin)
+        k = apply_rotary(k, cos, sin)
+    else:
+        q = apply_rotary(q, cos, sin)
+        k = apply_rotary(k, cos, sin)
+    scale = 1.0 / math.sqrt(cfg.head_dim)
+    if cache is None:
+        q = shard_attn_heads(q)    # heads→model, or seq→model fallback
+        if cfg.attn_impl == "chunked" and T > cfg.kv_chunk:
+            out = _chunked_sdpa(q, k, v, scale, cfg.window, cfg.kv_chunk)
+        else:
+            mask = _causal_mask(T, T, 0, cfg.window)[None]
+            out = _sdpa(q, k, v, mask, scale)
+        return out, (k, v)
+    ck, cv = cache                                  # (B, S_max, Hkv, hd)
+    S_max = ck.shape[1]
+    # decode (T small, usually 1): write new k/v at cache_len
+    idx = (cache_len[:, None] + jnp.arange(T)[None, :])  # (B, T)
+    bidx = jnp.arange(B)[:, None]
+    ck = ck.at[bidx, idx].set(k.astype(ck.dtype))
+    cv = cv.at[bidx, idx].set(v.astype(cv.dtype))
+    spos = jnp.arange(S_max)[None, :]
+    valid = spos <= (cache_len[:, None] + T - 1)
+    if cfg.window is not None:
+        valid = valid & (spos > cache_len[:, None] + T - 1 - cfg.window)
+    mask = valid[:, None, :] & jnp.ones((B, T, S_max), bool)
+    out = _sdpa(q, ck, cv, mask, scale)
+    return out, (ck, cv)
+
+
+def gqa_out(params, out):
+    return jnp.einsum("bthe,hed->btd", out, params["wo"])
+
+
+def mla_forward(params, cfg: AttnConfig, x, positions, cache=None,
+                cache_len=None):
+    """DeepSeek-V2 MLA.  Latent cache: c_kv (B,S,r), k_rope (B,S,rope)."""
+    B, T, D = x.shape
+    nope, rope = cfg.head_dim, cfg.qk_rope_dim
+    vhd = cfg.v_head_dim or cfg.head_dim
+    q = jnp.einsum("btd,dhk->bthk", x, params["wq"])     # (B,T,H,nope+rope)
+    q_nope, q_rope = q[..., :nope], q[..., nope:]
+    c_kv = jnp.einsum("btd,dr->btr", x, params["w_dkv"])    # latent
+    k_rope = jnp.einsum("btd,dr->btr", x, params["w_krope"])  # (B,T,rope)
+    cos, sin = rotary_cache(positions, rope, cfg.rope_theta)
+    q_rope = apply_rotary(q_rope, cos, sin)
+    k_rope = apply_rotary(k_rope[:, :, None, :], cos, sin)[:, :, 0, :]
+    if cache is not None:
+        cc, cr = cache
+        idx = (cache_len[:, None] + jnp.arange(T)[None, :])
+        bidx = jnp.arange(B)[:, None]
+        cc = cc.at[bidx, idx].set(c_kv.astype(cc.dtype))
+        cr = cr.at[bidx, idx].set(k_rope.astype(cr.dtype))
+        c_all, r_all = cc, cr
+        S = cc.shape[1]
+        spos = jnp.arange(S)[None, :]
+        mask = (spos <= (cache_len[:, None] + T - 1))[:, None, :] \
+            & jnp.ones((B, T, S), bool)
+        new_cache = (cc, cr)
+    else:
+        c_all, r_all = c_kv, k_rope
+        S = T
+        mask = _causal_mask(T, S, 0, None)[None]
+        new_cache = (c_kv, k_rope)
+    # up-project keys/values from the latent
+    k_nope = jnp.einsum("bsr,rhk->bshk", c_all, params["w_uk"])
+    vv = jnp.einsum("bsr,rhv->bshv", c_all, params["w_uv"])
+    scale = 1.0 / math.sqrt(nope + rope)
+    logits = (jnp.einsum("bthk,bshk->bhts", q_nope, k_nope,
+                         preferred_element_type=jnp.float32)
+              + jnp.einsum("bthr,bsr->bhts", q_rope, r_all,
+                           preferred_element_type=jnp.float32)) * scale
+    logits = jnp.where(mask[:, None, :, :], logits, NEG_INF)
+    probs = jax.nn.softmax(logits, axis=-1).astype(vv.dtype)
+    out = jnp.einsum("bhts,bshv->bthv", probs, vv)
+    return jnp.einsum("bthv,hvd->btd", out, params["wo"]), new_cache

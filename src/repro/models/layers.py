@@ -1,0 +1,129 @@
+"""Shared model layers: RMSNorm, SwiGLU MLP, rotary embeddings, embed/unembed.
+
+Params are plain pytrees (nested dicts of jnp arrays).  Every creator returns
+``(init_fn, spec)`` where ``spec`` maps leaf path → (shape, dtype, logical
+axes); ``repro.distributed.sharding`` turns logical axes into NamedSharding.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+Params = Any
+
+# Logical axis vocabulary (→ mesh axes in distributed/sharding.py):
+#   "vocab"   → model     (TP over vocabulary)
+#   "embed"   → data      (FSDP over the d_model dim)
+#   "heads"   → model     (TP over attention heads)
+#   "mlp"     → model     (TP over FFN hidden)
+#   "expert"  → model     (EP over routed experts)
+#   "layers"  → None      (scan dim, unsharded)
+#   None      → replicated
+
+
+def rms_norm(x: jax.Array, scale: jax.Array, eps: float = 1e-6) -> jax.Array:
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    return ((x * jax.lax.rsqrt(var + eps)) * scale.astype(jnp.float32)).astype(dt)
+
+
+def swiglu(x: jax.Array, w_gate: jax.Array, w_up: jax.Array,
+           w_down: jax.Array) -> jax.Array:
+    """SwiGLU MLP: (…, D) → (…, D).  w_gate/w_up: (D, F); w_down: (F, D)."""
+    g = jnp.einsum("...d,df->...f", x, w_gate)
+    u = jnp.einsum("...d,df->...f", x, w_up)
+    h = jax.nn.silu(g) * u
+    return jnp.einsum("...f,fd->...d", h, w_down)
+
+
+def rotary_cache(positions: jax.Array, head_dim: int,
+                 theta: float = 10000.0) -> tuple[jax.Array, jax.Array]:
+    """(…,) int positions → cos/sin of shape (…, head_dim/2)."""
+    half = head_dim // 2
+    freqs = 1.0 / (theta ** (jnp.arange(0, half, dtype=jnp.float32) / half))
+    angles = positions.astype(jnp.float32)[..., None] * freqs
+    return jnp.cos(angles), jnp.sin(angles)
+
+
+def apply_rotary(x: jax.Array, cos: jax.Array, sin: jax.Array) -> jax.Array:
+    """x: (B, T, H, hd); cos/sin: (B, T, hd/2) or (T, hd/2)."""
+    half = x.shape[-1] // 2
+    x1, x2 = x[..., :half], x[..., half:]
+    if cos.ndim == 2:
+        cos = cos[None, :, None, :]
+        sin = sin[None, :, None, :]
+    else:
+        cos = cos[:, :, None, :]
+        sin = sin[:, :, None, :]
+    return jnp.concatenate([x1 * cos - x2 * sin,
+                            x2 * cos + x1 * sin], axis=-1).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Param spec machinery
+
+
+class ParamSpec(dict):
+    """path → (shape tuple, dtype, logical axis tuple)."""
+
+
+def leaf(shape, axes, dtype=jnp.float32):
+    assert len(shape) == len(axes), (shape, axes)
+    return (tuple(shape), dtype, tuple(axes))
+
+
+def init_from_spec(spec: ParamSpec, key: jax.Array,
+                   dtype=jnp.float32) -> Params:
+    """Materialize params (smoke tests / real training).  Fan-in scaled
+    normal init."""
+    flat = {}
+    paths = sorted(spec.keys())
+    keys = jax.random.split(key, max(len(paths), 1))
+    for k, path in zip(keys, paths):
+        shape, _dt, _axes = spec[path]
+        if not shape or path.endswith("norm") or path.endswith("scale"):
+            flat[path] = jnp.ones(shape, dtype)
+        elif path.endswith("bias"):
+            flat[path] = jnp.zeros(shape, dtype)
+        else:
+            fan_in = shape[-2] if len(shape) >= 2 else shape[-1]
+            flat[path] = (jax.random.normal(k, shape, dtype)
+                          * (1.0 / jnp.sqrt(fan_in)))
+    return unflatten(flat)
+
+
+def abstract_from_spec(spec: ParamSpec, dtype=jnp.float32) -> Params:
+    """ShapeDtypeStruct pytree (dry-run: no allocation)."""
+    flat = {path: jax.ShapeDtypeStruct(shape, dtype)
+            for path, (shape, _dt, _axes) in spec.items()}
+    return unflatten(flat)
+
+
+def axes_from_spec(spec: ParamSpec) -> Params:
+    flat = {path: axes for path, (_s, _d, axes) in spec.items()}
+    return unflatten(flat)
+
+
+def unflatten(flat: dict[str, Any]) -> Params:
+    tree: dict = {}
+    for path, v in flat.items():
+        parts = path.split("/")
+        cur = tree
+        for p in parts[:-1]:
+            cur = cur.setdefault(p, {})
+        cur[parts[-1]] = v
+    return tree
+
+
+def flatten(tree: Params, prefix="") -> dict[str, Any]:
+    out = {}
+    for k, v in tree.items():
+        path = f"{prefix}/{k}" if prefix else k
+        if isinstance(v, dict):
+            out.update(flatten(v, path))
+        else:
+            out[path] = v
+    return out

@@ -1,0 +1,131 @@
+"""Mamba-1 selective SSM mixer (Jamba's sequence mixer, arXiv:2403.19887).
+
+TPU adaptation: the CUDA selective-scan kernel becomes a **chunked linear
+recurrence** — `lax.scan` over sequence chunks carrying state (B, d_inner, N)
+with `associative_scan` inside each chunk.  The (B, Lc, d_inner, N) working
+set is bounded by the chunk length and shards over `model` on d_inner, so
+VMEM/HBM stay bounded for 500k-token sequences (this is why Jamba runs the
+``long_500k`` cell).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from .layers import ParamSpec, leaf
+
+
+@dataclasses.dataclass(frozen=True)
+class MambaConfig:
+    d_model: int
+    d_state: int = 16
+    d_conv: int = 4
+    expand: int = 2
+    chunk: int = 128
+    scan_dtype: str = "float32"     # "bfloat16" halves SSM scan HBM traffic
+                                    # (state carry stays f32 across chunks)
+
+    @property
+    def d_inner(self) -> int:
+        return self.expand * self.d_model
+
+    @property
+    def dt_rank(self) -> int:
+        return -(-self.d_model // 16)
+
+
+def mamba_spec(cfg: MambaConfig, prefix: str) -> ParamSpec:
+    D, Di, N, R = cfg.d_model, cfg.d_inner, cfg.d_state, cfg.dt_rank
+    s = ParamSpec()
+    s[f"{prefix}/in_proj"] = leaf((D, 2 * Di), ("embed", "mlp"))
+    s[f"{prefix}/conv_w"] = leaf((cfg.d_conv, Di), (None, "mlp"))
+    s[f"{prefix}/conv_bias"] = leaf((Di,), ("mlp",))
+    s[f"{prefix}/x_proj"] = leaf((Di, R + 2 * N), ("mlp", None))
+    s[f"{prefix}/dt_proj"] = leaf((R, Di), (None, "mlp"))
+    s[f"{prefix}/dt_bias"] = leaf((Di,), ("mlp",))
+    s[f"{prefix}/A_log"] = leaf((Di, N), ("mlp", None))
+    s[f"{prefix}/D_skip"] = leaf((Di,), ("mlp",))
+    s[f"{prefix}/out_proj"] = leaf((Di, D), ("mlp", "embed"))
+    return s
+
+
+def _causal_conv(x, w, b, state=None):
+    """Depthwise causal conv, x: (B,L,Di), w: (K,Di).  With ``state``
+    (B,K-1,Di) (decode), prepends it and returns (out, new_state)."""
+    K = w.shape[0]
+    if state is None:
+        pad = jnp.zeros((x.shape[0], K - 1, x.shape[2]), x.dtype)
+    else:
+        pad = state.astype(x.dtype)
+    xp = jnp.concatenate([pad, x], axis=1)          # (B, L+K-1, Di)
+    out = sum(xp[:, k:k + x.shape[1], :] * w[k] for k in range(K)) + b
+    new_state = xp[:, -(K - 1):, :]
+    return out, new_state
+
+
+def _ssm_scan_chunked(a, b, h0, chunk):
+    """First-order recurrence h_t = a_t h_{t-1} + b_t over axis 1 of
+    (B, L, Di, N), carrying h0 (B, Di, N).  Returns (h_all, h_last)."""
+    B, L, Di, N = a.shape
+    nc = L // chunk
+
+    def op(l, r):
+        al, bl = l
+        ar, br = r
+        return al * ar, ar * bl + br
+
+    def step(h, ab):
+        ac, bc = ab                                   # (B, chunk, Di, N)
+        # fold carry into the first element
+        bc = bc.at[:, 0].add(ac[:, 0] * h)
+        aa, bb = jax.lax.associative_scan(op, (ac, bc), axis=1)
+        return bb[:, -1], bb
+
+    a_c = a.reshape(B, nc, chunk, Di, N).swapaxes(0, 1)
+    b_c = b.reshape(B, nc, chunk, Di, N).swapaxes(0, 1)
+    h_last, h_all = jax.lax.scan(step, h0, (a_c, b_c))
+    h_all = h_all.swapaxes(0, 1).reshape(B, L, Di, N)
+    return h_all, h_last
+
+
+def mamba_forward(params, cfg: MambaConfig, x, cache=None):
+    """x: (B, L, D).  Train/prefill: cache None.  Decode: cache =
+    (conv_state (B,K-1,Di), h (B,Di,N)), L == 1.
+
+    Returns (out (B,L,D), new_cache)."""
+    B, L, D = x.shape
+    Di, N, R = cfg.d_inner, cfg.d_state, cfg.dt_rank
+    xz = jnp.einsum("bld,de->ble", x, params["in_proj"])
+    xin, z = xz[..., :Di], xz[..., Di:]
+    conv_state = cache[0] if cache is not None else None
+    xc, new_conv = _causal_conv(xin, params["conv_w"], params["conv_bias"],
+                                conv_state)
+    xc = jax.nn.silu(xc)
+    dbl = jnp.einsum("bld,de->ble", xc, params["x_proj"])
+    dt = jax.nn.softplus(
+        jnp.einsum("blr,rd->bld", dbl[..., :R], params["dt_proj"])
+        + params["dt_bias"])                                  # (B,L,Di)
+    Bm = dbl[..., R:R + N]                                    # (B,L,N)
+    Cm = dbl[..., R + N:]                                     # (B,L,N)
+    A = -jnp.exp(params["A_log"].astype(jnp.float32))         # (Di,N)
+    sdt = jnp.bfloat16 if cfg.scan_dtype == "bfloat16" else jnp.float32
+    a = jnp.exp(dt.astype(jnp.float32)[..., None] * A).astype(sdt)
+    bmat = ((dt * xc).astype(jnp.float32)[..., None]
+            * Bm[:, :, None, :]).astype(sdt)                  # (B,L,Di,N)
+    h0 = cache[1].astype(sdt) if cache is not None else \
+        jnp.zeros((B, Di, N), sdt)
+    if L == 1:
+        h_last = a[:, 0] * h0 + bmat[:, 0]
+        h_all = h_last[:, None]
+    else:
+        chunk = min(cfg.chunk, L)
+        assert L % chunk == 0, (L, chunk)
+        h_all, h_last = _ssm_scan_chunked(a, bmat, h0, chunk)
+    y = jnp.einsum("blde,ble->bld", h_all, Cm.astype(sdt),
+                   preferred_element_type=jnp.float32)
+    y = y.astype(x.dtype) + params["D_skip"] * xc
+    y = y * jax.nn.silu(z)
+    out = jnp.einsum("bld,de->ble", y, params["out_proj"])
+    return out, (new_conv, h_last.astype(jnp.float32))

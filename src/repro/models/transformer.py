@@ -1,0 +1,300 @@
+"""Model assembly: embedding → (prelude layers) → scan over layer groups →
+(postlude layers) → final norm → logits.
+
+Heterogeneous stacking patterns (gemma3 5:1 local/global, jamba 1:7
+attn:mamba, xlstm sLSTM/mLSTM pairs) are expressed as a repeating *group* of
+LayerSpecs scanned ``n_groups`` times — one `lax.scan` keeps the HLO small
+(constant in depth) which bounds both compile time and code size on 512-way
+meshes.  Remat wraps the group body.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from . import attention as A
+from . import moe as M
+from . import ssm as S
+from . import xlstm as X
+from ..distributed.sharding import shard_activations, shard_logits
+from .layers import ParamSpec, flatten, leaf, rms_norm, swiglu, unflatten
+
+
+@dataclasses.dataclass(frozen=True)
+class LayerSpec:
+    mixer: str = "attn"        # attn | mla | mamba | mlstm | slstm
+    ffn: str = "dense"         # dense | moe | none
+    window: int | None = None  # sliding window for local attention
+
+
+# ---------------------------------------------------------------------------
+# Param specs
+
+
+def _layer_spec(cfg, ls: LayerSpec, prefix: str) -> ParamSpec:
+    s = ParamSpec()
+    D = cfg.d_model
+    s[f"{prefix}/ln1"] = leaf((D,), ("embed",))
+    if ls.mixer in ("attn", "mla"):
+        acfg = cfg.attn_config(ls)
+        sub = A.mla_spec(acfg, f"{prefix}/mixer") if ls.mixer == "mla" \
+            else A.gqa_spec(acfg, f"{prefix}/mixer")
+        s.update(sub)
+    elif ls.mixer == "mamba":
+        s.update(S.mamba_spec(cfg.mamba_config(), f"{prefix}/mixer"))
+    elif ls.mixer == "mlstm":
+        s.update(X.mlstm_spec(cfg.xlstm_config(), f"{prefix}/mixer"))
+    elif ls.mixer == "slstm":
+        s.update(X.slstm_spec(cfg.xlstm_config(), f"{prefix}/mixer"))
+    else:
+        raise ValueError(ls.mixer)
+    if ls.ffn != "none":
+        s[f"{prefix}/ln2"] = leaf((D,), ("embed",))
+    if ls.ffn == "dense":
+        F = cfg.d_ff
+        s[f"{prefix}/ffn/w_gate"] = leaf((D, F), ("embed", "mlp"))
+        s[f"{prefix}/ffn/w_up"] = leaf((D, F), ("embed", "mlp"))
+        s[f"{prefix}/ffn/w_down"] = leaf((F, D), ("mlp", "embed"))
+    elif ls.ffn == "moe":
+        s.update(M.moe_spec(cfg.moe_config(), f"{prefix}/ffn"))
+    return s
+
+
+def model_spec(cfg) -> ParamSpec:
+    s = ParamSpec()
+    D, V = cfg.d_model, cfg.vocab
+    if cfg.modality == "text":
+        s["embed"] = leaf((V, D), ("vocab", "embed"))
+    s["final_norm"] = leaf((D,), ("embed",))
+    s["unembed"] = leaf((D, V), ("embed", "vocab"))
+    for i, ls in enumerate(cfg.prelude):
+        s.update(_layer_spec(cfg, ls, f"prelude_{i}"))
+    for i, ls in enumerate(cfg.postlude):
+        s.update(_layer_spec(cfg, ls, f"postlude_{i}"))
+    if cfg.n_groups:
+        gs = ParamSpec()
+        for i, ls in enumerate(cfg.group):
+            gs.update(_layer_spec(cfg, ls, f"g{i}"))
+        for path, (shape, dt, axes) in gs.items():
+            s[f"group/{path}"] = ((cfg.n_groups,) + shape, dt,
+                                  ("layers",) + axes)
+    return s
+
+
+# ---------------------------------------------------------------------------
+# Caches
+
+
+def _layer_cache_shape(cfg, ls: LayerSpec, B: int, S: int, dtype):
+    """ShapeDtypeStructs for one layer's decode cache."""
+    D = cfg.d_model
+    if ls.mixer == "attn":
+        a = cfg.attn_config(ls)
+        kv = jax.ShapeDtypeStruct((B, S, a.n_kv_heads, a.head_dim), dtype)
+        return (kv, kv)
+    if ls.mixer == "mla":
+        a = cfg.attn_config(ls)
+        return (jax.ShapeDtypeStruct((B, S, a.kv_lora_rank), dtype),
+                jax.ShapeDtypeStruct((B, S, a.qk_rope_dim), dtype))
+    if ls.mixer == "mamba":
+        mc = cfg.mamba_config()
+        return (jax.ShapeDtypeStruct((B, mc.d_conv - 1, mc.d_inner), dtype),
+                jax.ShapeDtypeStruct((B, mc.d_inner, mc.d_state), jnp.float32))
+    if ls.mixer == "mlstm":
+        xc = cfg.xlstm_config()
+        return (jax.ShapeDtypeStruct((B, xc.n_heads, xc.head_dim,
+                                      xc.head_dim), jnp.float32),
+                jax.ShapeDtypeStruct((B, xc.n_heads, xc.head_dim), jnp.float32))
+    if ls.mixer == "slstm":
+        xc = cfg.xlstm_config()
+        hd = cfg.d_model // xc.n_heads
+        st = jax.ShapeDtypeStruct((B, xc.n_heads, hd), jnp.float32)
+        return (st, st, st)
+    raise ValueError(ls.mixer)
+
+
+def cache_shapes(cfg, B: int, S: int, dtype=jnp.bfloat16):
+    """Cache pytree of ShapeDtypeStructs: {'prelude': [...], 'group': pytree
+    with leading (n_groups,), 'postlude': [...]}."""
+    out: dict[str, Any] = {
+        "prelude": [_layer_cache_shape(cfg, ls, B, S, dtype)
+                    for ls in cfg.prelude],
+        "postlude": [_layer_cache_shape(cfg, ls, B, S, dtype)
+                     for ls in cfg.postlude],
+    }
+    if cfg.n_groups:
+        glayer = [_layer_cache_shape(cfg, ls, B, S, dtype) for ls in cfg.group]
+        out["group"] = jax.tree.map(
+            lambda sd: jax.ShapeDtypeStruct((cfg.n_groups,) + sd.shape,
+                                            sd.dtype), tuple(glayer))
+    else:
+        out["group"] = ()
+    return out
+
+
+def _layer_cache_init(cfg, ls: LayerSpec, B: int, S: int, dtype):
+    shapes = _layer_cache_shape(cfg, ls, B, S, dtype)
+    vals = jax.tree.map(lambda sd: jnp.zeros(sd.shape, sd.dtype), shapes)
+    if ls.mixer == "slstm":
+        c, n, h = vals
+        vals = (c, jnp.ones_like(n), h)   # sLSTM normalizer starts at 1
+    return vals
+
+
+def init_cache(cfg, B: int, S: int, dtype=jnp.bfloat16):
+    out: dict[str, Any] = {
+        "prelude": [_layer_cache_init(cfg, ls, B, S, dtype)
+                    for ls in cfg.prelude],
+        "postlude": [_layer_cache_init(cfg, ls, B, S, dtype)
+                     for ls in cfg.postlude],
+    }
+    if cfg.n_groups:
+        glayer = [_layer_cache_init(cfg, ls, B, S, dtype) for ls in cfg.group]
+        out["group"] = jax.tree.map(
+            lambda v: jnp.broadcast_to(v, (cfg.n_groups,) + v.shape).copy(),
+            tuple(glayer))
+    else:
+        out["group"] = ()
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Forward
+
+
+def _layer_forward(lp, cfg, ls: LayerSpec, x, positions, cache, cache_len):
+    """One block: norm→mixer→residual (→norm→ffn→residual)."""
+    aux = jnp.zeros((), jnp.float32)
+    h = rms_norm(x, lp["ln1"], cfg.norm_eps)
+    if ls.mixer == "attn":
+        out, new_cache = A.gqa_forward(lp["mixer"], cfg.attn_config(ls), h,
+                                       positions, cache, cache_len)
+        out = A.gqa_out(lp["mixer"], out)
+    elif ls.mixer == "mla":
+        out, new_cache = A.mla_forward(lp["mixer"], cfg.attn_config(ls), h,
+                                       positions, cache, cache_len)
+    elif ls.mixer == "mamba":
+        out, new_cache = S.mamba_forward(lp["mixer"], cfg.mamba_config(), h,
+                                         cache)
+    elif ls.mixer == "mlstm":
+        out, new_cache = X.mlstm_forward(lp["mixer"], cfg.xlstm_config(), h,
+                                         cache)
+    elif ls.mixer == "slstm":
+        out, new_cache = X.slstm_forward(lp["mixer"], cfg.xlstm_config(), h,
+                                         cache)
+    else:
+        raise ValueError(ls.mixer)
+    x = x + out
+    if ls.ffn == "dense":
+        h = rms_norm(x, lp["ln2"], cfg.norm_eps)
+        x = x + swiglu(h, lp["ffn"]["w_gate"], lp["ffn"]["w_up"],
+                       lp["ffn"]["w_down"])
+    elif ls.ffn == "moe":
+        h = rms_norm(x, lp["ln2"], cfg.norm_eps)
+        out, aux = M.moe_forward(lp["ffn"], cfg.moe_config(), h)
+        x = x + out
+    return x, new_cache, aux
+
+
+def forward(params, cfg, inputs: dict, mode: str = "train",
+            cache=None, cache_len=None):
+    """Full model forward.
+
+    inputs: {"tokens": (B,T) int32} or {"embeds": (B,T,D)} (modality stub),
+    optional {"positions": (B,T)}.
+    mode: "train" (no cache IO) | "prefill" (build cache) | "decode"
+    (consume+update cache; T is the new-token count, usually 1).
+
+    Returns (logits (B,T,V), new_cache|None, aux_loss)."""
+    # compute-dtype policy: matrices cast to activation dtype (master f32
+    # weights live in the optimizer); 1-D scales/biases stay f32 for norms.
+    params = jax.tree.map(
+        lambda p: p.astype(cfg.activation_dtype)
+        if (hasattr(p, "ndim") and p.ndim >= 2) else p, params)
+    if cfg.modality == "text":
+        tokens = inputs["tokens"]
+        x = params["embed"][tokens].astype(cfg.activation_dtype)
+        if cfg.embed_scale:
+            x = x * jnp.sqrt(float(cfg.d_model)).astype(x.dtype)
+    else:
+        x = inputs["embeds"].astype(cfg.activation_dtype)
+    x = shard_activations(x)   # pin batch-over-data after the embed gather
+    B, T = x.shape[:2]
+    if mode == "decode":
+        positions = cache_len[:, None] + jnp.arange(T)[None, :]   # (B,T)
+    else:
+        positions = inputs.get("positions", jnp.arange(T))
+    aux_total = jnp.zeros((), jnp.float32)
+    use_cache = mode != "train"
+
+    new_prelude, new_postlude = [], []
+    for i, ls in enumerate(cfg.prelude):
+        c = cache["prelude"][i] if (cache is not None) else None
+        x, nc, aux = _layer_forward(params[f"prelude_{i}"], cfg, ls, x,
+                                    positions, c, cache_len)
+        aux_total += aux
+        new_prelude.append(nc if use_cache else None)
+
+    if cfg.n_groups:
+        gparams = params["group"]
+
+        # per-layer remat inside multi-layer groups: without it the whole
+        # group (e.g. jamba's 8 layers) is recomputed as one block during
+        # backward, so all 8 layers' intermediates are live at once
+        per_layer_ckpt = (cfg.remat and mode == "train" and len(cfg.group) > 1)
+
+        def group_body(carry, xs):
+            xc, aux_c = carry
+            gp_flat, gcache = xs
+            gp = unflatten(gp_flat)
+            xc = shard_activations(xc)
+            new_caches = []
+            for i, ls in enumerate(cfg.group):
+                c = gcache[i] if gcache is not None else None
+                lf = _layer_forward
+                if per_layer_ckpt:
+                    lf = jax.checkpoint(
+                        _layer_forward, static_argnums=(1, 2),
+                        policy=jax.checkpoint_policies.nothing_saveable)
+                xc, nc, aux = lf(gp[f"g{i}"], cfg, ls, xc,
+                                 positions, c, cache_len)
+                aux_c = aux_c + aux
+                new_caches.append(nc if use_cache else jnp.zeros((), jnp.float32))
+            return (xc, aux_c), tuple(new_caches)
+
+        body = group_body
+        if cfg.remat and mode == "train" and not per_layer_ckpt:
+            # single-layer groups: remat the whole body.  Multi-layer groups
+            # use per-layer checkpoints instead — wrapping both would
+            # recompute inner layers twice (3× forward collectives).
+            body = jax.checkpoint(group_body,
+                                  policy=jax.checkpoint_policies.nothing_saveable)
+        gp_flat = flatten(gparams)
+        gcache_xs = cache["group"] if cache is not None else None
+        xs = (gp_flat, gcache_xs) if gcache_xs is not None else (gp_flat, None)
+        if gcache_xs is None:
+            (x, aux_total), group_caches = jax.lax.scan(
+                lambda c, gp: body(c, (gp, None)), (x, aux_total), gp_flat)
+        else:
+            (x, aux_total), group_caches = jax.lax.scan(
+                body, (x, aux_total), (gp_flat, gcache_xs))
+    else:
+        group_caches = ()
+
+    for i, ls in enumerate(cfg.postlude):
+        c = cache["postlude"][i] if cache is not None else None
+        x, nc, aux = _layer_forward(params[f"postlude_{i}"], cfg, ls, x,
+                                    positions, c, cache_len)
+        aux_total += aux
+        new_postlude.append(nc if use_cache else None)
+
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = shard_logits(jnp.einsum("btd,dv->btv", x, params["unembed"]))
+    new_cache = None
+    if use_cache:
+        new_cache = {"prelude": new_prelude, "group": group_caches,
+                     "postlude": new_postlude}
+    return logits, new_cache, aux_total

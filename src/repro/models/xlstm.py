@@ -1,0 +1,267 @@
+"""xLSTM mixers (arXiv:2405.04517): mLSTM (matrix memory, parallelizable)
+and sLSTM (scalar memory, sequential), alternating blocks.
+
+TPU adaptation: mLSTM's recurrence is computed **chunkwise** (GLA-style):
+within a chunk the output is an attention-like quadratic form with
+cumulative-decay weights; across chunks a (B, H, hd, hd) matrix state and a
+(B, H, hd) normalizer carry.  sLSTM is inherently sequential (the paper says
+so) and runs as a `lax.scan` of per-step cell updates — its state is O(B·D),
+which is what makes the ``long_500k`` decode cell O(1) in sequence length.
+
+Stabilization: we use sigmoid forget gates and sigmoid input gates (bounded)
+instead of the paper's exp-with-max-stabilizer; DESIGN.md records this
+deviation (the exp/m-stabilizer variant adds a running-max carry with
+identical structure).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from .layers import ParamSpec, leaf, rms_norm
+
+
+@dataclasses.dataclass(frozen=True)
+class XLSTMConfig:
+    d_model: int
+    n_heads: int
+    proj_factor: float = 2.0
+    chunk: int = 128
+
+    @property
+    def d_inner(self) -> int:
+        return int(self.proj_factor * self.d_model)
+
+    @property
+    def head_dim(self) -> int:
+        return self.d_inner // self.n_heads
+
+
+# ---------------------------------------------------------------------------
+# mLSTM
+
+
+def mlstm_spec(cfg: XLSTMConfig, prefix: str) -> ParamSpec:
+    D, Di, H, hd = cfg.d_model, cfg.d_inner, cfg.n_heads, cfg.head_dim
+    s = ParamSpec()
+    s[f"{prefix}/up"] = leaf((D, 2 * Di), ("embed", "mlp"))
+    s[f"{prefix}/wq"] = leaf((Di, H, hd), ("mlp", "heads", None))
+    s[f"{prefix}/wk"] = leaf((Di, H, hd), ("mlp", "heads", None))
+    s[f"{prefix}/wv"] = leaf((Di, H, hd), ("mlp", "heads", None))
+    s[f"{prefix}/w_if"] = leaf((Di, 2 * H), ("mlp", None))
+    s[f"{prefix}/norm"] = leaf((Di,), ("mlp",))
+    s[f"{prefix}/down"] = leaf((Di, D), ("mlp", "embed"))
+    return s
+
+
+def _mlstm_chunk(q, k, v, log_f, i_gate, C0, n0):
+    """One chunk.  q,k,v: (B,Lc,H,hd); log_f,i_gate: (B,Lc,H);
+    C0: (B,H,hd,hd); n0: (B,H,hd).  Returns (h, C1, n1)."""
+    B, Lc, H, hd = q.shape
+    cum = jnp.cumsum(log_f, axis=1)                  # log Π_{τ≤t} f_τ
+    d_t = jnp.exp(cum)                               # (B,Lc,H)
+    # intra-chunk: W[t,s] = exp(cum_t - cum_s) · i_s · causal(t≥s)
+    w_log = cum[:, :, None, :] - cum[:, None, :, :]  # (B,t,s,H)
+    causal = (jnp.arange(Lc)[:, None] >= jnp.arange(Lc)[None, :])
+    w = jnp.exp(jnp.where(causal[None, :, :, None], w_log, -jnp.inf))
+    w = w * i_gate[:, None, :, :]                    # (B,t,s,H)
+    scores = jnp.einsum("bthd,bshd->btsh", q, k) / jnp.sqrt(float(hd))
+    num_intra = jnp.einsum("btsh,btsh,bshd->bthd", scores, w, v)
+    # inter-chunk from carry
+    num_inter = d_t[..., None] * jnp.einsum("bthd,bhde->bthe", q, C0) \
+        / jnp.sqrt(float(hd))
+    num = num_intra + num_inter
+    # normalizer n_t = d_t n0 + Σ_{s≤t} (d_t/d_s) i_s k_s
+    n_intra = jnp.einsum("btsh,bshd->bthd", w, k)
+    n_t = d_t[..., None] * n0[:, None] + n_intra
+    den = jnp.maximum(jnp.abs(jnp.einsum("bthd,bthd->bth", q, n_t))
+                      / jnp.sqrt(float(hd)), 1.0)
+    h = num / den[..., None]
+    # carry updates
+    d_end = jnp.exp(cum[:, -1])                       # (B,H)
+    rel = jnp.exp(cum[:, -1][:, None, :] - cum) * i_gate   # (B,Lc,H)
+    C1 = d_end[..., None, None] * C0 + jnp.einsum("blh,blhd,blhe->bhde",
+                                                  rel, k, v)
+    n1 = d_end[..., None] * n0 + jnp.einsum("blh,blhd->bhd", rel, k)
+    return h, C1, n1
+
+
+def mlstm_forward(params, cfg: XLSTMConfig, x, cache=None):
+    """x: (B,L,D) → (out, cache=(C, n)).  Decode: L==1 single-step update."""
+    B, L, D = x.shape
+    Di, H, hd = cfg.d_inner, cfg.n_heads, cfg.head_dim
+    up = jnp.einsum("bld,de->ble", x, params["up"])
+    xm, z = up[..., :Di], up[..., Di:]
+    q = jnp.einsum("ble,ehd->blhd", xm, params["wq"])
+    k = jnp.einsum("ble,ehd->blhd", xm, params["wk"])
+    v = jnp.einsum("ble,ehd->blhd", xm, params["wv"])
+    gates = jnp.einsum("ble,eh->blh", xm, params["w_if"])
+    i_gate = jax.nn.sigmoid(gates[..., :H]).astype(jnp.float32)
+    log_f = jnp.log(jax.nn.sigmoid(gates[..., H:]).astype(jnp.float32) + 1e-6)
+    qf, kf, vf = (t.astype(jnp.float32) for t in (q, k, v))
+    if cache is not None:
+        C0, n0 = cache
+    else:
+        C0 = jnp.zeros((B, H, hd, hd), jnp.float32)
+        n0 = jnp.zeros((B, H, hd), jnp.float32)
+    if L == 1:
+        h, C1, n1 = _mlstm_chunk(qf, kf, vf, log_f, i_gate, C0, n0)
+    else:
+        chunk = min(cfg.chunk, L)
+        assert L % chunk == 0
+        nc = L // chunk
+
+        def step(carry, inp):
+            C, n = carry
+            qc, kc, vc, lf, ig = inp
+            h, C, n = _mlstm_chunk(qc, kc, vc, lf, ig, C, n)
+            return (C, n), h
+
+        def split(t):
+            return t.reshape(B, nc, chunk, *t.shape[2:]).swapaxes(0, 1)
+
+        (C1, n1), hs = jax.lax.scan(
+            step, (C0, n0), (split(qf), split(kf), split(vf),
+                             split(log_f), split(i_gate)))
+        h = hs.swapaxes(0, 1).reshape(B, L, H, hd)
+    h = h.reshape(B, L, Di).astype(x.dtype)
+    h = rms_norm(h, params["norm"])
+    out = jnp.einsum("ble,ed->bld", h * jax.nn.silu(z), params["down"])
+    return out, (C1, n1)
+
+
+# ---------------------------------------------------------------------------
+# sLSTM
+
+
+def slstm_spec(cfg: XLSTMConfig, prefix: str) -> ParamSpec:
+    D, H, hd = cfg.d_model, cfg.n_heads, cfg.d_model // cfg.n_heads
+    s = ParamSpec()
+    # 4 gates (z, i, f, o): input weights + per-head recurrent weights
+    s[f"{prefix}/w_gates"] = leaf((D, 4, H, hd), ("embed", None, "heads", None))
+    s[f"{prefix}/r_gates"] = leaf((4, H, hd, hd), (None, "heads", None, None))
+    s[f"{prefix}/b_gates"] = leaf((4, H, hd), (None, "heads", None))
+    s[f"{prefix}/norm"] = leaf((D,), ("embed",))
+    s[f"{prefix}/down"] = leaf((D, D), ("embed", "embed2"))
+    return s
+
+
+def _slstm_cell(carry, wx_t, R, bias):
+    c, n, h = carry
+    rec = jnp.einsum("bhe,ghef->bghf", h, R)               # (B,4,H,hd)
+    pre = wx_t.astype(jnp.float32) + rec + bias
+    z = jnp.tanh(pre[:, 0])
+    i = jax.nn.sigmoid(pre[:, 1])
+    f = jax.nn.sigmoid(pre[:, 2])
+    o = jax.nn.sigmoid(pre[:, 3])
+    c = f * c + i * z
+    n = f * n + i
+    h = o * (c / jnp.maximum(n, 1e-6))
+    return (c, n, h), (h, pre)
+
+
+@jax.custom_vjp
+def _slstm_scan(wx, R, bias, c0, n0, h0):
+    """Sequential sLSTM over time with a hand-written backward.
+
+    The automatic VJP of the scan accumulates dR/dbias in the carry, whose
+    data-sharded-batch contraction makes GSPMD emit a psum over `data` at
+    EVERY timestep (≈200 GB/step at 4k seq — §Perf xlstm iteration).  The
+    custom backward stacks per-step dpre instead and reduces the weight
+    grads in ONE einsum after the reverse scan."""
+    (c1, n1, h1), (hs, _pres) = jax.lax.scan(
+        lambda carry, wx_t: _slstm_cell(carry, wx_t, R, bias),
+        (c0, n0, h0), wx)
+    return hs, c1, n1, h1
+
+
+def _slstm_fwd(wx, R, bias, c0, n0, h0):
+    (c1, n1, h1), (hs, pres) = jax.lax.scan(
+        lambda carry, wx_t: _slstm_cell(carry, wx_t, R, bias),
+        (c0, n0, h0), wx)
+    # save h-sequence and pre-activations; states are recomputed backwards
+    return (hs, c1, n1, h1), (wx, R, bias, c0, n0, h0, hs, pres)
+
+
+def _slstm_bwd(res, grads):
+    wx, R, bias, c0, n0, h0, hs, pres = res
+    dhs, dc1, dn1, dh1 = grads
+    L = wx.shape[0]
+    h_prev = jnp.concatenate([h0[None], hs[:-1]], axis=0)     # (L,B,H,hd)
+
+    # recompute c/n sequences forward (cheap elementwise) for the backward
+    def cn_step(carry, pre):
+        c, n = carry
+        z = jnp.tanh(pre[:, 0])
+        i = jax.nn.sigmoid(pre[:, 1])
+        f = jax.nn.sigmoid(pre[:, 2])
+        c1 = f * c + i * z
+        n1 = f * n + i
+        return (c1, n1), (c, n)                                # prev states
+    (_cl, _nl), (c_prev, n_prev) = jax.lax.scan(cn_step, (c0, n0), pres)
+
+    def bwd_step(carry, inp):
+        dc, dn, dh = carry
+        pre, cp, np_, dh_out = inp
+        z = jnp.tanh(pre[:, 0])
+        i = jax.nn.sigmoid(pre[:, 1])
+        f = jax.nn.sigmoid(pre[:, 2])
+        o = jax.nn.sigmoid(pre[:, 3])
+        c = f * cp + i * z
+        n = f * np_ + i
+        nmax = jnp.maximum(n, 1e-6)
+        dh_t = dh + dh_out
+        do = dh_t * (c / nmax)
+        dc_t = dc + dh_t * o / nmax
+        dn_t = dn - dh_t * o * c / (nmax * nmax) * (n > 1e-6)
+        dz = dc_t * i
+        di = dc_t * z + dn_t
+        df = dc_t * cp + dn_t * np_
+        dpre = jnp.stack([
+            dz * (1 - z * z),
+            di * i * (1 - i),
+            df * f * (1 - f),
+            do * o * (1 - o),
+        ], axis=1)                                             # (B,4,H,hd)
+        # grads to previous step
+        dc_p = dc_t * f
+        dn_p = dn_t * f
+        dh_p = jnp.einsum("bghf,ghef->bhe", dpre, R)
+        return (dc_p, dn_p, dh_p), dpre
+
+    (dc0, dn0, dh0), dpres = jax.lax.scan(
+        bwd_step, (dc1, dn1, dh1),
+        (pres, c_prev, n_prev, dhs), reverse=True)
+    # weight grads in ONE contraction each (outside the loop — the point)
+    dR = jnp.einsum("lbghf,lbhe->ghef", dpres, h_prev)
+    dbias = jnp.sum(dpres, axis=(0, 1))
+    dwx = dpres.astype(wx.dtype)
+    return dwx, dR, dbias, dc0, dn0, dh0
+
+
+_slstm_scan.defvjp(_slstm_fwd, _slstm_bwd)
+
+
+def slstm_forward(params, cfg: XLSTMConfig, x, cache=None):
+    """Sequential sLSTM.  x: (B,L,D) → (out, cache=(c,n,h)).  States are
+    (B,H,hd) each — O(1) in sequence length."""
+    B, L, D = x.shape
+    H = cfg.n_heads
+    hd = D // H
+    wx = jnp.einsum("bld,dghe->blghe", x, params["w_gates"])   # (B,L,4,H,hd)
+    if cache is not None:
+        c0, n0, h0 = cache
+    else:
+        c0 = jnp.zeros((B, H, hd), jnp.float32)
+        n0 = jnp.ones((B, H, hd), jnp.float32)
+        h0 = jnp.zeros((B, H, hd), jnp.float32)
+
+    R = params["r_gates"].astype(jnp.float32)
+    bias = params["b_gates"].astype(jnp.float32)
+    hs, c1, n1, h1 = _slstm_scan(wx.swapaxes(0, 1), R, bias, c0, n0, h0)
+    h = hs.swapaxes(0, 1).reshape(B, L, D).astype(x.dtype)
+    h = rms_norm(h, params["norm"])
+    out = jnp.einsum("bld,de->ble", h, params["down"])
+    return out, (c1, n1, h1)

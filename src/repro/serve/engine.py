@@ -1,0 +1,144 @@
+"""Serving: prefill + batched decode with static-shape KV caches.
+
+``make_prefill_step``/``make_serve_step`` are the functions the dry-run
+lowers for the ``prefill_*`` and ``decode_*``/``long_*`` shapes.  The Engine
+class runs real batched generation (smoke-scale on CPU): continuous batching
+over a fixed slot grid, per-slot cache lengths, greedy or temperature
+sampling.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from ..models.transformer import forward, init_cache
+
+
+def make_prefill_step(cfg):
+    """prefill(params, inputs) → (last_logits (B,V), cache, cache_len)."""
+
+    def prefill_step(params, inputs):
+        logits, cache, _ = forward(params, cfg, inputs, mode="prefill")
+        B = logits.shape[0]
+        T = logits.shape[1]
+        cache_len = jnp.full((B,), T, jnp.int32)
+        return logits[:, -1], cache, cache_len
+
+    return prefill_step
+
+
+def make_serve_step(cfg):
+    """decode(params, inputs{tokens/embeds, cache, cache_len}) →
+    (logits (B,1,V), new_cache, new_cache_len).  One new token against the
+    existing cache — the function lowered for decode_32k / long_500k."""
+
+    def serve_step(params, inputs):
+        cache = inputs["cache"]
+        cache_len = inputs["cache_len"]
+        feed = {k: v for k, v in inputs.items()
+                if k not in ("cache", "cache_len")}
+        logits, new_cache, _ = forward(params, cfg, feed, mode="decode",
+                                       cache=cache, cache_len=cache_len)
+        return logits, new_cache, cache_len + 1
+
+    return serve_step
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt: Any                  # (T,) tokens or (T,D) embeds
+    max_new: int = 16
+    out_tokens: list = dataclasses.field(default_factory=list)
+    done: bool = False
+
+
+class Engine:
+    """Slot-based continuous batching engine (CPU/smoke scale)."""
+
+    def __init__(self, cfg, params, max_batch: int = 4, max_seq: int = 128,
+                 temperature: float = 0.0, seed: int = 0):
+        self.cfg = cfg
+        self.params = params
+        self.B = max_batch
+        self.S = max_seq
+        self.temperature = temperature
+        self.key = jax.random.PRNGKey(seed)
+        self.cache = init_cache(cfg, self.B, self.S,
+                                jnp.float32 if cfg.activation_dtype == jnp.float32
+                                else jnp.bfloat16)
+        self.cache_len = jnp.zeros((self.B,), jnp.int32)
+        self.slots: list[Request | None] = [None] * self.B
+        self.decode = jax.jit(make_serve_step(cfg))
+        self.queue: list[Request] = []
+
+    def submit(self, req: Request):
+        self.queue.append(req)
+
+    def _admit(self):
+        for i in range(self.B):
+            if self.slots[i] is None and self.queue:
+                req = self.queue.pop(0)
+                self.slots[i] = req
+                # sequential prefill into slot i (simple; batch-prefill is a
+                # straightforward extension)
+                prompt = jnp.asarray(req.prompt)
+                for t in range(prompt.shape[0]):
+                    feed = {"tokens": prompt[None, t:t + 1]} \
+                        if self.cfg.modality == "text" else \
+                        {"embeds": prompt[None, t:t + 1]}
+                    self._step_slot(i, feed)
+
+    def _step_slot(self, slot: int, feed):
+        """Single-slot decode via masked batch step (smoke-scale)."""
+        full = self._broadcast_feed(feed, slot)
+        logits, new_cache, new_len = self.decode(
+            self.params, {**full, "cache": self.cache,
+                          "cache_len": self.cache_len})
+        # only commit the targeted slot's cache rows
+        self.cache = jax.tree.map(
+            lambda old, new: old.at[slot].set(new[slot]), self.cache,
+            new_cache)
+        self.cache_len = self.cache_len.at[slot].set(new_len[slot])
+        return logits[slot, 0]
+
+    def _broadcast_feed(self, feed, slot):
+        out = {}
+        for k, v in feed.items():
+            full = jnp.zeros((self.B,) + v.shape[1:], v.dtype)
+            out[k] = full.at[slot].set(v[0])
+        return out
+
+    def _sample(self, logits):
+        if self.temperature <= 0:
+            return int(jnp.argmax(logits))
+        self.key, sub = jax.random.split(self.key)
+        return int(jax.random.categorical(sub, logits / self.temperature))
+
+    def run(self, max_steps: int = 64) -> list[Request]:
+        finished = []
+        for _ in range(max_steps):
+            self._admit()
+            active = [i for i, r in enumerate(self.slots) if r is not None]
+            if not active and not self.queue:
+                break
+            for i in active:
+                req = self.slots[i]
+                last = int(req.out_tokens[-1]) if req.out_tokens else 0
+                feed = {"tokens": jnp.asarray([[last]], jnp.int32)} \
+                    if self.cfg.modality == "text" else \
+                    {"embeds": jnp.zeros((1, 1, self.cfg.d_model),
+                                         jnp.float32)}
+                logits = self._step_slot(i, feed)
+                tok = self._sample(logits)
+                req.out_tokens.append(tok)
+                if len(req.out_tokens) >= req.max_new or \
+                        int(self.cache_len[i]) >= self.S - 1:
+                    req.done = True
+                    finished.append(req)
+                    self.slots[i] = None
+                    self.cache_len = self.cache_len.at[i].set(0)
+        return finished

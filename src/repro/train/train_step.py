@@ -1,0 +1,136 @@
+"""Loss + train step.
+
+Cross-entropy keeps logits **vocab-sharded** (model axis): logsumexp reduces
+over the sharded vocab dim with partial sums (GSPMD inserts one small
+all-reduce of (B,S) instead of gathering (B,S,V)), and the label logit is a
+fused one-hot contraction — the naive gather over a sharded vocab dim would
+all-to-all.  ``loss_mode="gather_logits"`` keeps the naive version as the
+paper-faithful lazy-framework baseline for §Perf.
+
+Grad accumulation is a `lax.scan` over microbatches so XLA overlaps each
+microbatch's reduce-scatter with the next one's compute.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from ..models.transformer import forward
+from .optim import OptimConfig, adamw_update
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainConfig:
+    optim: OptimConfig = dataclasses.field(default_factory=OptimConfig)
+    microbatches: int = 1
+    aux_weight: float = 0.01
+    loss_mode: str = "sharded_vocab"    # sharded_vocab | gather_logits
+    compress_pod_grads: bool = False
+    z_loss: float = 0.0
+
+
+def cross_entropy(logits: jax.Array, labels: jax.Array,
+                  mode: str = "sharded_vocab", z_loss: float = 0.0):
+    """logits (B,T,V) f32-accurate CE; labels (B,T) int32; -100 → masked."""
+    mask = labels >= 0
+    safe = jnp.where(mask, labels, 0)
+    logits = logits.astype(jnp.float32)
+    if mode == "gather_logits":
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        lab = jnp.take_along_axis(logits, safe[..., None], axis=-1)[..., 0]
+    else:
+        # vocab-sharded-friendly: partial max/sum over V fuse with the matmul
+        from ..distributed.sharding import shard_logits
+        m = jnp.max(logits, axis=-1)
+        lse = m + jnp.log(jnp.sum(jnp.exp(logits - m[..., None]), axis=-1))
+        # one-hot must be pinned to the logits' vocab sharding, else GSPMD
+        # materializes it V-replicated (33 GB/device at V=128k!)
+        onehot = shard_logits(jax.nn.one_hot(safe, logits.shape[-1],
+                                             dtype=jnp.bfloat16))
+        lab = jnp.sum(logits * onehot.astype(jnp.float32), axis=-1)
+    nll = (lse - lab) * mask
+    loss = jnp.sum(nll) / jnp.maximum(jnp.sum(mask), 1)
+    if z_loss:
+        loss = loss + z_loss * jnp.sum(jnp.square(lse) * mask) \
+            / jnp.maximum(jnp.sum(mask), 1)
+    return loss
+
+
+def loss_fn(params, cfg, batch: dict, tcfg: TrainConfig):
+    inputs = {k: v for k, v in batch.items() if k != "labels"}
+    logits, _, aux = forward(params, cfg, inputs, mode="train")
+    ce = cross_entropy(logits, batch["labels"], tcfg.loss_mode, tcfg.z_loss)
+    return ce + tcfg.aux_weight * aux, {"ce": ce, "aux": aux}
+
+
+def make_train_step(cfg, tcfg: TrainConfig, grad_shardings=None):
+    """Returns train_step(state, batch) -> (state, metrics).
+
+    state = {"params", "opt", "residuals"?}.  Microbatching splits the batch
+    on dim 0 and scans, accumulating grads in f32.
+
+    ``grad_shardings`` (a pytree of NamedSharding matching params) pins each
+    gradient to its parameter's FSDP×TP sharding — without it GSPMD
+    all-reduces full-size gradients over the data axis (52 B params → 208
+    GB/step on jamba) instead of reduce-scattering to the shards (§Perf
+    iteration 1)."""
+
+    def _constrain_grads(grads):
+        if grad_shardings is None:
+            return grads
+        return jax.tree.map(jax.lax.with_sharding_constraint, grads,
+                            grad_shardings)
+
+    def grads_of(params, batch):
+        (loss, parts), grads = jax.value_and_grad(
+            loss_fn, has_aux=True)(params, cfg, batch, tcfg)
+        return loss, parts, _constrain_grads(grads)
+
+    def train_step(state, batch):
+        params = state["params"]
+        if tcfg.microbatches > 1:
+            def split(x):
+                B = x.shape[0]
+                mb = tcfg.microbatches
+                return x.reshape(mb, B // mb, *x.shape[1:])
+            micro = jax.tree.map(split, batch)
+
+            def body(acc, mb):
+                loss, parts, grads = grads_of(params, mb)
+                acc = jax.tree.map(jnp.add, acc,
+                                   jax.tree.map(lambda g:
+                                                g.astype(jnp.float32), grads))
+                return acc, loss
+            zero = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            gsum, losses = jax.lax.scan(body, zero, micro)
+            grads = jax.tree.map(lambda g: g / tcfg.microbatches, gsum)
+            loss = jnp.mean(losses)
+        else:
+            loss, parts, grads = grads_of(params, batch)
+
+        if tcfg.compress_pod_grads:
+            from ..distributed.compression import compress_tree
+            grads, new_res = compress_tree(grads, state.get("residuals"))
+        else:
+            new_res = state.get("residuals")
+
+        new_params, new_opt, om = adamw_update(tcfg.optim, params, grads,
+                                               state["opt"])
+        metrics = {"loss": loss, **om}
+        new_state = {"params": new_params, "opt": new_opt}
+        if new_res is not None:
+            new_state["residuals"] = new_res
+        return new_state, metrics
+
+    return train_step
+
+
+def make_eval_step(cfg, tcfg: TrainConfig):
+    def eval_step(params, batch):
+        loss, parts = loss_fn(params, cfg, batch, tcfg)
+        return {"loss": loss, **parts}
+    return eval_step

@@ -1,0 +1,34 @@
+import numpy as np
+import pytest
+
+from repro.core.context import get_context
+
+
+@pytest.fixture(autouse=True)
+def fresh_context():
+    """Each test gets a clean LaFP context (backend, sinks, caches)."""
+    get_context().reset()
+    yield
+    get_context().reset()
+
+
+@pytest.fixture
+def rng():
+    return np.random.default_rng(0)
+
+
+def make_taxi_arrays(rng, n=20_000):
+    """Taxi-like frame used across tests (paper's running example)."""
+    return {
+        "fare_amount": rng.uniform(-5, 100, n),
+        "passenger_count": rng.integers(0, 7, n).astype(np.int64),
+        "pickup_datetime": rng.integers(1_600_000_000, 1_610_000_000, n),
+        "trip_miles": rng.uniform(0, 30, n),
+        "unused_a": rng.uniform(0, 1, n),
+        "unused_b": rng.integers(0, 9, n).astype(np.int64),
+    }
+
+
+@pytest.fixture
+def taxi_arrays(rng):
+    return make_taxi_arrays(rng)

@@ -1,0 +1,121 @@
+"""Lazy print (§3.3), forced computation (§3.4), common computation reuse
+(§3.5), metadata (§3.6)."""
+import numpy as np
+
+import repro.core as core
+from repro.core import BackendEngines, get_context
+from repro.core.func import flush, len as llen, print as lprint
+
+
+def test_lazy_print_order_preserved(taxi_arrays):
+    ctx = get_context()
+    out = []
+    ctx.print_fn = out.append
+    df = core.from_arrays(taxi_arrays)
+    lprint("first")
+    lprint("second", df.head(2))
+    lprint("third")
+    assert out == []                      # nothing printed yet (lazy)
+    flush()
+    assert out[0] == "first"
+    assert out[1].startswith("second")
+    assert out[2] == "third"
+
+
+def test_lazy_print_fstring_scalar(taxi_arrays):
+    ctx = get_context()
+    out = []
+    ctx.print_fn = out.append
+    df = core.from_arrays(taxi_arrays)
+    avg = df["fare_amount"].mean()
+    lprint(f"avg: {avg}")                 # defers via escape marker
+    assert out == []
+    flush()
+    expected = float(np.mean(taxi_arrays["fare_amount"]))
+    shown = float(out[0].split(":")[1])
+    assert abs(shown - expected) < 1e-3
+
+
+def test_forced_compute_processes_pending_prints(taxi_arrays):
+    """§3.4: a force point executes pending sinks first, in order."""
+    ctx = get_context()
+    out = []
+    ctx.print_fn = out.append
+    df = core.from_arrays(taxi_arrays)
+    lprint("before-force")
+    _ = df[df["fare_amount"] > 0].compute()    # force point
+    assert out == ["before-force"]
+
+
+def test_lazy_len(taxi_arrays):
+    df = core.from_arrays(taxi_arrays)
+    n = llen(df)
+    assert int(n.compute()) == len(taxi_arrays["fare_amount"])
+    assert llen([1, 2, 3]) == 3                # passthrough for non-frames
+
+
+def test_common_computation_reuse(taxi_arrays):
+    """§3.5: live_df persists the shared subexpression across force points."""
+    ctx = get_context()
+    df = core.from_arrays(taxi_arrays, partition_rows=2048)
+    df = df[df["fare_amount"] > 0]
+    df["day"] = (df["pickup_datetime"] // 86400) % 7
+    p = df.groupby(["day"])["passenger_count"].sum()
+    _ = p.compute(live_df=[df])          # df is live → persisted
+    assert ctx.persist_stats["misses"] >= 1
+    before_hits = ctx.persist_stats["hits"]
+    _ = df["fare_amount"].mean().compute(live_df=[])
+    assert ctx.persist_stats["hits"] > before_hits
+
+
+def test_persist_cache_evicted_after_last_use(taxi_arrays):
+    ctx = get_context()
+    df = core.from_arrays(taxi_arrays, partition_rows=2048)
+    df = df[df["fare_amount"] > 0]
+    p = df.groupby(["passenger_count"])["trip_miles"].mean()
+    _ = p.compute(live_df=[df])
+    assert len(ctx.persist_cache) >= 1
+    # next force with no live frames → cache evicted (paper's last-use rule)
+    _ = df["fare_amount"].mean().compute(live_df=[])
+    assert len(ctx.persist_cache) == 0
+
+
+def test_metadata_dtype_narrowing(taxi_arrays):
+    from repro.core.metadata import compute_metadata, dtype_overrides_for
+    src = core.InMemorySource(taxi_arrays, partition_rows=4096)
+    md = compute_metadata(src)
+    assert md.rows == len(taxi_arrays["fare_amount"])
+    over = dtype_overrides_for(src, readonly_cols={"passenger_count"})
+    assert over.get("passenger_count") == "int8"
+    # not read-only → not narrowed (paper's category guard)
+    over2 = dtype_overrides_for(src, readonly_cols=set())
+    assert "passenger_count" not in over2
+
+
+def test_metadata_backend_choice(taxi_arrays):
+    from repro.core.metadata import choose_backend
+    src = core.InMemorySource(taxi_arrays, partition_rows=4096)
+    assert choose_backend(src, available_bytes=1 << 34) == BackendEngines.EAGER
+    assert choose_backend(src, available_bytes=1 << 10) == \
+        BackendEngines.STREAMING
+
+
+def test_dict_encoding_roundtrip():
+    from repro.core.source import encode_strings
+    vals = ["nyc", "sf", "nyc", "la", "sf", "nyc"]
+    codes, vocab = encode_strings(vals)
+    assert codes.dtype == np.int32
+    assert [vocab[c] for c in codes] == vals
+
+
+def test_str_accessor_filters_on_codes(rng):
+    names = ["red", "green", "blue"]
+    raw = [names[i] for i in rng.integers(0, 3, 500)]
+    from repro.core.source import encode_strings
+    codes, vocab = encode_strings(raw)
+    df = core.from_arrays({"color": codes, "v": rng.normal(size=500)},
+                          dicts={"color": vocab})
+    out = df[df["color"].str.eq("red")].compute()
+    assert out.rows() == raw.count("red")
+    out2 = df[df["color"].str.isin(["red", "blue"])].compute()
+    assert out2.rows() == raw.count("red") + raw.count("blue")

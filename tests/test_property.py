@@ -1,0 +1,167 @@
+"""Property-based tests (hypothesis) for the system's invariants:
+
+1. optimizer soundness — random pipelines produce identical results with and
+   without every optimization rule;
+2. predicate-pushdown safety over random predicates and op orders;
+3. streaming/eager equivalence under random partition sizes;
+4. kernel compaction/aggregation laws.
+"""
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+import repro.core as core
+from repro.core import BackendEngines, get_context
+from repro.core.optimizer import optimize
+
+COLS = ["a", "b", "c"]
+
+
+@st.composite
+def small_table(draw):
+    n = draw(st.integers(8, 200))
+    seed = draw(st.integers(0, 2 ** 16))
+    rng = np.random.default_rng(seed)
+    return {
+        "a": rng.integers(-10, 10, n).astype(np.int64),
+        "b": rng.normal(size=n),
+        "c": rng.integers(0, 5, n).astype(np.int64),
+    }
+
+
+@st.composite
+def pipeline_ops(draw):
+    """A random sequence of frame ops as (kind, args) tuples."""
+    ops = []
+    for _ in range(draw(st.integers(1, 5))):
+        kind = draw(st.sampled_from(
+            ["filter_gt", "filter_lt", "assign", "sort", "head", "rename"]))
+        col = draw(st.sampled_from(COLS))
+        val = draw(st.integers(-5, 5))
+        ops.append((kind, col, val))
+    return ops
+
+
+def _apply_ops(df, ops, renamed):
+    for kind, col, val in ops:
+        col = renamed.get(col, col)
+        if kind == "filter_gt":
+            df = df[df[col] > val]
+        elif kind == "filter_lt":
+            df = df[df[col] < val]
+        elif kind == "assign":
+            df[f"x_{col}"] = df[col] * 2 + val
+        elif kind == "sort":
+            df = df.sort_values(col)
+        elif kind == "head":
+            df = df.head(max(1, abs(val)) * 5)
+        elif kind == "rename":
+            new = f"{col}_r"
+            df = df.rename({col: new})
+            renamed[col] = new
+    return df
+
+
+def _values(res):
+    return {k: np.asarray(v) for k, v in res.columns.items()}
+
+
+@settings(max_examples=25, deadline=None)
+@given(table=small_table(), ops=pipeline_ops())
+def test_optimizer_soundness_random_pipelines(table, ops):
+    """optimized(pipeline) == unoptimized(pipeline) for random programs."""
+    get_context().reset()
+    ctx = get_context()
+    from repro.core.backends import get_backend
+    be = get_backend(BackendEngines.EAGER)
+
+    def build():
+        df = core.from_arrays(table, partition_rows=32)
+        return _apply_ops(df, ops, {})
+
+    node = build()._node
+    plain_roots, _ = optimize([node], ctx, enable=())
+    opt_roots, _ = optimize([node], ctx)
+    pv = be.execute(plain_roots, ctx)[plain_roots[0].id]
+    ov = be.execute(opt_roots, ctx)[opt_roots[0].id]
+    assert set(pv.keys()) == set(ov.keys())
+    for k in pv:
+        np.testing.assert_allclose(np.asarray(pv[k], dtype=np.float64),
+                                   np.asarray(ov[k], dtype=np.float64),
+                                   rtol=1e-5, atol=1e-8)
+
+
+@settings(max_examples=15, deadline=None)
+@given(table=small_table(), ops=pipeline_ops(),
+       part=st.sampled_from([7, 32, 1000]))
+def test_streaming_matches_eager(table, ops, part):
+    get_context().reset()
+    ctx = get_context()
+
+    def run(backend):
+        ctx.backend = backend
+        df = core.from_arrays(table, partition_rows=part)
+        return _values(_apply_ops(df, ops, {}).compute())
+
+    ev = run(BackendEngines.EAGER)
+    sv = run(BackendEngines.STREAMING)
+    assert set(ev.keys()) == set(sv.keys())
+    for k in ev:
+        # eager runs f32 (jax x32), streaming f64 — compare at f32 precision
+        np.testing.assert_allclose(np.asarray(ev[k], np.float64),
+                                   np.asarray(sv[k], np.float64),
+                                   rtol=5e-4, atol=1e-6)
+
+
+@settings(max_examples=20, deadline=None)
+@given(table=small_table(),
+       keycol=st.sampled_from(["a", "c"]),
+       fn=st.sampled_from(["sum", "mean", "min", "max", "count"]))
+def test_groupby_partial_combine_law(table, keycol, fn):
+    """Streaming partial+combine group-by == whole-table group-by."""
+    get_context().reset()
+    ctx = get_context()
+    res = {}
+    for backend, part in ((BackendEngines.EAGER, 10 ** 6),
+                          (BackendEngines.STREAMING, 16)):
+        ctx.backend = backend
+        df = core.from_arrays(table, partition_rows=part)
+        g = getattr(df.groupby([keycol])["b"], fn)()
+        res[backend] = _values(g.sort_values(keycol).compute())
+    e, s = res[BackendEngines.EAGER], res[BackendEngines.STREAMING]
+    np.testing.assert_array_equal(e[keycol], s[keycol])
+    # f32 (eager/jax) vs f64 (streaming/np) accumulation
+    np.testing.assert_allclose(np.asarray(e["b"], np.float64),
+                               np.asarray(s["b"], np.float64), rtol=5e-4,
+                               atol=1e-6)
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.lists(st.booleans(), min_size=1, max_size=300),
+       st.integers(0, 2 ** 16))
+def test_filter_compact_properties(mask, seed):
+    """Kernel law: packed prefix == input[mask]; tail is zero."""
+    import jax.numpy as jnp
+    from repro.kernels.filter_compact import filter_compact
+    rng = np.random.default_rng(seed)
+    mask = np.asarray(mask)
+    vals = rng.normal(size=mask.shape[0]).astype(np.float32)
+    packed, count = filter_compact(jnp.asarray(vals), jnp.asarray(mask),
+                                   block_rows=64)
+    packed = np.asarray(packed)
+    assert int(count) == int(mask.sum())
+    np.testing.assert_allclose(packed[: int(count)], vals[mask], rtol=1e-6)
+    assert not packed[int(count):].any()
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(1, 40), st.integers(1, 500), st.integers(0, 2 ** 16))
+def test_groupby_sum_kernel_total_preserved(groups, n, seed):
+    """Σ_g out[g] == Σ values (mass conservation)."""
+    import jax.numpy as jnp
+    from repro.kernels.groupby_sum import groupby_sum
+    rng = np.random.default_rng(seed)
+    codes = rng.integers(0, groups, n).astype(np.int32)
+    vals = rng.normal(size=n).astype(np.float32)
+    out = np.asarray(groupby_sum(jnp.asarray(codes), jnp.asarray(vals),
+                                 groups, block_rows=64))
+    np.testing.assert_allclose(out.sum(), vals.sum(), rtol=1e-4, atol=1e-4)

@@ -1,0 +1,116 @@
+"""Serving engine + sharding rules + data pipeline tests."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import SHAPES, get_config, input_specs, shape_applicable
+from repro.models.layers import init_from_spec
+from repro.models.transformer import model_spec
+
+
+def test_engine_generates_tokens():
+    from repro.serve.engine import Engine, Request
+    cfg = get_config("qwen2_5_3b").smoke()
+    params = init_from_spec(model_spec(cfg), jax.random.PRNGKey(0))
+    eng = Engine(cfg, params, max_batch=2, max_seq=32)
+    eng.submit(Request(rid=1, prompt=np.array([1, 2, 3]), max_new=5))
+    eng.submit(Request(rid=2, prompt=np.array([4, 5]), max_new=4))
+    eng.submit(Request(rid=3, prompt=np.array([6]), max_new=3))  # queued
+    done = eng.run(max_steps=40)
+    assert {r.rid for r in done} == {1, 2, 3}
+    assert len(done[0].out_tokens) >= 3
+    for r in done:
+        assert all(0 <= t < cfg.vocab for t in r.out_tokens)
+
+
+def test_param_shardings_divisibility():
+    from repro.distributed.sharding import param_shardings, spec_for
+    mesh = jax.make_mesh((1, 1), ("data", "model"))
+    # llama kv=8 over model=16 conceptually; with shape-aware fallback the
+    # spec must drop the model axis for non-divisible dims
+    big = jax.make_mesh((1,), ("model",))
+
+    class FakeMesh:
+        axis_names = ("data", "model")
+        shape = {"data": 16, "model": 16}
+    fm = FakeMesh()
+    s = spec_for((3072, 8, 128), ("embed", "heads", None), fm)
+    assert s == P("data", None, None)       # 8 ≢ 0 (mod 16) → replicated
+    s2 = spec_for((3072, 32, 128), ("embed", "heads", None), fm)
+    assert s2 == P("data", "model", None)
+
+
+def test_cache_shardings_structure():
+    from repro.distributed.sharding import cache_shardings
+    from repro.models.transformer import cache_shapes
+    cfg = get_config("llama3_2_3b")
+    mesh = jax.make_mesh((1, 1), ("data", "model"))
+    tree = cache_shapes(cfg, 128, 1024)
+    sh = cache_shardings(mesh, tree, 128)
+    # group leaves: (n_groups, B, S, H, hd) — batch must be dim 1
+    leaf = jax.tree.leaves(sh["group"])[0]
+    assert isinstance(leaf.spec, P)
+
+
+def test_all_cells_have_input_specs():
+    for arch_name in ("musicgen-large", "jamba-v0.1-52b", "xlstm-350m"):
+        arch = get_config(arch_name)
+        for shape in SHAPES.values():
+            ok, _ = shape_applicable(arch, shape)
+            if not ok:
+                continue
+            specs = input_specs(arch, shape)
+            assert all(hasattr(v, "shape") or isinstance(v, (dict, list, tuple))
+                       for v in specs.values())
+
+
+def test_long500k_skip_rule():
+    assert not shape_applicable(get_config("llama3.2-3b"),
+                                SHAPES["long_500k"])[0]
+    assert shape_applicable(get_config("xlstm-350m"), SHAPES["long_500k"])[0]
+    assert shape_applicable(get_config("jamba-v0.1-52b"),
+                            SHAPES["long_500k"])[0]
+    assert not shape_applicable(get_config("gemma3-4b"),
+                                SHAPES["long_500k"])[0]
+
+
+def test_token_pipeline_filters_and_batches():
+    from repro.core import get_context
+    from repro.data.pipeline import (PipelineConfig, TokenPipeline,
+                                     synthetic_token_source)
+    src = synthetic_token_source(128, 16, vocab=100, seed=0)
+    pipe = TokenPipeline(src, PipelineConfig(batch=8, seq=16, min_doc_len=4,
+                                             min_quality=0.25))
+    it = iter(pipe)
+    batch = next(it)
+    assert batch["tokens"].shape == (8, 16)
+    assert batch["tokens"].dtype == np.int32
+    assert batch["labels"].shape == (8, 16)
+    assert (batch["labels"][:, -1] == -100).all()
+    # column selection happened: only token columns read from the source
+    trace = get_context().optimizer_trace
+    assert any("column_selection" in t for t in trace)
+
+
+def test_pipeline_deterministic_across_restart():
+    from repro.data.pipeline import (PipelineConfig, PipelineState,
+                                     TokenPipeline, synthetic_token_source)
+    src = synthetic_token_source(64, 8, vocab=50, seed=3)
+    cfg = PipelineConfig(batch=4, seq=8)
+    p1 = TokenPipeline(src, cfg)
+    it1 = iter(p1)
+    batches = [next(it1) for _ in range(5)]
+    # "restart" from the cursor after batch 2
+    p2 = TokenPipeline(src, cfg)
+    p2.state = PipelineState(epoch=0, batch_index=2, rng_state=cfg.seed)
+    it2 = iter(p2)
+    resumed = next(it2)
+    np.testing.assert_array_equal(resumed["tokens"], batches[2]["tokens"])
+
+
+def test_prefetch_iterator_drains():
+    from repro.data.pipeline import PrefetchIterator
+    out = list(PrefetchIterator(iter(range(7)), depth=2))
+    assert out == list(range(7))

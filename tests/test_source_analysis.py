@@ -1,0 +1,139 @@
+"""JIT static analysis tests (paper §2.4, §3.1, §3.5) — the Fig. 3 → Fig. 4
+column-selection example and the live-frame analysis."""
+from repro.core.source_analysis import analyze_source
+
+PAPER_FIG3 = '''
+import lazyfatpandas.pandas as pd
+pd.analyze()
+df = pd.read_csv("test.csv")
+df = df[df["fare_amount"] > 0]
+df["day"] = df.pickup_datetime.dt.dayofweek
+p_per_day = df.groupby(["day"])["passenger_count"].sum()
+print(p_per_day)
+'''
+
+
+def test_paper_fig3_usecols():
+    """22 columns → exactly the 3 used (paper Fig. 4)."""
+    res = analyze_source(PAPER_FIG3)
+    (lineno, cols), = res.usecols.items()
+    assert cols == ["fare_amount", "passenger_count", "pickup_datetime"]
+
+
+def test_whole_frame_print_makes_all_live():
+    src = '''
+df = read_csv("x.csv")
+df = df[df["a"] > 0]
+print(df)
+'''
+    res = analyze_source(src)
+    (_, cols), = res.usecols.items()
+    assert cols is None          # ALL live → no usecols
+
+
+def test_head_describe_ignored():
+    """Paper §3.1 heuristic: head/info/describe don't make columns live."""
+    src = '''
+df = read_csv("x.csv")
+print(df.head())
+print(df.describe())
+s = df["a"].sum()
+print(f"{s}")
+'''
+    res = analyze_source(src)
+    (_, cols), = res.usecols.items()
+    assert cols == ["a"]
+
+
+def test_reassignment_kills_columns():
+    src = '''
+df = read_csv("x.csv")
+y = df["a"].sum()
+df = read_csv("y.csv")
+z = df["b"].sum()
+print(f"{y} {z}")
+'''
+    res = analyze_source(src)
+    cols_by_line = dict(res.usecols)
+    assert sorted(cols_by_line.values()) == [["a"], ["b"]]
+
+
+def test_branches_union_liveness():
+    src = '''
+df = read_csv("x.csv")
+if flag:
+    v = df["a"].mean()
+else:
+    v = df["b"].mean()
+print(f"{v}")
+'''
+    res = analyze_source(src)
+    (_, cols), = res.usecols.items()
+    assert cols == ["a", "b"]
+
+
+def test_loop_liveness():
+    src = '''
+df = read_csv("x.csv")
+total = 0
+while total < 10:
+    total = total + df["a"].sum()
+print(f"{total}")
+'''
+    res = analyze_source(src)
+    (_, cols), = res.usecols.items()
+    assert cols == ["a"]
+
+
+def test_live_frames_at_force_point():
+    """Paper §3.5 Fig. 11: live_df=[df] at the mid-program force point."""
+    src = '''
+df = read_csv("x.csv")
+p = df.groupby(["k"])["v"].sum()
+plot(p.compute())
+avg = df["w"].mean()
+print(f"{avg}")
+'''
+    res = analyze_source(src)
+    assert len(res.live_at) == 1
+    (_, frames), = res.live_at.items()
+    assert "df" in frames
+
+
+def test_readonly_columns():
+    src = '''
+df = read_csv("x.csv")
+df["b"] = df["a"] * 2
+s = df["a"].sum() + df["b"].sum() + df["c"].sum()
+print(f"{s}")
+'''
+    res = analyze_source(src)
+    readonly = res.all_used_cols - res.assigned_cols
+    assert "a" in readonly and "c" in readonly
+    assert "b" not in readonly
+
+
+def test_derived_frame_liveness_flows_to_source():
+    """Paper §3.1 rule 3: df2 derived from df — df2's live cols count."""
+    src = '''
+df = read_csv("x.csv")
+df2 = df[df["a"] > 0]
+v = df2["b"].sum()
+print(f"{v}")
+'''
+    res = analyze_source(src)
+    (_, cols), = res.usecols.items()
+    assert cols == ["a", "b"]
+
+
+def test_aggregate_kills_identity():
+    """Aggregation-derived frames don't propagate ALL back (paper's
+    aggregate-kill rule)."""
+    src = '''
+df = read_csv("x.csv")
+agg = df.groupby(["k"])["v"].sum()
+print(agg)
+'''
+    res = analyze_source(src)
+    (_, cols), = res.usecols.items()
+    assert cols == ["k", "v"]

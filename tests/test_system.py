@@ -1,0 +1,108 @@
+"""End-to-end behaviour tests for the LaFP system (paper §5).
+
+The paper's regression methodology (§5.2): results computed with
+optimizations on every backend must hash-equal the unoptimized Pandas-
+analogue result.
+"""
+import hashlib
+
+import numpy as np
+import pytest
+
+import repro.core as core
+from repro.core import BackendEngines, get_context
+from repro.core.optimizer import optimize
+
+from conftest import make_taxi_arrays
+
+
+def _result_hash(res) -> str:
+    """md5 of value-normalized columns (backends differ in concrete dtypes —
+    int32 vs int64, float32 vs float64 — but must agree on values)."""
+    h = hashlib.md5()
+    for name in sorted(res.columns):
+        arr = np.asarray(res.columns[name])
+        arr = np.round(arr.astype(np.float64), 4)
+        h.update(name.encode())
+        h.update(np.ascontiguousarray(arr).tobytes())
+    return h.hexdigest()
+
+
+def _taxi_program(df):
+    df = df[df["fare_amount"] > 0]
+    df["day"] = (df["pickup_datetime"] // 86400 + 3) % 7
+    return df.groupby(["day"])["passenger_count"].sum().sort_values("day")
+
+
+@pytest.mark.parametrize("backend", [BackendEngines.EAGER,
+                                     BackendEngines.STREAMING,
+                                     BackendEngines.DISTRIBUTED])
+def test_backend_results_hash_equal(taxi_arrays, backend):
+    """Paper §5.2: optimized results identical across all backends."""
+    ctx = get_context()
+    # reference: eager, optimizer disabled (plain Pandas analogue)
+    ctx.backend = BackendEngines.EAGER
+    ref_frame = _taxi_program(core.from_arrays(taxi_arrays,
+                                               partition_rows=4096))
+    roots, _ = optimize([ref_frame._node], ctx, enable=())
+    from repro.core.backends import get_backend
+    ref_val = get_backend(BackendEngines.EAGER).execute(roots, ctx)[roots[0].id]
+    from repro.core.lazyframe import Result
+    ref_hash = _result_hash(Result(ref_val))
+
+    ctx.backend = backend
+    out = _taxi_program(core.from_arrays(taxi_arrays,
+                                         partition_rows=4096)).compute()
+    assert _result_hash(out) == ref_hash
+
+
+def test_two_line_change_api(taxi_arrays):
+    """Paper Fig. 2: import + analyze() are the only changes."""
+    import repro.core.lazy as pd
+    pd.analyze()
+    df = pd.from_arrays(taxi_arrays)
+    out = df[df["fare_amount"] > 50].compute()
+    mask = taxi_arrays["fare_amount"] > 50
+    assert out.rows() == int(mask.sum())
+
+
+def test_larger_than_budget_succeeds_streaming(taxi_arrays):
+    """Paper Fig. 12 mechanism: streaming completes under a budget that the
+    eager path exceeds."""
+    ctx = get_context()
+    total_bytes = sum(a.nbytes for a in taxi_arrays.values())
+    ctx.memory_budget = total_bytes // 3
+    ctx.backend = BackendEngines.STREAMING
+    df = core.from_arrays(taxi_arrays, partition_rows=1000)
+    df = df[df["fare_amount"] > 0]
+    res = df.groupby(["passenger_count"])["trip_miles"].mean().compute()
+    assert res.rows() == 7
+    assert ctx.last_peak_bytes <= ctx.memory_budget
+
+
+def test_streaming_budget_violation_raises(taxi_arrays):
+    from repro.core.backends import MemoryBudgetExceeded
+    ctx = get_context()
+    ctx.memory_budget = 10_000     # absurdly small
+    ctx.backend = BackendEngines.STREAMING
+    df = core.from_arrays(taxi_arrays, partition_rows=1000)
+    with pytest.raises(MemoryBudgetExceeded):
+        df.sort_values("fare_amount").compute()
+
+
+def test_optimizations_preserve_join(rng):
+    ctx = get_context()
+    n = 5000
+    left = {"k": rng.integers(0, 50, n), "v": rng.normal(size=n),
+            "junk": rng.normal(size=n)}
+    right = {"k": np.arange(50), "w": rng.normal(size=50)}
+    for backend in (BackendEngines.EAGER, BackendEngines.STREAMING):
+        ctx.backend = backend
+        l = core.from_arrays(left, partition_rows=512)
+        r = core.from_arrays(right)
+        j = l.merge(r, on="k")
+        j = j[j["w"] > 0]
+        out = j.compute()
+        wpos = right["w"] > 0
+        expected = sum(int(wpos[k]) for k in left["k"])
+        assert out.rows() == expected, backend
