@@ -136,6 +136,72 @@ def fig15_memory():
             emit(f"fig15_{name}", m_opt, f"mem_reduction={red:.1f}%")
 
 
+def backend_selection():
+    """Planner-quality figure (beyond paper): AUTO vs each fixed backend
+    across small/medium/large synthetic sources.  Emits CSV rows plus
+    ``backend_selection.json`` so the bench trajectory can track how close
+    AUTO gets to the best fixed backend (regret) over time."""
+    from repro.core import BackendEngines, get_context
+    from .programs import PROGRAMS, build_sources
+    prog_names = ("taxi_agg", "taxi_filter", "ratings_join")
+    scales = {"small": max(SCALE // 20, 2_000), "medium": SCALE,
+              "large": SCALE * 4}
+    backends = (BackendEngines.EAGER, BackendEngines.STREAMING,
+                BackendEngines.DISTRIBUTED, BackendEngines.AUTO)
+    out: dict = {"scale_rows": dict(scales), "results": {}}
+    for label, scale in scales.items():
+        sources = build_sources(scale)
+        taxi = sources["taxi"]
+        # large runs under a budget (~50% of the taxi table): AUTO must
+        # notice eager doesn't fit and route around it
+        budget = None
+        if label == "large":
+            budget = int(taxi.total_rows() * taxi.schema.row_bytes() * 0.5)
+        out["results"][label] = {}
+        for backend in backends:
+            total = 0.0
+            ok_all = True
+            chosen: list[str] = []
+            for name in prog_names:
+                try:
+                    secs, _, ok = _run_program(PROGRAMS[name], sources,
+                                               backend, budget)
+                except Exception:  # noqa: BLE001 — a broken backend is a
+                    secs, ok = 0.0, False  # "fail" data point, not an abort
+                total += secs
+                ok_all = ok_all and ok
+                if backend == BackendEngines.AUTO:
+                    ctx = get_context()
+                    chosen.extend(d.cost.backend
+                                  for d in ctx.planner_decisions)
+            # only the streaming backend wires the budget into a MemoryMeter;
+            # under a budget, eager/distributed run unconstrained and are not
+            # a fair regret baseline
+            enforced = (budget is None
+                        or backend in (BackendEngines.STREAMING,
+                                       BackendEngines.AUTO))
+            rec = {"seconds": total, "ok": ok_all, "budget_enforced": enforced}
+            if chosen:
+                rec["auto_chose"] = sorted(set(chosen))
+            out["results"][label][backend.value] = rec
+            emit(f"backend_selection_{label}_{backend.value}", total * 1e6,
+                 ("ok" if ok_all else "fail")
+                 + (f" chose={'+'.join(sorted(set(chosen)))}" if chosen else ""))
+        fixed = [r["seconds"] for b, r in out["results"][label].items()
+                 if b != "auto" and r["ok"] and r["budget_enforced"]]
+        auto = out["results"][label].get("auto", {})
+        if fixed and auto.get("ok"):
+            regret = auto["seconds"] / min(fixed)
+            out["results"][label]["regret_vs_best_fixed"] = regret
+            emit(f"backend_selection_{label}_regret", auto["seconds"] * 1e6,
+                 f"auto/best_fixed={regret:.2f}x")
+    path = os.environ.get("REPRO_BENCH_SELECTION_OUT",
+                          "backend_selection.json")
+    with open(path, "w") as f:
+        json.dump(out, f, indent=2)
+    emit("backend_selection_json", 0.0, path)
+
+
 def analysis_overhead():
     """Paper §5.3: 0.04–0.59 s static-analysis overhead."""
     import inspect
@@ -229,8 +295,8 @@ def roofline():
 def main() -> None:
     t0 = time.perf_counter()
     for fn in (fig12_applicability, fig13_exec_time, fig14_speedup,
-               fig15_memory, analysis_overhead, ablation_persist, kernels,
-               roofline):
+               fig15_memory, backend_selection, analysis_overhead,
+               ablation_persist, kernels, roofline):
         try:
             fn()
         except Exception as e:  # noqa: BLE001

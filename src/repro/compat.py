@@ -1,0 +1,13 @@
+"""Version-compatibility shims for the pinned toolchain.
+
+``jax.shard_map`` became a public API in newer jax; the pinned 0.4.x only
+ships ``jax.experimental.shard_map``.  Import from here so both work.
+"""
+import jax
+
+try:
+    shard_map = jax.shard_map
+except AttributeError:  # jax 0.4.x
+    from jax.experimental.shard_map import shard_map  # noqa: F401
+
+__all__ = ["shard_map"]

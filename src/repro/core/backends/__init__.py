@@ -9,7 +9,63 @@
 """
 from __future__ import annotations
 
+import dataclasses
+
 from ..context import BackendEngines
+
+
+# ---------------------------------------------------------------------------
+# Capability registry (planner-facing).  Each backend publishes what it can
+# run natively and the constant factors of its cost model; ops outside
+# ``native_ops`` are executed via the backend's fallback path and priced with
+# ``fallback_penalty`` (+ a gather/transfer charge) by the planner.
+
+_ALL_OPS = frozenset({
+    "scan", "materialized", "filter", "project", "assign", "rename",
+    "astype", "fillna", "sort_values", "drop_duplicates", "head",
+    "map_rows", "groupby_agg", "join", "concat", "reduce", "length",
+    "sink_print",
+})
+
+
+@dataclasses.dataclass(frozen=True)
+class BackendCapability:
+    name: str
+    native_ops: frozenset               # ops with a first-class implementation
+    startup_cost: float                 # fixed per-force-point dispatch cost
+    scan_cost_per_byte: float           # reading source bytes
+    row_cost: float                     # per-row per-operator compute
+    parallelism: float                  # effective divisor on row work
+    transfer_cost_per_byte: float       # host<->device / gather movement
+    fallback_penalty: float             # multiplier for non-native ops
+    streams_partitions: bool            # True → peak memory is chunk-scaled
+
+
+CAPABILITIES: dict[BackendEngines, BackendCapability] = {
+    BackendEngines.EAGER: BackendCapability(
+        name="eager", native_ops=_ALL_OPS,
+        startup_cost=1e3, scan_cost_per_byte=1.0, row_cost=1.0,
+        parallelism=4.0, transfer_cost_per_byte=0.5, fallback_penalty=1.0,
+        streams_partitions=False),
+    BackendEngines.STREAMING: BackendCapability(
+        name="streaming", native_ops=_ALL_OPS,
+        startup_cost=2e3, scan_cost_per_byte=1.5, row_cost=2.0,
+        parallelism=1.0, transfer_cost_per_byte=0.0, fallback_penalty=1.0,
+        streams_partitions=True),
+    BackendEngines.DISTRIBUTED: BackendCapability(
+        name="distributed",
+        native_ops=frozenset({"scan", "materialized", "filter", "project",
+                              "assign", "rename", "astype", "fillna",
+                              "reduce", "length", "groupby_agg",
+                              "sink_print"}),
+        startup_cost=5e4, scan_cost_per_byte=1.2, row_cost=1.0,
+        parallelism=8.0, transfer_cost_per_byte=2.0, fallback_penalty=3.0,
+        streams_partitions=False),
+}
+
+
+def capabilities(kind: BackendEngines) -> BackendCapability:
+    return CAPABILITIES[kind]
 
 
 class MemoryBudgetExceeded(RuntimeError):
@@ -42,6 +98,11 @@ class MemoryMeter:
 
 
 def get_backend(kind: BackendEngines, **options):
+    if kind == BackendEngines.AUTO:
+        raise ValueError(
+            "BackendEngines.AUTO is resolved by the planner at force points "
+            "(repro.core.planner.select.plan_placement); it is not a "
+            "physical backend")
     if kind == BackendEngines.EAGER:
         from .eager import EagerBackend
         return EagerBackend(**options)

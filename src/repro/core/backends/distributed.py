@@ -24,6 +24,7 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
+from ...compat import shard_map
 from .. import exec_common as X
 from .. import graph as G
 from ..context import LaFPContext
@@ -236,7 +237,7 @@ class DistributedBackend:
                                           else jnp.iinfo(col.dtype).min))
                 return r
 
-            f = jax.shard_map(
+            f = shard_map(
                 lambda c, v: _psum_combine(fn, local(c[0], v[0]), axis),
                 mesh=mesh,
                 in_specs=(P(axis), P(axis)),
@@ -308,7 +309,7 @@ class DistributedBackend:
                         arr, axis)
                 return comb
 
-            return jax.shard_map(
+            return shard_map(
                 shard_fn, mesh=mesh,
                 in_specs=(P(axis), P(axis)) + tuple(P(axis) for _ in value_cols),
                 out_specs=P())(karr, valid,

@@ -12,6 +12,7 @@ class BackendEngines(enum.Enum):
     EAGER = "eager"            # device-resident jnp, whole-table (Pandas analogue)
     STREAMING = "streaming"    # host out-of-core, partition-at-a-time (Dask analogue)
     DISTRIBUTED = "distributed"  # shard_map over mesh data axis (Modin/cluster analogue)
+    AUTO = "auto"              # cost-based per-force-point choice (planner/)
 
 
 class LaFPContext:
@@ -34,6 +35,12 @@ class LaFPContext:
         self.optimizer_trace: list[str] = []
         self.memory_budget: int | None = None   # bytes; streaming backend enforces
         self.last_peak_bytes: int = 0           # streaming backend peak accounting
+        # cost-based planner (planner/): AUTO plan-choice trace + feedback
+        # stats store (observed cardinalities keyed by structural node key)
+        self.planner_trace: list[str] = []
+        from .planner.feedback import StatsStore
+        self.stats_store = StatsStore()
+        self.planner_decisions: list[Any] = []  # last force point's Decisions
         self.print_fn = print                   # patched in tests
         # metrics
         self.exec_count = 0

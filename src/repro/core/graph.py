@@ -592,6 +592,23 @@ class Materialized(Node):
 
 
 # ---------------------------------------------------------------------------
+# Runtime-flag carrying (rewrites must not lose executor state)
+
+
+def copy_runtime_flags(src: Node, dst: Node) -> Node:
+    """Carry runtime fields (persist mark, cached result, cache key) from a
+    node to its rewritten clone.  ``with_inputs`` clones get fresh defaults;
+    every rewrite path must route through this so marks survive."""
+    if dst is src:
+        return dst
+    dst.persist = src.persist
+    dst.result = src.result
+    if hasattr(src, "cache_key"):
+        dst.cache_key = src.cache_key
+    return dst
+
+
+# ---------------------------------------------------------------------------
 # Traversals
 
 

@@ -37,8 +37,7 @@ def _rebuild(roots: list[G.Node], replace: dict[int, G.Node]) -> tuple[list[G.No
             if all(a is b for a, b in zip(new_inputs, n.inputs)):
                 out = n
             else:
-                out = n.with_inputs(new_inputs)
-                out.persist = n.persist
+                out = G.copy_runtime_flags(n, n.with_inputs(new_inputs))
         memo[n.id] = out
         return out
 
@@ -56,8 +55,7 @@ def cse(roots: list[G.Node]) -> tuple[list[G.Node], dict[int, G.Node]]:
             return memo[n.id]
         new_inputs = [rec(i) for i in n.inputs]
         if not all(a is b for a, b in zip(new_inputs, n.inputs)):
-            cand = n.with_inputs(new_inputs)
-            cand.persist = n.persist
+            cand = G.copy_runtime_flags(n, n.with_inputs(new_inputs))
         else:
             cand = n
         key = cand.key()
@@ -96,6 +94,10 @@ def _can_swap(f: G.Filter, u: G.Node, parents: dict[int, list[G.Node]]) -> bool:
         return False
     if u.has_side_effects():
         return False
+    if u.persist:
+        # planned materialization point (§3.5): rewriting u away would lose
+        # the cached subexpression future force points expect to reuse
+        return False
     return True
 
 
@@ -132,9 +134,12 @@ def push_filters(roots: list[G.Node], trace: list[str] | None = None
                 continue
             u = n.inputs[0]
             # fuse adjacent filters: Filter(Filter(x,p2),p1) → Filter(x,p1∧p2)
-            if isinstance(u, G.Filter) and len(parents.get(u.id, [])) == 1:
+            if isinstance(u, G.Filter) and len(parents.get(u.id, [])) == 1 \
+                    and not u.persist:
                 fused = G.Filter(u.inputs[0],
                                  E.BinOp("and", u.predicate, n.predicate))
+                # output == n's output: carry n's runtime flags
+                G.copy_runtime_flags(n, fused)
                 roots, m = _rebuild(roots, {n.id: fused})
                 total_map.update(m)
                 if trace is not None:
@@ -145,8 +150,10 @@ def push_filters(roots: list[G.Node], trace: list[str] | None = None
                 outc: dict[int, frozenset | None] = {}
                 for w in G.walk(roots):
                     outc[w.id] = w.out_cols([outc[i.id] for i in w.inputs])
-                nr = _push_into_join(n, u, parents, trace, outc)
+                nr = None if u.persist else _push_into_join(n, u, parents,
+                                                            trace, outc)
                 if nr is not None:
+                    G.copy_runtime_flags(n, nr)
                     roots, m = _rebuild(roots, {n.id: nr})
                     total_map.update(m)
                     changed = True
@@ -159,8 +166,9 @@ def push_filters(roots: list[G.Node], trace: list[str] | None = None
                 inv = {v: k for k, v in u.mapping.items()}
                 pred = _rename_pred(pred, inv)
             new_filter = G.Filter(u.inputs[0], pred)
-            new_u = u.with_inputs([new_filter])
-            new_u.persist = u.persist
+            # the rewritten top node produces n's (filtered) output, so it
+            # inherits n's flags (persist-marked u blocks the swap above)
+            new_u = G.copy_runtime_flags(n, u.with_inputs([new_filter]))
             roots, m = _rebuild(roots, {n.id: new_u})
             total_map.update(m)
             if trace is not None:
@@ -222,6 +230,47 @@ def push_common_parent_filters(roots: list[G.Node], trace=None
             trace.append(f"push_disjunction below {n.op}#{n.id}")
         return _rebuild(roots, {n.id: new_n})
     return roots, {}
+
+
+# ---------------------------------------------------------------------------
+# Selectivity-ordered filter fusion (planner-backed, beyond paper)
+
+
+def order_conjuncts(roots: list[G.Node], ctx: "LaFPContext | None" = None,
+                    trace=None) -> tuple[list[G.Node], dict[int, G.Node]]:
+    """Reorder each fused filter's conjuncts most-selective-first using the
+    planner's selectivity estimates (zone maps / NDVs of the filter's
+    input).  Semantically neutral (∧ is commutative); puts the strongest
+    pruner first for zone-map checks and keeps fused predicates in a
+    deterministic, statistics-ranked order."""
+    from .planner.stats import estimate_plan, predicate_selectivity
+    try:
+        stats = estimate_plan(roots, ctx)
+    except Exception:  # noqa: BLE001 — estimation must never break planning
+        return roots, {}
+    replace: dict[int, G.Node] = {}
+    for n in G.walk(roots):
+        if not isinstance(n, G.Filter):
+            continue
+        conj = _conjuncts(n.predicate)
+        if len(conj) < 2:
+            continue
+        child = stats[n.inputs[0].id]
+        scored = sorted(
+            ((predicate_selectivity(c, child), repr(c.key()), c) for c in conj),
+            key=lambda t: (t[0], t[1]))
+        ordered = [c for _, _, c in scored]
+        if ordered == conj:
+            continue
+        nf = G.copy_runtime_flags(n, G.Filter(n.inputs[0], E.conjoin(ordered)))
+        replace[n.id] = nf
+        if trace is not None:
+            trace.append(
+                f"order_conjuncts #{n.id}: "
+                + " ".join(f"{s:.3f}" for s, _, _ in scored))
+    if not replace:
+        return roots, {}
+    return _rebuild(roots, replace)
 
 
 # ---------------------------------------------------------------------------
@@ -420,8 +469,9 @@ def dtype_narrowing(roots: list[G.Node], ctx: LaFPContext | None,
 
 
 def optimize(roots: list[G.Node], ctx: LaFPContext | None = None,
-             enable: Iterable[str] = ("cse", "pushdown", "columns",
-                                      "zonemap", "dtypes")) -> tuple[list[G.Node], dict[int, G.Node]]:
+             enable: Iterable[str] = ("cse", "pushdown", "selectivity",
+                                      "columns", "zonemap", "dtypes")
+             ) -> tuple[list[G.Node], dict[int, G.Node]]:
     """Run the rule pipeline; returns (new_roots, combined id map)."""
     enable = set(enable)
     trace = ctx.optimizer_trace if ctx is not None else None
@@ -443,6 +493,9 @@ def optimize(roots: list[G.Node], ctx: LaFPContext | None = None,
         roots, m = push_common_parent_filters(roots, trace)
         absorb(m)
         roots, m = cse(roots)  # pushdown can expose new sharing
+        absorb(m)
+    if "selectivity" in enable:
+        roots, m = order_conjuncts(roots, ctx, trace)
         absorb(m)
     if "columns" in enable:
         roots, m = column_selection(roots, ctx, trace)

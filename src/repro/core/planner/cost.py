@@ -1,0 +1,162 @@
+"""Per-operator, per-backend cost model over ``TableStats``.
+
+Costs are unitless "work" numbers — only comparisons between backends on
+the *same* plan matter.  Each backend's constants live in its
+``BackendCapability`` descriptor (``repro.core.backends.CAPABILITIES``);
+unsupported ops are priced via the fallback penalty plus a gather charge,
+mirroring the engines' actual convert-and-delegate fallback paths.
+
+Peak-memory models follow the executors:
+
+* eager       — refcounted topological walk: every node's output is
+                resident until its last consumer ran (exactly what
+                ``EagerBackend.execute`` frees).
+* streaming   — chunk-sized flow for row-wise ops plus pipeline-breaker
+                state: join build sides, group-by partial aggregates, sort
+                materialization, shared-node memoization.
+* distributed — eager-model bytes divided across shards for native ops;
+                the first fallback gathers the whole table on one host.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+
+from .. import graph as G
+from ..context import BackendEngines
+from .stats import TableStats
+
+_LOG_OPS = ("sort_values", "drop_duplicates", "join")  # n log n ops
+_BREAKERS = ("sort_values", "groupby_agg", "join", "drop_duplicates")
+
+
+@dataclasses.dataclass
+class CostEstimate:
+    backend: str
+    total: float                         # unitless work
+    peak_bytes: float                    # estimated resident high-water mark
+    per_node: dict[int, float]           # node id -> work contribution
+
+    def __repr__(self):
+        return (f"<Cost {self.backend} total={self.total:.3g} "
+                f"peak={self.peak_bytes / 1e6:.1f}MB>")
+
+
+def _node_work(n: G.Node, stats: dict[int, TableStats], cap) -> float:
+    st = stats[n.id]
+    in_rows = sum(stats[i.id].rows for i in n.inputs)
+    if isinstance(n, G.Scan):
+        return st.total_bytes * cap.scan_cost_per_byte
+    if isinstance(n, (G.Materialized, G.SinkPrint)):
+        return 0.0
+    rows = max(in_rows, st.rows, 1.0)
+    work = rows * cap.row_cost
+    if n.op in _LOG_OPS:
+        work *= max(1.0, math.log2(rows + 1))
+    native = n.op in cap.native_ops
+    if native:
+        work /= cap.parallelism
+    else:
+        in_bytes = sum(stats[i.id].total_bytes for i in n.inputs)
+        work = work * cap.fallback_penalty + in_bytes * cap.transfer_cost_per_byte
+    return work
+
+
+def _eager_peak(order, roots, stats) -> float:
+    """Replay the eager executor's refcounted walk on estimated sizes."""
+    refcount: dict[int, int] = {}
+    for n in order:
+        for i in n.inputs:
+            refcount[i.id] = refcount.get(i.id, 0) + 1
+    root_ids = {r.id for r in roots}
+    resident: dict[int, float] = {}
+    peak = 0.0
+    for n in order:
+        resident[n.id] = stats[n.id].total_bytes
+        peak = max(peak, sum(resident.values()))
+        for i in n.inputs:
+            refcount[i.id] -= 1
+            if refcount[i.id] == 0 and i.id not in root_ids:
+                resident.pop(i.id, None)
+    return peak
+
+
+_ROWWISE = ("filter", "project", "assign", "rename", "astype", "fillna",
+            "map_rows", "head")
+
+
+def _streaming_peak(order, roots, stats, chunk_rows: int) -> float:
+    """Chunked flow + breaker state, as StreamingBackend accounts it.
+
+    Scans stream at *source partition* granularity; row-wise ops keep their
+    input's flow size (scaled by their row ratio); everything else
+    re-chunks at ``chunk_rows``.  Pipeline breakers add long-lived state.
+    """
+    parents: dict[int, int] = {}
+    for n in order:
+        for i in n.inputs:
+            parents[i.id] = parents.get(i.id, 0) + 1
+    root_ids = {r.id for r in roots}
+    state = 0.0                    # long-lived breaker/memo state
+    max_flow = 0.0                 # largest transient chunk in flight
+    flow_rows: dict[int, float] = {}
+    for n in order:
+        st = stats[n.id]
+        if isinstance(n, G.Scan):
+            fr = 0.0
+            for pi in range(n.source.n_partitions):
+                if pi in n.skip_partitions:
+                    continue
+                fr = max(fr, float(n.source.partition_meta(pi).get(
+                    "rows", chunk_rows)))
+            fr = fr or min(float(chunk_rows), st.rows)
+        elif n.op in _ROWWISE and n.inputs:
+            in_st = stats[n.inputs[0].id]
+            ratio = st.rows / in_st.rows if in_st.rows else 1.0
+            fr = flow_rows[n.inputs[0].id] * min(1.0, ratio)
+        else:
+            fr = min(float(chunk_rows), st.rows)
+        flow_rows[n.id] = fr
+        max_flow = max(max_flow, fr * st.row_bytes)
+        if parents.get(n.id, 0) > 1:
+            state += st.total_bytes      # shared nodes are memoized in full
+            continue
+        if isinstance(n, G.Join):
+            state += stats[n.inputs[1].id].total_bytes   # build side held
+        elif isinstance(n, G.SortValues):
+            state += stats[n.inputs[0].id].total_bytes   # materializes input
+        elif isinstance(n, (G.GroupByAgg, G.DropDuplicates)):
+            state += st.total_bytes                      # partials ≈ output
+        elif n.id in root_ids and st.rows:
+            state += st.total_bytes                      # root materialized
+    return state + max_flow
+
+
+def plan_cost(roots: list[G.Node], stats: dict[int, TableStats],
+              kind: BackendEngines, chunk_rows: int = 1 << 16,
+              n_shards: int | None = None) -> CostEstimate:
+    """Price an optimized plan on one backend given per-node stats."""
+    from ..backends import capabilities
+    cap = capabilities(kind)
+    order = G.walk(roots)
+    per_node: dict[int, float] = {}
+    total = cap.startup_cost
+    for n in order:
+        w = _node_work(n, stats, cap)
+        per_node[n.id] = w
+        total += w
+    if cap.streams_partitions:
+        peak = _streaming_peak(order, roots, stats, chunk_rows)
+    else:
+        peak = _eager_peak(order, roots, stats)
+        if kind == BackendEngines.DISTRIBUTED:
+            if n_shards is None:
+                try:
+                    import jax
+                    n_shards = max(1, len(jax.devices()))
+                except Exception:  # noqa: BLE001 — planning must never crash
+                    n_shards = 1
+            if all(n.op in cap.native_ops for n in order):
+                peak /= n_shards
+            # else: first fallback gathers on one host → full-peak estimate
+    return CostEstimate(cap.name, total, peak, per_node)

@@ -1,0 +1,79 @@
+"""Feedback loop: record actual cardinalities after execution and feed them
+back into estimation (the paper's "runtime optimization" leg).
+
+Observations are keyed by each node's *structural* key, so a re-built plan
+with the same shape (the common case for scripted/repeated workloads) hits
+the store even though node ids differ.  ``estimate_plan`` consults the
+store and overrides a-priori estimates with observed row counts.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+from .. import graph as G
+
+
+class StatsStore:
+    """Bounded store of observed per-node cardinalities + backend peaks."""
+
+    def __init__(self, max_entries: int = 4096):
+        self.observed: dict[tuple, dict[str, float]] = {}
+        self.backend_peaks: dict[str, int] = {}
+        self.max_entries = max_entries
+
+    def record(self, key: tuple, rows: int, nbytes: int) -> None:
+        if len(self.observed) >= self.max_entries and key not in self.observed:
+            # drop the oldest insertion (dict preserves order)
+            self.observed.pop(next(iter(self.observed)))
+        self.observed[key] = {"rows": float(rows), "nbytes": float(nbytes)}
+
+    def lookup(self, key: tuple) -> dict[str, float] | None:
+        return self.observed.get(key)
+
+    def record_peak(self, backend: str, peak_bytes: int) -> None:
+        self.backend_peaks[backend] = max(
+            self.backend_peaks.get(backend, 0), int(peak_bytes))
+
+    def __len__(self):
+        return len(self.observed)
+
+
+def _rows_nbytes(value: Any) -> tuple[int, int] | None:
+    """(rows, nbytes) of a materialized table value; None for scalars."""
+    if not isinstance(value, dict):
+        return None
+    rows = 0
+    nbytes = 0
+    for v in value.values():
+        shape = getattr(v, "shape", None)
+        if shape:
+            rows = int(shape[0])
+        nbytes += int(getattr(v, "nbytes", 0))
+    return rows, nbytes
+
+
+def record_execution(roots: list[G.Node], results: dict[int, Any],
+                     ctx, backend_name: str | None = None) -> int:
+    """Write actual cardinalities of materialized results (and any persisted
+    intermediates) into ``ctx.stats_store``.  Returns entries recorded."""
+    store = getattr(ctx, "stats_store", None)
+    if store is None:
+        return 0
+    recorded = 0
+    for n in G.walk(roots):
+        val = results.get(n.id)
+        if val is None and n.persist:
+            key = getattr(n, "cache_key", None) or n.key()
+            val = ctx.persist_cache.get(key)
+        if val is None:
+            continue
+        rn = _rows_nbytes(val)
+        if rn is None:
+            continue
+        if isinstance(n, (G.SinkPrint, G.Materialized)):
+            continue
+        store.record(n.key(), rn[0], rn[1])
+        recorded += 1
+    if backend_name and "streaming" in backend_name and ctx.last_peak_bytes:
+        store.record_peak("streaming", ctx.last_peak_bytes)
+    return recorded

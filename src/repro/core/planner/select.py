@@ -1,0 +1,109 @@
+"""AUTO backend selection: cost every candidate engine, respect the memory
+budget, dispatch to the cheapest — per root subtree (hybrid placement).
+
+The plan-choice trace (``ctx.planner_trace``) records one line per decision:
+
+    auto: root#12 -> eager cost=2.1e+05 peak=3.4MB | streaming 5.0e+05/0.3MB,
+    distributed 8.7e+05/0.9MB
+
+Read it as: subtree rooted at node 12 dispatched to eager with estimated
+work 2.1e5 and estimated peak 3.4 MB; the rejected candidates follow with
+their work/peak.  ``budget!`` marks candidates rejected for exceeding
+``ctx.memory_budget``.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+from .. import graph as G
+from ..context import BackendEngines
+from .cost import CostEstimate, plan_cost
+from .stats import estimate_plan
+
+CANDIDATES = (BackendEngines.EAGER, BackendEngines.STREAMING,
+              BackendEngines.DISTRIBUTED)
+
+
+@dataclasses.dataclass
+class Decision:
+    roots: list                          # root nodes assigned to this engine
+    backend: BackendEngines
+    cost: CostEstimate
+    rejected: dict[str, str]             # backend name -> reason string
+
+
+def _choose(roots: list[G.Node], stats, budget, chunk_rows) -> Decision:
+    costs: dict[BackendEngines, CostEstimate] = {}
+    for kind in CANDIDATES:
+        try:
+            costs[kind] = plan_cost(roots, stats, kind, chunk_rows)
+        except Exception:  # noqa: BLE001 — a backend we can't price is skipped
+            continue
+    feasible = {k: c for k, c in costs.items()
+                if budget is None or c.peak_bytes <= budget}
+    rejected: dict[str, str] = {}
+    if feasible:
+        best = min(feasible, key=lambda k: costs[k].total)
+    else:
+        # nothing fits: take the smallest-footprint engine (streaming's
+        # chunked model is the usual survivor) and let the meter arbitrate
+        best = min(costs, key=lambda k: costs[k].peak_bytes)
+    for k, c in costs.items():
+        if k is best:
+            continue
+        over = budget is not None and c.peak_bytes > budget
+        rejected[c.backend] = (
+            f"{c.backend} {c.total:.3g}/{c.peak_bytes / 1e6:.1f}MB"
+            + (" budget!" if over else ""))
+    return Decision(list(roots), best, costs[best], rejected)
+
+
+def plan_placement(roots: list[G.Node], ctx) -> list[Decision]:
+    """Partition ``roots`` into per-backend execution groups.
+
+    Each root subtree is costed independently (hybrid placement — branches
+    of very different sizes may land on different engines); all roots
+    choosing the same engine form one dispatch group (each backend's
+    executor then memoizes shared work within the group).  When subtrees
+    assigned to *different* engines overlap, hybrid placement would
+    execute the shared nodes once per group — in that case we fall back
+    to a single whole-plan choice instead.
+    """
+    stats = estimate_plan(roots, ctx)
+    budget = ctx.memory_budget
+    chunk_rows = ctx.backend_options.get("chunk_rows", 1 << 16)
+    per_root = [_choose([r], stats, budget, chunk_rows) for r in roots]
+    # group same-backend decisions (first-appearance order; safe — at most
+    # one root carries the ordered sink chain)
+    merged: list[Decision] = []
+    by_backend: dict[BackendEngines, Decision] = {}
+    for d in per_root:
+        prev = by_backend.get(d.backend)
+        if prev is not None:
+            prev.roots.extend(d.roots)
+            prev.cost = CostEstimate(
+                prev.cost.backend, prev.cost.total + d.cost.total,
+                max(prev.cost.peak_bytes, d.cost.peak_bytes),
+                {**prev.cost.per_node, **d.cost.per_node})
+        else:
+            by_backend[d.backend] = d
+            merged.append(d)
+    if len(merged) > 1:
+        seen: dict[int, int] = {}
+        overlap = False
+        for gi, d in enumerate(merged):
+            for n in G.walk(d.roots):
+                if seen.setdefault(n.id, gi) != gi:
+                    overlap = True
+                    break
+            if overlap:
+                break
+        if overlap:
+            merged = [_choose(roots, stats, budget, chunk_rows)]
+    for d in merged:
+        ids = ",".join(f"#{r.id}" for r in d.roots)
+        alts = ", ".join(d.rejected.values()) or "-"
+        ctx.planner_trace.append(
+            f"auto: root{ids} -> {d.cost.backend} cost={d.cost.total:.3g} "
+            f"peak={d.cost.peak_bytes / 1e6:.1f}MB | {alts}")
+    return merged

@@ -66,8 +66,12 @@ def execute(roots: list[G.Node], live_df=None) -> list[Any]:
             idmap[old_id].persist = True
             idmap[old_id].cache_key = logical_keys[old_id]
 
-    backend = _get_backend(ctx)
-    results = backend.execute(opt_roots, ctx)
+    results, backend_name = _dispatch(opt_roots, ctx)
+
+    # planner feedback (§ runtime optimization): observed cardinalities
+    # recalibrate future estimates for repeated plans
+    from .planner.feedback import record_execution
+    record_execution(opt_roots, results, ctx, backend_name)
 
     if sink_roots:
         ctx.sinks_flushed()
@@ -105,6 +109,25 @@ def _collect_vocab(node: G.Node):
     return vocab
 
 
-def _get_backend(ctx):
+def _dispatch(opt_roots, ctx):
+    """Run the optimized plan: fixed backend, or cost-based AUTO placement
+    (plan → select → dispatch, possibly hybrid across root subtrees)."""
     from .backends import get_backend
-    return get_backend(ctx.backend, **ctx.backend_options)
+    from .context import BackendEngines
+    if ctx.backend != BackendEngines.AUTO:
+        backend = get_backend(ctx.backend, **ctx.backend_options)
+        return backend.execute(opt_roots, ctx), backend.name
+    from .planner.select import plan_placement
+    decisions = plan_placement(opt_roots, ctx)
+    ctx.planner_decisions = decisions
+    results = {}
+    names = []
+    for d in decisions:
+        try:
+            backend = get_backend(d.backend, **ctx.backend_options)
+        except TypeError:
+            # options meant for another engine (AUTO may pick any)
+            backend = get_backend(d.backend)
+        results.update(backend.execute(d.roots, ctx))
+        names.append(backend.name)
+    return results, "+".join(names) or "auto"

@@ -46,6 +46,40 @@ class Source:
             return None
         return sum(m["rows"] for m in metas)
 
+    # -- planner-facing statistics extraction ------------------------------
+    def total_bytes(self) -> int | None:
+        """Estimated resident size of the full table (rows × schema width)."""
+        rows = self.total_rows()
+        if rows is None:
+            return None
+        return rows * self.schema.row_bytes()
+
+    def column_ndv(self, name: str) -> int | None:
+        """Distinct-count estimate for one column, from metadata only:
+        exact vocab size for dict-encoded columns; integer zone-map span
+        (capped by row count) for integer columns; None when unknown."""
+        if name in self.dicts:
+            return len(self.dicts[name])
+        try:
+            cs = self.schema.col(name)
+        except KeyError:
+            return None
+        if cs.np_dtype.kind not in "iu":
+            return None
+        lo = hi = None
+        for pi in range(self.n_partitions):
+            zm = self.partition_meta(pi).get("zonemap", {})
+            if name not in zm:
+                return None
+            plo, phi = zm[name]
+            lo = plo if lo is None else min(lo, plo)
+            hi = phi if hi is None else max(hi, phi)
+        if lo is None:
+            return None
+        span = int(hi) - int(lo) + 1
+        rows = self.total_rows()
+        return min(span, rows) if rows is not None else span
+
 
 def _zonemap(arrays: Mapping[str, np.ndarray]) -> dict:
     zm = {}

@@ -1,0 +1,302 @@
+"""Tests for the cost-based adaptive planner (planner/): statistics &
+selectivity estimation, cost-model monotonicity, AUTO backend selection
+under a memory budget, feedback recalibration, and runtime-flag survival
+across optimizer rewrites."""
+import numpy as np
+import pytest
+
+import repro.core as core
+from repro.core import BackendEngines, get_context
+from repro.core import expr as E
+from repro.core import graph as G
+from repro.core.backends import CAPABILITIES, get_backend
+from repro.core.optimizer import _conjuncts, _rebuild, optimize, order_conjuncts
+from repro.core.planner.cost import plan_cost
+from repro.core.planner.stats import (TableStats, estimate_plan,
+                                      predicate_selectivity, source_stats)
+
+
+def _uniform_source(n=10_000, partition_rows=1024, seed=0):
+    rng = np.random.default_rng(seed)
+    return core.InMemorySource({
+        "fare": rng.uniform(0, 100, n),
+        "vendor": rng.integers(0, 4, n).astype(np.int64),
+        "miles": rng.uniform(0, 30, n),
+    }, partition_rows)
+
+
+# ---------------------------------------------------------------------------
+# Statistics / selectivity
+
+
+def test_source_stats_from_metadata():
+    src = _uniform_source(n=5000)
+    st = source_stats(src)
+    assert st.rows == 5000
+    assert st.exact
+    # vendor is an int column with span 0..3 → NDV 4 from zone maps
+    assert src.column_ndv("vendor") == 4
+    assert st.col_ndv("vendor") == 4
+    lo, hi = st.zonemap["fare"]
+    assert 0 <= lo < hi <= 100
+    assert st.total_bytes == pytest.approx(5000 * 24)
+
+
+def test_column_ndv_dict_vocab():
+    src = core.InMemorySource(
+        {"city": np.array([0, 1, 2, 0, 1], dtype=np.int32)},
+        dicts={"city": ["nyc", "sf", "la"]})
+    assert src.column_ndv("city") == 3
+
+
+def test_range_selectivity_against_zonemap():
+    src = _uniform_source()
+    st = source_stats(src)
+    sel = predicate_selectivity(
+        E.BinOp("lt", E.Col("fare"), E.Lit(25.0)), st)
+    assert sel == pytest.approx(0.25, abs=0.05)
+    sel_hi = predicate_selectivity(
+        E.BinOp("gt", E.Col("fare"), E.Lit(25.0)), st)
+    assert sel_hi == pytest.approx(0.75, abs=0.05)
+
+
+def test_equality_selectivity_against_ndv():
+    src = _uniform_source()
+    st = source_stats(src)
+    sel = predicate_selectivity(
+        E.BinOp("eq", E.Col("vendor"), E.Lit(2)), st)
+    assert sel == pytest.approx(0.25, abs=0.01)
+    conj = E.BinOp("and",
+                   E.BinOp("eq", E.Col("vendor"), E.Lit(2)),
+                   E.BinOp("lt", E.Col("fare"), E.Lit(50.0)))
+    assert predicate_selectivity(conj, st) == pytest.approx(0.125, abs=0.03)
+
+
+def test_filter_propagation_through_dag():
+    src = _uniform_source(n=8000)
+    scan = G.Scan(src)
+    f = G.Filter(scan, E.BinOp("lt", E.Col("fare"), E.Lit(50.0)))
+    gb = G.GroupByAgg(f, ["vendor"], {"m": ("miles", "sum")})
+    est = estimate_plan([gb])
+    assert est[f.id].rows == pytest.approx(4000, rel=0.15)
+    # group-by output capped at the key NDV
+    assert est[gb.id].rows <= 4
+
+
+# ---------------------------------------------------------------------------
+# Cost model
+
+
+def test_cost_monotone_in_rows():
+    for kind in CAPABILITIES:
+        costs = []
+        for n in (1000, 10_000, 100_000):
+            src = _uniform_source(n=n)
+            scan = G.Scan(src)
+            f = G.Filter(scan, E.BinOp("gt", E.Col("fare"), E.Lit(10.0)))
+            stats = estimate_plan([f])
+            costs.append(plan_cost([f], stats, kind).total)
+        assert costs[0] < costs[1] < costs[2], kind
+
+
+def test_streaming_peak_below_eager_for_aggregation():
+    src = _uniform_source(n=50_000, partition_rows=2048)
+    scan = G.Scan(src)
+    gb = G.GroupByAgg(scan, ["vendor"], {"m": ("miles", "sum")})
+    stats = estimate_plan([gb])
+    eager = plan_cost([gb], stats, BackendEngines.EAGER)
+    streaming = plan_cost([gb], stats, BackendEngines.STREAMING)
+    assert streaming.peak_bytes < eager.peak_bytes / 4
+
+
+def test_get_backend_auto_raises():
+    with pytest.raises(ValueError):
+        get_backend(BackendEngines.AUTO)
+
+
+# ---------------------------------------------------------------------------
+# AUTO selection
+
+
+def test_auto_small_workload_dispatches_eager():
+    ctx = get_context()
+    ctx.backend = BackendEngines.AUTO
+    src = _uniform_source(n=5000)
+    df = core.read_source(src)
+    df = df[df["fare"] > 10.0]
+    res = df.compute()
+    assert res.rows() == int((np.asarray(src._arrays["fare"]) > 10.0).sum())
+    assert len(ctx.planner_decisions) == 1
+    assert ctx.planner_decisions[0].backend == BackendEngines.EAGER
+    assert any("-> eager" in line for line in ctx.planner_trace)
+
+
+def test_auto_over_budget_dispatches_streaming():
+    ctx = get_context()
+    ctx.backend = BackendEngines.AUTO
+    src = _uniform_source(n=50_000, partition_rows=2048)
+    ctx.memory_budget = int(50_000 * 24 * 0.3)  # eager can't fit the table
+    df = core.read_source(src)
+    df = df[df["fare"] > 10.0]
+    out = df.groupby("vendor")["miles"].sum().compute()
+    assert out.rows() == 4
+    assert ctx.planner_decisions[0].backend == BackendEngines.STREAMING
+    assert any("budget!" in line for line in ctx.planner_trace)
+    # the streaming run really stayed under the budget (meter enforced)
+    assert ctx.last_peak_bytes <= ctx.memory_budget
+
+
+def test_auto_results_match_fixed_backend():
+    arrays = {"x": np.arange(1000, dtype=np.int64),
+              "y": np.linspace(0, 1, 1000)}
+    ctx = get_context()
+    ctx.backend = BackendEngines.EAGER
+    ref = core.from_arrays(dict(arrays), partition_rows=128)
+    ref = ref[ref["x"] % 3 == 0].compute()
+    ctx.reset()
+    ctx.backend = BackendEngines.AUTO
+    df = core.from_arrays(dict(arrays), partition_rows=128)
+    res = df[df["x"] % 3 == 0].compute()
+    np.testing.assert_allclose(np.asarray(res["y"]), np.asarray(ref["y"]))
+
+
+# ---------------------------------------------------------------------------
+# Feedback recalibration
+
+
+def test_feedback_recalibrates_estimates_within_10pct():
+    ctx = get_context()
+    ctx.backend = BackendEngines.AUTO
+    # heavily skewed column: the uniformity assumption over the zone map is
+    # badly wrong a priori (~50% estimated vs ~2% actual)
+    vals = np.concatenate([np.zeros(9800), np.linspace(1, 100, 200)])
+    src = core.InMemorySource({"fare": vals, "k": np.arange(10_000) % 7},
+                              partition_rows=1024)
+
+    def build():
+        df = core.read_source(src)
+        return df[df["fare"] > 50.0]
+
+    pred_actual = int((vals > 50.0).sum())
+    roots0, _ = optimize([build()._node], ctx)
+    est0 = estimate_plan(roots0, ctx)
+    prior_err = abs(est0[roots0[0].id].rows - pred_actual) / pred_actual
+    assert prior_err > 1.0          # a-priori estimate is way off
+
+    build().compute()               # execute once → feedback recorded
+    assert len(ctx.stats_store) >= 1
+
+    roots1, _ = optimize([build()._node], ctx)
+    est1 = estimate_plan(roots1, ctx)
+    post_err = abs(est1[roots1[0].id].rows - pred_actual) / max(pred_actual, 1)
+    assert post_err <= 0.10
+
+
+def test_feedback_influences_next_placement():
+    ctx = get_context()
+    ctx.backend = BackendEngines.AUTO
+    src = _uniform_source(n=20_000, partition_rows=1024)
+    df = core.read_source(src)
+    df[df["fare"] > 10.0].compute()
+    n_before = len(ctx.stats_store)
+    assert n_before >= 1
+    # second run of the same plan consults the store (estimates exact)
+    df2 = core.read_source(src)
+    node = df2[df2["fare"] > 10.0]._node
+    roots, _ = optimize([node], ctx)
+    est = estimate_plan(roots, ctx)
+    assert est[roots[0].id].exact
+
+
+# ---------------------------------------------------------------------------
+# Selectivity-ordered filter fusion
+
+
+def test_order_conjuncts_most_selective_first():
+    src = _uniform_source()
+    scan = G.Scan(src)
+    weak = E.BinOp("gt", E.Col("fare"), E.Lit(1.0))       # ~0.99
+    strong = E.BinOp("eq", E.Col("vendor"), E.Lit(0))     # 0.25
+    f = G.Filter(scan, E.BinOp("and", weak, strong))
+    roots, _ = order_conjuncts([f], None, trace=None)
+    conj = _conjuncts(roots[0].predicate)
+    assert conj[0].key() == strong.key()
+    assert conj[1].key() == weak.key()
+
+
+def test_order_conjuncts_traced_via_optimize():
+    ctx = get_context()
+    src = _uniform_source()
+    scan = G.Scan(src)
+    f1 = G.Filter(scan, E.BinOp("gt", E.Col("fare"), E.Lit(1.0)))
+    f2 = G.Filter(f1, E.BinOp("eq", E.Col("vendor"), E.Lit(0)))
+    optimize([f2], ctx)
+    assert any(t.startswith("order_conjuncts") for t in ctx.optimizer_trace)
+
+
+# ---------------------------------------------------------------------------
+# Rewrite-flag survival (optimizer._rebuild regression)
+
+
+def test_rebuild_carries_runtime_flags():
+    src = _uniform_source(n=100)
+    scan = G.Scan(src)
+    f = G.Filter(scan, E.BinOp("gt", E.Col("fare"), E.Lit(0.0)))
+    a = G.Assign(f, "z", E.BinOp("mul", E.Col("miles"), E.Lit(2.0)))
+    a.persist = True
+    a.cache_key = ("logical-key",)
+    a.result = {"sentinel": np.zeros(1)}
+    # replace the deep scan → every ancestor is cloned via with_inputs
+    new_scan = G.Scan(src, columns=("fare", "miles"))
+    roots, idmap = _rebuild([a], {scan.id: new_scan})
+    na = roots[0]
+    assert na is not a
+    assert na.persist is True
+    assert na.cache_key == ("logical-key",)
+    assert na.result is a.result
+    assert idmap[a.id] is na
+
+
+def test_persist_marked_node_is_rewrite_barrier():
+    """A planned materialization point must not be fused/rewritten away —
+    its cached value is keyed on its own (logical) shape (§3.5)."""
+    from repro.core.optimizer import push_filters
+    src = _uniform_source(n=1000)
+    scan = G.Scan(src)
+    inner = G.Filter(scan, E.BinOp("gt", E.Col("fare"), E.Lit(10.0)))
+    inner.persist = True
+    outer = G.Filter(inner, E.BinOp("lt", E.Col("miles"), E.Lit(5.0)))
+    roots, _ = push_filters([outer])
+    # no fusion: both filters survive, persist mark intact on the inner one
+    ops = [n.op for n in G.walk(roots)]
+    assert ops == ["scan", "filter", "filter"]
+    assert G.walk(roots)[1].persist is True
+
+
+def test_hybrid_grouping_never_splits_shared_subtrees():
+    from repro.core.planner.select import plan_placement
+    ctx = get_context()
+    src = _uniform_source(n=20_000, partition_rows=1024)
+    scan = G.Scan(src)
+    shared = G.Filter(scan, E.BinOp("gt", E.Col("fare"), E.Lit(10.0)))
+    a = G.GroupByAgg(shared, ["vendor"], {"m": ("miles", "sum")})
+    b = G.SortValues(shared, ["fare"])
+    decisions = plan_placement([a, b], ctx)
+    groups = [{n.id for n in G.walk(d.roots)} for d in decisions]
+    for i, g1 in enumerate(groups):
+        for g2 in groups[i + 1:]:
+            assert not (g1 & g2), "shared subtree split across backends"
+    assert sum(len(d.roots) for d in decisions) == 2
+
+
+def test_persist_mark_survives_full_optimize():
+    ctx = get_context()
+    src = _uniform_source(n=1000)
+    scan = G.Scan(src)
+    a = G.Assign(scan, "z", E.BinOp("mul", E.Col("miles"), E.Lit(2.0)))
+    f = G.Filter(a, E.BinOp("gt", E.Col("fare"), E.Lit(10.0)))
+    f.persist = True
+    roots, idmap = optimize([f], ctx)
+    # pushdown rewrites the subtree; the node the old root maps to must
+    # still carry the persist mark
+    assert idmap[f.id].persist is True

@@ -7,6 +7,9 @@
 4. kernel compaction/aggregation laws.
 """
 import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
 import repro.core as core
