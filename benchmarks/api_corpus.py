@@ -1,0 +1,120 @@
+"""PandasBench-style API-coverage corpus: small *plain pandas* programs run
+unmodified through the `repro.pandas` facade.
+
+Each program takes the facade module ``pd`` and a seeded numpy rng, builds
+its own small data, and forces at least one result.  The harness
+(`benchmarks/run.py api_coverage`) measures per program how many operations
+were served natively (lazy graph nodes), via the fallback protocol
+(``ctx.fallback_trace``), or failed — coverage is a number, not a claim."""
+from __future__ import annotations
+
+import numpy as np
+
+
+def _taxi(pd, rng, n=4_000):
+    return pd.DataFrame({
+        "fare": rng.uniform(-5, 100, n),
+        "tip": rng.uniform(0, 20, n),
+        "passengers": rng.integers(1, 7, n).astype(np.int64),
+        "vendor": [["acme", "beta", "cabco"][i] for i in
+                   rng.integers(0, 3, n)],
+        "pickup": (1_577_836_800 + rng.integers(0, 366 * 86400, n)),
+    })
+
+
+def filter_groupby(pd, rng):
+    df = _taxi(pd, rng)
+    df = df[df["fare"] > 0]
+    df["tip_rate"] = df["tip"] / df["fare"]
+    return df.groupby("vendor")["tip_rate"].mean().compute()
+
+
+def feature_engineering(pd, rng):
+    df = _taxi(pd, rng)
+    df["day"] = df["pickup"].dt.dayofweek
+    df["quarter"] = df["pickup"].dt.quarter        # fallback: wrapped UDF
+    df["fare_clipped"] = df["fare"].clip(0, 50)    # fallback: wrapped UDF
+    return df.groupby("quarter")["fare_clipped"].sum().compute()
+
+
+def order_statistics(pd, rng):
+    df = _taxi(pd, rng)
+    top = df.nlargest(10, "fare")                  # fallback: materialize
+    return top["fare"].median()                    # fallback: materialize
+
+
+def missing_data(pd, rng):
+    df = _taxi(pd, rng)
+    df["maybe"] = df["fare"] / df["fare"].round()  # injects NaN/inf-ish cells
+    clean = df.dropna()                            # fallback: materialize
+    return len(clean.compute().columns)
+
+
+def join_and_concat(pd, rng):
+    rides = _taxi(pd, rng, n=2_000)
+    vendors = pd.DataFrame({"vendor": ["acme", "beta", "cabco"],
+                            "fee": [1.0, 2.0, 0.5]})
+    j = pd.merge(rides, vendors, on="vendor")
+    both = pd.concat([j, j])
+    return both.groupby("vendor")["fee"].count().compute()
+
+
+def string_and_counts(pd, rng):
+    df = _taxi(pd, rng)
+    mask = df["vendor"].str.contains("a")          # native: vocab predicate
+    counts = df[mask]["vendor"].value_counts()     # fallback: materialize
+    return counts.compute()
+
+
+def robust_statistics(pd, rng):
+    df = _taxi(pd, rng)
+    spread = df["fare"].std()                      # fallback: materialize
+    q90 = df["fare"].quantile(0.9)                 # fallback: materialize
+    by_vendor = df.groupby("vendor").median()      # fallback: materialize
+    return (spread, q90, by_vendor.compute())
+
+
+def sort_head_describe(pd, rng):
+    df = _taxi(pd, rng)
+    ordered = df.sort_values("fare", ascending=False).head(20)
+    avg = ordered["tip"].mean()
+    return float(avg.compute())
+
+
+def datetime_pipeline(pd, rng):
+    df = pd.DataFrame({
+        "when": ["2021-03-01", "2021-06-15", "2021-06-16", "2021-11-30"],
+        "amount": [1.0, 2.0, 3.0, 4.0],
+    })
+    df["month"] = df["when"].dt.month
+    df["doy"] = df["when"].dt.dayofyear            # fallback: wrapped UDF
+    return df.groupby("month")["amount"].sum().compute()
+
+
+def unsupported_ops(pd, rng):
+    """Deliberately leans on unimplemented API — measures the *failed*
+    bucket (each gap is recorded in the trace before raising)."""
+    df = _taxi(pd, rng, n=500)
+    failures = 0
+    for call in (lambda: df.pivot_table(index="vendor"),
+                 lambda: df.melt(),
+                 lambda: df["fare"].ewm(span=3)):
+        try:
+            call()
+        except (AttributeError, NotImplementedError):
+            failures += 1
+    return failures
+
+
+CORPUS = [
+    ("filter_groupby", filter_groupby),
+    ("feature_engineering", feature_engineering),
+    ("order_statistics", order_statistics),
+    ("missing_data", missing_data),
+    ("join_and_concat", join_and_concat),
+    ("string_and_counts", string_and_counts),
+    ("robust_statistics", robust_statistics),
+    ("sort_head_describe", sort_head_describe),
+    ("datetime_pipeline", datetime_pipeline),
+    ("unsupported_ops", unsupported_ops),
+]

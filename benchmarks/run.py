@@ -202,6 +202,66 @@ def backend_selection():
     emit("backend_selection_json", 0.0, path)
 
 
+def api_coverage():
+    """PandasBench-style API-coverage figure: run the plain-pandas corpus
+    (`benchmarks/api_corpus.py`) through the `repro.pandas` facade and count
+    per program how many operations were served natively (lazy graph
+    nodes), served via the measured fallback protocol, or failed.  Writes
+    ``api_coverage.json``."""
+    import repro.pandas as pd
+    from repro.core import graph as G
+    from repro.core.context import session
+    from .api_corpus import CORPUS
+
+    out: dict = {"programs": {}, "totals": {"native_nodes": 0, "fallback": 0,
+                                            "failed": 0, "programs_ok": 0}}
+    for name, prog in CORPUS:
+        rng = np.random.default_rng(0)
+        with session(name=f"api_coverage:{name}") as ctx:
+            ctx.print_fn = lambda *a: None
+            nodes_before = next(G._ids)
+            t0 = time.perf_counter()
+            ok = True
+            error = None
+            try:
+                prog(pd, rng)
+            except Exception as e:  # noqa: BLE001 — coverage gap, not abort
+                ok = False
+                error = f"{type(e).__name__}: {e}"
+            secs = time.perf_counter() - t0
+            nodes = next(G._ids) - nodes_before - 1
+            served = [ev for ev in ctx.fallback_trace if ev.status == "fallback"]
+            failed = [ev for ev in ctx.fallback_trace if ev.status == "failed"]
+            rec = {
+                "ok": ok,
+                "seconds": secs,
+                "native_nodes": nodes,
+                "fallback": len(served),
+                "failed": len(failed),
+                "fallback_ops": sorted({ev.op for ev in served}),
+                "failed_ops": sorted({ev.op for ev in failed}),
+            }
+            if error:
+                rec["error"] = error
+            out["programs"][name] = rec
+            out["totals"]["native_nodes"] += nodes
+            out["totals"]["fallback"] += len(served)
+            out["totals"]["failed"] += len(failed)
+            out["totals"]["programs_ok"] += int(ok)
+            emit(f"api_coverage_{name}", secs * 1e6,
+                 f"{'ok' if ok else 'FAIL'} native={nodes} "
+                 f"fallback={len(served)} failed={len(failed)}")
+    total = out["totals"]
+    ops = total["native_nodes"] + total["fallback"] + total["failed"]
+    total["fallback_share"] = total["fallback"] / max(ops, 1)
+    path = os.environ.get("REPRO_API_COVERAGE_OUT", "api_coverage.json")
+    with open(path, "w") as f:
+        json.dump(out, f, indent=2)
+    emit("api_coverage_json", 0.0,
+         f"{path} ok={total['programs_ok']}/{len(CORPUS)} "
+         f"fallback_share={total['fallback_share']:.3f}")
+
+
 def analysis_overhead():
     """Paper §5.3: 0.04–0.59 s static-analysis overhead."""
     import inspect
@@ -292,11 +352,26 @@ def roofline():
              f"dom={rf['dominant']} frac={r['roofline_fraction']:.3f}")
 
 
-def main() -> None:
+ALL_FIGURES = (fig12_applicability, fig13_exec_time, fig14_speedup,
+               fig15_memory, backend_selection, api_coverage,
+               analysis_overhead, ablation_persist, kernels, roofline)
+
+
+def main(argv: list[str] | None = None) -> None:
+    """Run all figures, or only the ones named on the command line:
+
+        PYTHONPATH=src python -m benchmarks.run api_coverage
+    """
+    import sys
+    argv = list(sys.argv[1:] if argv is None else argv)
+    by_name = {fn.__name__: fn for fn in ALL_FIGURES}
+    unknown = [a for a in argv if a not in by_name]
+    if unknown:
+        raise SystemExit(f"unknown figure(s) {unknown}; "
+                         f"choose from {sorted(by_name)}")
+    selected = [by_name[a] for a in argv] or list(ALL_FIGURES)
     t0 = time.perf_counter()
-    for fn in (fig12_applicability, fig13_exec_time, fig14_speedup,
-               fig15_memory, backend_selection, analysis_overhead,
-               ablation_persist, kernels, roofline):
+    for fn in selected:
         try:
             fn()
         except Exception as e:  # noqa: BLE001

@@ -1,21 +1,23 @@
 """Quickstart: the paper's two-line change (Fig. 2).
 
-A plain-Pandas-style program running on the LaFP lazy engine: the import and
-``pd.analyze()`` are the only deviations from pandas.  Run:
+A plain-Pandas program running on the LaFP lazy engine.  The import swap and
+``pd.analyze()`` are the ONLY deviations from pandas — ``analyze()`` also
+rebinds this script's ``print``/``len`` to their lazy sink-building versions
+(the paper's JIT program rewrite), so output stays deferred without a third
+import.  Run:
 
     PYTHONPATH=src python examples/quickstart.py
 """
 import numpy as np
 
-import repro.core.lazy as pd                     # ① the import swap
-from repro.core.func import print, flush         # lazy print (§3.3)
+import repro.pandas as pd                        # ① the import swap
 
 pd.analyze()                                      # ② JIT static analysis
 
-# -- build a demo CSV-like dataset in memory --------------------------------
+# -- a plain-pandas program from here on ------------------------------------
 rng = np.random.default_rng(0)
 N = 200_000
-df = pd.from_arrays({
+df = pd.DataFrame({
     "fare_amount": rng.uniform(-5, 100, N),
     "passenger_count": rng.integers(0, 7, N).astype(np.int64),
     "pickup_datetime": rng.integers(1_577_836_800, 1_609_459_200, N),
@@ -29,18 +31,25 @@ df = pd.from_arrays({
 print(df.head())                                  # lazy: doesn't force
 
 df = df[df["fare_amount"] > 0]                    # predicate pushdown
-df["day"] = df.pickup_datetime.dt.dayofweek       # feature add
+df["day"] = df.pickup_datetime.dt.dayofweek       # feature add (native)
+df["quarter"] = df.pickup_datetime.dt.quarter     # fallback: wrapped UDF
 p_per_day = df.groupby(["day"])["passenger_count"].sum()
 print(p_per_day)                                  # still lazy
+
+top = df.nlargest(3, "fare_amount")               # fallback: materializes
+print(top)
 
 avg_fare = df.fare_amount.mean()
 print(f"Average fare: {avg_fare}")                # deferred f-string (§3.3)
 
-flush()                                           # force everything, in order
+# -- diagnostic epilogue (not part of the pandas program) -------------------
+pd.flush()                                        # force everything, in order
 
-# show what the optimizer did
-from repro.core import get_context
 import builtins
+ctx = pd.get_context()
 builtins.print("\noptimizer trace:")
-for t in get_context().optimizer_trace:
+for t in ctx.optimizer_trace:
     builtins.print("  •", t)
+builtins.print("fallback trace (API served eagerly, measured):")
+for ev in ctx.fallback_trace:
+    builtins.print("  •", ev)

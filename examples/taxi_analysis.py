@@ -1,4 +1,5 @@
-"""Out-of-core analytics: the same program on all three backends, with a
+"""Out-of-core analytics: the same program on all three backends, each run
+in its own isolated session (fresh persist cache / sinks / stats), with a
 memory budget that only the streaming backend satisfies (paper Fig. 12).
 
     PYTHONPATH=src python examples/taxi_analysis.py
@@ -8,13 +9,13 @@ import time
 
 import numpy as np
 
-import repro.core as core
-from repro.core import BackendEngines, get_context
+import repro.pandas as pd
+from repro.pandas import BackendEngines
 from repro.core.source import write_npz_source
 
 
 def program(src):
-    df = core.read_source(src)
+    df = pd.read_source(src)
     df = df[(df["fare_amount"] > 0) & (df["trip_miles"] < 50)]
     df["per_mile"] = df["fare_amount"] / (df["trip_miles"] + 0.1)
     by_vendor = df.groupby(["vendor"])["per_mile"].mean()
@@ -34,26 +35,26 @@ def main():
     }
     with tempfile.TemporaryDirectory() as td:
         src = write_npz_source(f"{td}/taxi", arrays, partition_rows=50_000)
-        ctx = get_context()
         dataset = src.total_rows() * src.schema.row_bytes()
-        ctx.memory_budget = dataset // 4          # deliberately too small
-        print(f"dataset {dataset/1e6:.0f} MB, budget {ctx.memory_budget/1e6:.0f} MB")
+        budget = dataset // 4                     # deliberately too small
+        print(f"dataset {dataset/1e6:.0f} MB, budget {budget/1e6:.0f} MB")
         for backend in (BackendEngines.EAGER, BackendEngines.STREAMING,
                         BackendEngines.DISTRIBUTED):
-            ctx.backend = backend
-            ctx.last_peak_bytes = 0
-            t0 = time.perf_counter()
-            try:
-                res = program(src)
-                status = f"ok in {time.perf_counter()-t0:.2f}s"
-                if backend == BackendEngines.STREAMING:
-                    status += f" (peak {ctx.last_peak_bytes/1e6:.0f} MB)"
-            except Exception as e:   # noqa: BLE001
-                status = f"FAILED: {type(e).__name__}"
-                res = None
-            print(f"{backend.value:12s}: {status}")
-            if res is not None:
-                print(res)
+            # session-scoped context: backend choice, budget and peak
+            # accounting are isolated per run — no cross-backend bleed
+            with pd.session(backend=backend, memory_budget=budget) as ctx:
+                t0 = time.perf_counter()
+                try:
+                    res = program(src)
+                    status = f"ok in {time.perf_counter()-t0:.2f}s"
+                    if backend == BackendEngines.STREAMING:
+                        status += f" (peak {ctx.last_peak_bytes/1e6:.0f} MB)"
+                except Exception as e:   # noqa: BLE001
+                    status = f"FAILED: {type(e).__name__}"
+                    res = None
+                print(f"{backend.value:12s}: {status}")
+                if res is not None:
+                    print(res)
         # note: only streaming respects the budget; eager/distributed load
         # the working set whole (the paper's Pandas/Modin behaviour).
 

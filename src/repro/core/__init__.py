@@ -3,14 +3,16 @@
 # (tracer, source_analysis), DAG optimization (optimizer, liveness), lazy
 # sinks (sinks, func), metadata (metadata), and pluggable backends
 # (backends.eager / backends.streaming / backends.distributed).
-from .context import BackendEngines, get_context
+from .context import (BackendEngines, default_context, get_context,
+                      pop_session, push_session, session)
 from .lazyframe import LazyFrame, Result, from_arrays, read_npz, read_source
 from .runtime import execute, flush
 from .source import InMemorySource, NpzDirectorySource, encode_strings, write_npz_source
 from .tracer import analyze
 
 __all__ = [
-    "BackendEngines", "get_context", "LazyFrame", "Result", "from_arrays",
+    "BackendEngines", "get_context", "default_context", "session",
+    "push_session", "pop_session", "LazyFrame", "Result", "from_arrays",
     "read_npz", "read_source", "execute", "flush", "InMemorySource",
     "NpzDirectorySource", "encode_strings", "write_npz_source", "analyze",
 ]

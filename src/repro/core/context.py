@@ -1,8 +1,17 @@
 """Session context: backend choice, sink ordering chain, persist cache,
-static-analysis hints (the runtime side of the paper's JIT analysis)."""
+static-analysis hints (the runtime side of the paper's JIT analysis).
+
+Contexts are *session-scoped*: ``get_context()`` returns the top of a
+thread-local session stack, falling back to a process-wide default session.
+``session(...)`` is the public context manager (re-exported as
+``repro.pandas.session``) giving an isolated planner / persist / sink /
+stats state; nested sessions stack, and each thread gets its own stack so
+concurrent sessions never share mutable state."""
 from __future__ import annotations
 
+import contextlib
 import enum
+import threading
 from typing import Any
 
 from . import graph
@@ -16,7 +25,8 @@ class BackendEngines(enum.Enum):
 
 
 class LaFPContext:
-    def __init__(self):
+    def __init__(self, name: str = "default"):
+        self.session_name = name
         self.backend: BackendEngines = BackendEngines.EAGER
         self.backend_options: dict[str, Any] = {}
         # §3.3 lazy print: chain of sink nodes not yet flushed.
@@ -42,11 +52,18 @@ class LaFPContext:
         self.stats_store = StatsStore()
         self.planner_decisions: list[Any] = []  # last force point's Decisions
         self.print_fn = print                   # patched in tests
+        # facade fallback protocol (repro.pandas): every op the lazy layer
+        # serves by eager materialization (or fails to serve at all) is
+        # recorded here — coverage gaps are measured, not guessed.
+        self.fallback_trace: list[Any] = []     # FallbackEvent records
+        # force-point log: why each execute() was triggered (user compute,
+        # fallback materialization, repr, flush, …)
+        self.force_log: list[str] = []
         # metrics
         self.exec_count = 0
 
     def reset(self):
-        self.__init__()
+        self.__init__(self.session_name)
 
     def sink_chain_add(self, sink: graph.SinkPrint):
         self.last_sink = sink
@@ -57,8 +74,74 @@ class LaFPContext:
         self.last_sink = None
 
 
-_CTX = LaFPContext()
+# ---------------------------------------------------------------------------
+# Session stack.  The default session preserves the pre-session global
+# behaviour (module-level scripts, benchmarks); pushed sessions shadow it
+# per-thread.
+
+_DEFAULT_CTX = LaFPContext()
+_CTX = _DEFAULT_CTX  # back-compat alias
+_TLS = threading.local()
+
+
+def _stack() -> list[LaFPContext]:
+    stack = getattr(_TLS, "stack", None)
+    if stack is None:
+        stack = _TLS.stack = []
+    return stack
 
 
 def get_context() -> LaFPContext:
-    return _CTX
+    stack = _stack()
+    return stack[-1] if stack else _DEFAULT_CTX
+
+
+def default_context() -> LaFPContext:
+    return _DEFAULT_CTX
+
+
+def push_session(ctx: LaFPContext | None = None) -> LaFPContext:
+    ctx = ctx if ctx is not None else LaFPContext(name="session")
+    _stack().append(ctx)
+    return ctx
+
+
+def pop_session() -> LaFPContext:
+    stack = _stack()
+    if not stack:
+        raise RuntimeError("pop_session() with no active session")
+    return stack.pop()
+
+
+def session_depth() -> int:
+    return len(_stack())
+
+
+@contextlib.contextmanager
+def session(backend: BackendEngines | None = None,
+            memory_budget: int | None = None,
+            name: str = "session",
+            **backend_options):
+    """Isolated execution session: fresh backend choice, persist cache,
+    sink chain, stats store, and traces.
+
+        with repro.pandas.session(backend=BackendEngines.STREAMING,
+                                  memory_budget=1 << 28) as ctx:
+            ...plain pandas-style code...
+
+    Pending lazy sinks are flushed on clean exit (so deferred prints inside
+    the block don't silently vanish); on exception the session is popped
+    unflushed."""
+    ctx = LaFPContext(name=name)
+    if backend is not None:
+        ctx.backend = backend
+    ctx.memory_budget = memory_budget
+    ctx.backend_options.update(backend_options)
+    push_session(ctx)
+    try:
+        yield ctx
+        if ctx.last_sink is not None:
+            from .runtime import flush
+            flush()
+    finally:
+        pop_session()

@@ -1,141 +1,32 @@
-"""The drop-in namespace (paper Fig. 2):
+"""DEPRECATED drop-in namespace — use ``import repro.pandas as pd``.
 
-    import repro.core.lazy as pd
-    pd.analyze()
-    ...rest of the program in plain pandas style...
-
-Exposes read_* constructors, the backend switch, analyze(), and flush().
-"""
+This module is a thin shim kept for back-compat: it re-exports the
+`repro.pandas` facade (same objects, same behaviour, including the working
+module-level ``BACKEND_ENGINE`` property) and emits a ``DeprecationWarning``
+on import."""
 from __future__ import annotations
 
-import numpy as np
+import sys
+import warnings
 
-from .context import BackendEngines, get_context
-from .lazyframe import LazyFrame, from_arrays as _from_arrays, read_npz as _read_npz, read_source as _read_source
-from .source import InMemorySource, encode_strings
-from .tracer import analyze, usecols_hint
-from .runtime import flush
+warnings.warn(
+    "repro.core.lazy is deprecated; use `import repro.pandas as pd` "
+    "(the two-line drop-in facade)", DeprecationWarning, stacklevel=2)
 
-__all__ = ["analyze", "flush", "read_source", "read_npz", "from_arrays",
-           "read_csv", "BackendEngines", "set_backend", "LazyFrame"]
+from repro.pandas import (  # noqa: E402,F401 — re-exports
+    BackendEngines, DataFrame, FallbackEvent, LaFPContext, LazyColumn,
+    LazyFrame, Result, Series, analyze, concat, default_context, flush,
+    from_arrays, get_context, isna, merge, notna, pop_session, push_session,
+    read_csv, read_npz, read_source, session, set_backend, to_datetime,
+)
+from repro.pandas import _FacadeModule  # noqa: E402
+from repro.pandas.io import _looks_datetime, _parse_datetimes  # noqa: E402,F401
 
+__all__ = [
+    "analyze", "flush", "read_source", "read_npz", "from_arrays", "read_csv",
+    "BackendEngines", "set_backend", "LazyFrame", "DataFrame", "Series",
+    "concat", "merge", "to_datetime", "isna", "session",
+]
 
-class _BackendProxy:
-    """pd.BACKEND_ENGINE = pd.BackendEngines.X (paper §2.6 one-liner)."""
-
-    def __get__(self, obj, objtype=None):
-        return get_context().backend
-
-    def __set__(self, obj, value):
-        get_context().backend = value
-
-
-def set_backend(engine: BackendEngines, **options):
-    ctx = get_context()
-    ctx.backend = engine
-    ctx.backend_options.update(options)
-
-
-def _apply_usecols(source, cols):
-    """Record static usecols for this source (column selection, §3.1)."""
-    ctx = get_context()
-    if cols is not None and ctx.analysis:
-        ctx.analysis.setdefault("scan_extra_cols", {})[id(source)] = list(cols)
-    return source
-
-
-def read_source(source):
-    cols = usecols_hint()
-    frame = _read_source(_apply_usecols(source, cols))
-    if cols is not None:
-        from . import graph as G
-        valid = [c for c in cols if c in source.schema]
-        if valid:
-            frame = LazyFrame(G.Scan(source, tuple(valid)),
-                              source_vocab=source.dicts)
-    return frame
-
-
-def read_npz(path: str):
-    from .source import NpzDirectorySource
-    return read_source(NpzDirectorySource(path))
-
-
-def from_arrays(arrays, partition_rows: int = 1 << 16, dicts=None,
-                datetimes=(), name="mem"):
-    src = InMemorySource(arrays, partition_rows, dicts, datetimes, name)
-    return read_source(src)
-
-
-def read_csv(path: str, usecols=None, dtype=None, parse_dates=()):
-    """Minimal CSV reader: numeric columns inferred, strings dictionary-
-    encoded, ISO datetimes → int64 epoch seconds.  ``usecols`` comes from the
-    user or from static analysis (paper Fig. 4)."""
-    import csv as _csv
-
-    hint = usecols if usecols is not None else usecols_hint()
-    with open(path, newline="") as f:
-        reader = _csv.reader(f)
-        header = next(reader)
-        keep = [i for i, h in enumerate(header)
-                if hint is None or h in hint]
-        names = [header[i] for i in keep]
-        cols: dict[str, list] = {n: [] for n in names}
-        for row in reader:
-            for i, n in zip(keep, names):
-                cols[n].append(row[i])
-    arrays: dict[str, np.ndarray] = {}
-    dicts: dict[str, list] = {}
-    datetimes: list[str] = list(parse_dates)
-    for n, vals in cols.items():
-        arr = None
-        if n in datetimes:
-            arrays[n] = _parse_datetimes(vals)
-            continue
-        try:
-            arr = np.asarray(vals, dtype=np.int64)
-        except ValueError:
-            try:
-                arr = np.asarray(vals, dtype=np.float64)
-            except ValueError:
-                if _looks_datetime(vals):
-                    arrays[n] = _parse_datetimes(vals)
-                    datetimes.append(n)
-                    continue
-                codes, vocab = encode_strings(vals)
-                arrays[n] = codes
-                dicts[n] = vocab
-                continue
-        if dtype and n in dtype:
-            arr = arr.astype(dtype[n])
-        arrays[n] = arr
-    src = InMemorySource(arrays, dicts=dicts, datetimes=datetimes,
-                         name=path)
-    return _read_source(_apply_usecols(src, hint))
-
-
-def _looks_datetime(vals) -> bool:
-    probe = vals[0] if vals else ""
-    return len(probe) >= 10 and probe[4:5] == "-" and probe[7:8] == "-"
-
-
-def _parse_datetimes(vals) -> np.ndarray:
-    import datetime as _dt
-    out = np.empty(len(vals), np.int64)
-    for i, v in enumerate(vals):
-        v = v.strip().replace("T", " ")
-        fmt = "%Y-%m-%d %H:%M:%S" if len(v) > 10 else "%Y-%m-%d"
-        out[i] = int(_dt.datetime.strptime(v, fmt)
-                     .replace(tzinfo=_dt.timezone.utc).timestamp())
-    return out
-
-
-# module-level attribute emulation for BACKEND_ENGINE
-def __getattr__(name):
-    if name == "BACKEND_ENGINE":
-        return get_context().backend
-    raise AttributeError(name)
-
-
-def __setattr__unused(name, value):  # modules can't easily hook setattr; use set_backend
-    raise AttributeError
+# same live BACKEND_ENGINE property as the facade (module-class swap)
+sys.modules[__name__].__class__ = _FacadeModule

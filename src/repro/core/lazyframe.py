@@ -28,7 +28,12 @@ class DtAccessor:
     def __getattr__(self, field):
         if field.startswith("_"):
             raise AttributeError(field)
-        return LazyColumn(self._col.frame, E.DtField(self._col.expr, field))
+        if field in E._DT_FIELDS:
+            return LazyColumn(self._col.frame, E.DtField(self._col.expr, field))
+        # facade fallback protocol: unknown dt fields run through the
+        # numpy-level kernel table as a wrapped UDF, recorded per session.
+        from repro.pandas.fallback import dt_fallback
+        return dt_fallback(self._col, field)
 
 
 class LazyColumn:
@@ -93,6 +98,22 @@ class LazyColumn:
     def str(self):
         return StrAccessor(self)
 
+    def __getattr__(self, name):
+        # Only reached when normal lookup fails: pandas Series methods the
+        # lazy layer doesn't implement natively go through the fallback
+        # kernel table (repro.pandas) instead of raising AttributeError.
+        if name.startswith("_") or name in ("frame", "expr"):
+            raise AttributeError(name)
+        from repro.pandas.fallback import series_fallback
+        return series_fallback(self, name)
+
+    def to_numpy(self):
+        return np.asarray(self.compute(force_reason="Series.to_numpy"))
+
+    @property
+    def values(self):
+        return self.to_numpy()
+
     # reductions → LazyScalar
     def _reduce(self, fn):
         node = self.frame._node_for_expr_column(self.expr)
@@ -106,9 +127,9 @@ class LazyColumn:
     def count(self): return self._reduce("count")
     def nunique(self): return self._reduce("nunique")
 
-    def compute(self, live_df=None):
+    def compute(self, live_df=None, force_reason="Series.compute"):
         node = self.frame._node_for_expr_column(self.expr)
-        res = _execute([node._inner], live_df)[0]
+        res = _execute([node._inner], live_df, force_reason)[0]
         return res[node._col_name]
 
     def head(self, n=5):
@@ -118,7 +139,10 @@ class LazyColumn:
 
 class StrAccessor:
     """Dict-encoded string ops: equality/isin against vocab (TPU adaptation —
-    comparisons happen on int32 codes)."""
+    comparisons happen on int32 codes).  Predicates over the vocab itself
+    (contains / startswith / endswith / match-by-callable) stay lazy: the
+    string work happens once on the (small) vocabulary, the per-row work is
+    an integer isin on the codes."""
 
     def __init__(self, col: LazyColumn):
         self._col = col
@@ -127,6 +151,29 @@ class StrAccessor:
         vocab = self._col.frame._vocab_for(self._col.expr)
         idx = {v: i for i, v in enumerate(vocab)}
         return [idx[v] for v in values if v in idx]
+
+    def _vocab_predicate(self, pred):
+        vocab = self._col.frame._vocab_for(self._col.expr)
+        codes = tuple(i for i, v in enumerate(vocab) if pred(v))
+        if not codes:
+            return LazyColumn(self._col.frame,
+                              E.BinOp("lt", self._col.expr, E.Lit(0)))
+        return LazyColumn(self._col.frame, E.IsIn(self._col.expr, codes))
+
+    def contains(self, pat):
+        return self._vocab_predicate(lambda v: pat in v)
+
+    def startswith(self, pat):
+        return self._vocab_predicate(lambda v: v.startswith(pat))
+
+    def endswith(self, pat):
+        return self._vocab_predicate(lambda v: v.endswith(pat))
+
+    def __getattr__(self, name):
+        if name.startswith("_"):
+            raise AttributeError(name)
+        from repro.pandas.fallback import str_fallback
+        return str_fallback(self._col, name)
 
     def eq(self, value):
         codes = self._codes_for([value])
@@ -160,8 +207,8 @@ class LazyScalar:
         self.node = node
         get_context().scalar_registry[node.id] = node
 
-    def compute(self, live_df=None):
-        return _execute([self.node], live_df)[0]
+    def compute(self, live_df=None, force_reason="scalar.compute"):
+        return _execute([self.node], live_df, force_reason)[0]
 
     def __format__(self, spec):
         return f"{self.ESC}{self.node.id}\x00"
@@ -191,6 +238,15 @@ class GroupBy:
     def size(self):
         return self.agg({"size": (None, "count")})
 
+    def __getattr__(self, name):
+        if name.startswith("_") or name in ("frame", "keys"):
+            raise AttributeError(name)
+        cols = self.frame._known_columns()
+        if cols is not None and name in cols:
+            return GroupByColumn(self, name)   # gb.col.sum() sugar
+        from repro.pandas.fallback import groupby_fallback
+        return groupby_fallback(self, None, name)
+
 
 class GroupByColumn:
     def __init__(self, gb: GroupBy, col: str):
@@ -206,6 +262,12 @@ class GroupByColumn:
     def max(self): return self._agg("max")
     def count(self): return self._agg("count")
     def nunique(self): return self._agg("nunique")
+
+    def __getattr__(self, name):
+        if name.startswith("_") or name in ("gb", "col"):
+            raise AttributeError(name)
+        from repro.pandas.fallback import groupby_fallback
+        return groupby_fallback(self.gb, self.col, name)
 
 
 class LazyFrame:
@@ -229,7 +291,13 @@ class LazyFrame:
     def __getattr__(self, name):
         if name.startswith("_"):
             raise AttributeError(name)
-        return LazyColumn(self, E.Col(name))
+        cols = self._known_columns()
+        if cols is None or name in cols:
+            return LazyColumn(self, E.Col(name))
+        # Not a column of this frame: route through the fallback protocol
+        # (repro.pandas kernel table) instead of building a doomed Col ref.
+        from repro.pandas.fallback import frame_fallback
+        return frame_fallback(self, name)
 
     def __setitem__(self, key: str, value):
         self.__dict__["_node"] = G.Assign(self._node, key, _to_expr(value))
@@ -240,7 +308,75 @@ class LazyFrame:
         else:
             self[key] = value
 
+    # -- pandas-shaped metadata ----------------------------------------------
+    def _known_columns(self) -> frozenset[str] | None:
+        """Output column set, propagated bottom-up through the DAG via
+        ``Node.out_cols`` (None = statically unknown, e.g. past a MapRows).
+        Memoized per node (nodes are immutable), so repeated attribute
+        access stays O(1) amortized instead of O(graph)."""
+        node = self._node
+        if "_colset" in node.__dict__:
+            return node.__dict__["_colset"]
+        for n in G.walk([node]):
+            if "_colset" in n.__dict__:
+                continue
+            n.__dict__["_colset"] = n.out_cols(
+                [i.__dict__["_colset"] for i in n.inputs])
+        return node.__dict__["_colset"]
+
+    def _ordered_columns(self) -> list[str] | None:
+        """Output columns in pandas order (source schema order + append
+        order), or None when statically unknown.  Memoized like
+        ``_known_columns``."""
+        node = self._node
+        if "_colorder" in node.__dict__:
+            return node.__dict__["_colorder"]
+        for n in G.walk([node]):
+            if "_colorder" in n.__dict__:
+                continue
+            n.__dict__["_colorder"] = _ordered_out(
+                n, [i.__dict__["_colorder"] for i in n.inputs])
+        return node.__dict__["_colorder"]
+
+    @property
+    def columns(self) -> list[str]:
+        ordered = self._ordered_columns()
+        if ordered is not None:
+            return list(ordered)
+        cols = self._known_columns()
+        if cols is not None:
+            return sorted(cols)
+        res = self.head(0).compute(force_reason="columns-property")
+        return list(res.columns)
+
+    @property
+    def shape(self) -> tuple[int, int]:
+        from repro.pandas.fallback import record_fallback
+        ncols = len(self.columns)
+        n = int(_execute([G.Length(self._node)], None, "shape-property")[0])
+        record_fallback("DataFrame.shape", (n, ncols), "property-force")
+        return (n, ncols)
+
     # -- pandas-shaped ops ----------------------------------------------------
+    def copy(self, deep=True):
+        # nodes are immutable; a copy is just a new binding on the same DAG
+        return LazyFrame(self._node, source_vocab=self._vocab)
+
+    def drop(self, labels=None, columns=None, axis=1):
+        dropped = columns if columns is not None else labels
+        if dropped is None:
+            raise TypeError("drop requires `columns` (or labels with axis=1)")
+        dropped = [dropped] if isinstance(dropped, str) else list(dropped)
+        cols = self._ordered_columns()
+        if cols is None:
+            known = self._known_columns()
+            if known is None:
+                from repro.pandas.fallback import frame_fallback
+                return frame_fallback(self, "drop")(columns=dropped)
+            cols = sorted(known)
+        keep = [c for c in cols if c not in dropped]
+        return LazyFrame(G.Project(self._node, keep), source_vocab=self._vocab)
+
     def assign(self, **kwargs):
         node = self._node
         for k, v in kwargs.items():
@@ -292,10 +428,10 @@ class LazyFrame:
         return LazyFrame(G.Head(self._node, 0), source_vocab=self._vocab)
 
     # -- force points ---------------------------------------------------------
-    def compute(self, live_df=None):
+    def compute(self, live_df=None, force_reason="compute"):
         """Force materialization (paper compute()).  ``live_df`` is the
         §3.5 live-frame hint — normally injected by analyze()."""
-        return _execute([self._node], live_df)[0]
+        return _execute([self._node], live_df, force_reason)[0]
 
     def materialize(self, live_df=None):
         return self.compute(live_df)
@@ -305,7 +441,7 @@ class LazyFrame:
         return {k: np.asarray(v) for k, v in res.columns.items()}
 
     def __len__(self):
-        return int(_execute([G.Length(self._node)], None)[0])
+        return int(_execute([G.Length(self._node)], None, "len")[0])
 
     # -- helpers ---------------------------------------------------------------
     def _node_for_expr_column(self, expr_: E.Expr) -> _BoundNode:
@@ -323,7 +459,58 @@ class LazyFrame:
                        f"source column): {expr_}")
 
     def __repr__(self):
-        return f"LazyFrame({self._node!r})"
+        # repr is a force point (pandas semantics: printing a frame shows
+        # data).  Fall back to the structural repr if execution fails so
+        # debugging a broken graph never raises from repr itself.
+        try:
+            return repr(self.compute(force_reason="repr"))
+        except Exception:   # noqa: BLE001
+            return f"LazyFrame({self._node!r})"
+
+
+def _ordered_out(n: G.Node, ins: list[list | None]) -> list | None:
+    """Ordered-column analogue of ``Node.out_cols``: output column *order*
+    (pandas: source schema order, appends at the end), None = unknown."""
+    if isinstance(n, G.Scan):
+        return list(n.columns) if n.columns is not None \
+            else list(n.source.schema.names)
+    if isinstance(n, G.Project):
+        return list(n.columns)
+    if isinstance(n, G.Assign):
+        c = ins[0]
+        if c is None:
+            return None
+        return c if n.name in c else c + [n.name]
+    if isinstance(n, G.Rename):
+        c = ins[0]
+        return None if c is None else [n.mapping.get(x, x) for x in c]
+    if isinstance(n, G.GroupByAgg):
+        return list(n.keys) + [k for k in n.aggs if k not in n.keys]
+    if isinstance(n, G.Join):
+        l, r = ins
+        if l is None or r is None:
+            return None
+        overlap = (set(l) & set(r)) - set(n.on)
+        out = [x + n.suffixes[0] if x in overlap else x for x in l]
+        out += [x + n.suffixes[1] if x in overlap else x
+                for x in r if x not in n.on]
+        return out
+    if isinstance(n, G.Concat):
+        if any(c is None for c in ins):
+            return None
+        common = set(ins[0])
+        for c in ins[1:]:
+            common &= set(c)
+        return [x for x in ins[0] if x in common]
+    if isinstance(n, G.Materialized):
+        return list(n.table.keys())
+    if isinstance(n, (G.Reduce, G.Length, G.SinkPrint)):
+        return []
+    if isinstance(n, G.MapRows):
+        return None
+    # row-preserving pass-through (Filter, AsType, FillNa, SortValues,
+    # DropDuplicates, Head)
+    return ins[0] if ins else None
 
 
 class Result:
@@ -390,6 +577,7 @@ def read_npz(path: str) -> LazyFrame:
 # Execution entry (shared by frames/scalars/sinks)
 
 
-def _execute(roots: list[G.Node], live_df=None) -> list[Any]:
+def _execute(roots: list[G.Node], live_df=None,
+             force_reason: str | None = None) -> list[Any]:
     from .runtime import execute  # late import: runtime pulls optimizer+backends
-    return execute(roots, live_df)
+    return execute(roots, live_df, force_reason)

@@ -21,12 +21,18 @@ def _live_nodes_from(live_df) -> list[G.Node]:
     return nodes
 
 
-def execute(roots: list[G.Node], live_df=None) -> list[Any]:
+def execute(roots: list[G.Node], live_df=None,
+            force_reason: str | None = None) -> list[Any]:
     """Force computation of ``roots``.  Any pending lazy sinks are chained in
     front (paper §3.4: forced computation processes pending prints first, in
-    order).  Returns materialized values for ``roots``."""
+    order).  Returns materialized values for ``roots``.
+
+    ``force_reason`` labels the force point in ``ctx.force_log`` (user
+    compute, len, repr, facade fallback materialization, flush, …) so the
+    measured fallback protocol can attribute every execution."""
     ctx = get_context()
     ctx.exec_count += 1
+    ctx.force_log.append(force_reason or "compute")
     live_nodes = _live_nodes_from(live_df)
 
     all_roots = list(roots)
@@ -90,7 +96,7 @@ def flush():
     ctx = get_context()
     if ctx.last_sink is None:
         return
-    execute([], None)
+    execute([], None, "flush")
 
 
 def _wrap(node: G.Node, value):

@@ -22,17 +22,40 @@ import time
 from .context import get_context
 from .source_analysis import analyze_source
 
-_CORE_PREFIX = __name__.rsplit(".", 1)[0]  # 'repro.core'
+# Frames from any engine-internal package are skipped when reflecting on the
+# user program: the core layers and the repro.pandas facade both re-export
+# analyze()/read_* entry points.
+_INTERNAL_PREFIXES = ("repro.core", "repro.pandas")
+
+
+def _is_internal(module_name: str) -> bool:
+    return module_name.startswith(_INTERNAL_PREFIXES)
+
+
+def _install_lazy_builtins(globs: dict):
+    """The paper's program rewriter substitutes print/len with their lazy
+    sink-building versions.  For a script (``__main__``) we do the same at
+    analyze() time by rebinding the caller module's globals — this is what
+    makes the facade a true two-line change (no third import for lazy
+    print)."""
+    from . import func as lazy_func
+    if "print" not in globs:
+        globs["print"] = lazy_func.print
+    if "len" not in globs:
+        globs["len"] = lazy_func.len
 
 
 def analyze(fn=None):
-    ctx = get_context()
     if fn is None:
-        # script mode: reflect on the caller
+        # script mode: reflect on the caller; analysis is installed in the
+        # *current session's* context (session-scoped, not process-global)
+        ctx = get_context()
         frame = sys._getframe(1)
-        # skip the lazy-namespace shim if called via repro.core.lazy.analyze
-        while frame and frame.f_globals.get("__name__", "").startswith(_CORE_PREFIX):
+        # skip facade/shim frames if called via repro.pandas / repro.core.lazy
+        while frame and _is_internal(frame.f_globals.get("__name__", "")):
             frame = frame.f_back
+        if frame.f_globals.get("__name__") == "__main__":
+            _install_lazy_builtins(frame.f_globals)
         try:
             source = inspect.getsource(sys.modules[frame.f_globals["__name__"]])
         except Exception:
@@ -50,6 +73,9 @@ def analyze(fn=None):
 
     @functools.wraps(fn)
     def wrapped(*args, **kwargs):
+        # look up the context at call time: the function may run inside a
+        # session() block created after decoration
+        ctx = get_context()
         t0 = time.perf_counter()
         try:
             source = inspect.getsource(fn)
@@ -69,7 +95,7 @@ def user_call_lineno() -> int | None:
     frame = sys._getframe(1)
     while frame is not None:
         mod = frame.f_globals.get("__name__", "")
-        if not mod.startswith(_CORE_PREFIX):
+        if not _is_internal(mod):
             return frame.f_lineno
         frame = frame.f_back
     return None
@@ -79,7 +105,7 @@ def user_frame_locals() -> dict:
     frame = sys._getframe(1)
     while frame is not None:
         mod = frame.f_globals.get("__name__", "")
-        if not mod.startswith(_CORE_PREFIX):
+        if not _is_internal(mod):
             return frame.f_locals
         frame = frame.f_back
     return {}

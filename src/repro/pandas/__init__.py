@@ -1,0 +1,78 @@
+"""`repro.pandas` — the canonical drop-in facade (paper Fig. 2).
+
+A plain-pandas program needs exactly two changed lines:
+
+    import repro.pandas as pd     # ① the import swap
+    pd.analyze()                  # ② JIT static analysis
+
+Everything else is pandas-shaped: ``pd.DataFrame`` / ``pd.Series`` /
+``pd.read_csv`` / ``pd.concat`` / ``pd.merge`` / ``pd.to_datetime`` /
+``pd.isna``, DataFrame methods, ``.dt`` / ``.str`` accessors, groupby.
+``analyze()`` additionally rebinds ``print``/``len`` in a ``__main__``
+script to their lazy sink-building versions (the paper's program rewrite),
+so deferred output needs no third import.
+
+Ops the lazy layer lacks are served by the **measured fallback protocol**
+(see `repro.pandas.fallback`): inputs materialize, a numpy-level kernel
+runs eagerly, the result re-wraps as a lazy source, and the event lands in
+``get_context().fallback_trace``.
+
+The backend switch is a real module-level property (module-class swap):
+
+    pd.BACKEND_ENGINE = pd.BackendEngines.STREAMING   # round-trips
+    with pd.session(backend=pd.BackendEngines.AUTO, memory_budget=2**28):
+        ...isolated planner/persist/sink/stats state...
+"""
+from __future__ import annotations
+
+import sys
+import types
+
+from repro.core.context import (BackendEngines, LaFPContext, default_context,
+                                get_context, pop_session, push_session,
+                                session)
+from repro.core.lazyframe import LazyColumn, LazyFrame, Result
+from repro.core.runtime import flush
+from repro.core.tracer import analyze
+
+from .api import DataFrame, Series, concat, isna, merge, notna, to_datetime
+from .fallback import FallbackEvent, record_fallback
+from .io import from_arrays, read_csv, read_npz, read_source
+
+__all__ = [
+    "analyze", "flush", "session", "get_context", "default_context",
+    "push_session", "pop_session", "LaFPContext",
+    "DataFrame", "Series", "LazyFrame", "LazyColumn", "Result",
+    "read_csv", "read_npz", "read_source", "from_arrays",
+    "concat", "merge", "to_datetime", "isna", "notna",
+    "BackendEngines", "BACKEND_ENGINE", "set_backend",
+    "FallbackEvent", "record_fallback",
+]
+
+
+def set_backend(engine: BackendEngines, **options):
+    ctx = get_context()
+    ctx.backend = engine
+    ctx.backend_options.update(options)
+
+
+class _FacadeModule(types.ModuleType):
+    """Module subclass making ``pd.BACKEND_ENGINE`` a *live* property: reads
+    and writes go to the current session's context, so plain attribute
+    assignment (the paper's §2.6 one-liner) actually switches the engine —
+    fixing the seed bug where assignment shadowed the module ``__getattr__``
+    and silently did nothing."""
+
+    @property
+    def BACKEND_ENGINE(self) -> BackendEngines:
+        return get_context().backend
+
+    @BACKEND_ENGINE.setter
+    def BACKEND_ENGINE(self, value: BackendEngines):
+        if not isinstance(value, BackendEngines):
+            raise TypeError(
+                f"BACKEND_ENGINE must be a BackendEngines member, got {value!r}")
+        get_context().backend = value
+
+
+sys.modules[__name__].__class__ = _FacadeModule

@@ -1,0 +1,137 @@
+"""Facade I/O: ``pd.read_csv`` / ``read_npz`` / ``read_source`` /
+``from_arrays``.
+
+``read_csv`` is a minimal-but-robust CSV reader: numeric columns inferred
+(int64, falling back to float64-with-NaN when cells are blank), strings
+dictionary-encoded, ISO datetimes → int64 epoch seconds.  ``usecols`` comes
+from the user or from JIT static analysis (paper Fig. 4)."""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import graph as G
+from repro.core.context import get_context
+from repro.core.lazyframe import LazyFrame, read_source as _read_source
+from repro.core.source import InMemorySource, encode_strings
+from repro.core.tracer import usecols_hint
+
+# Tokens treated as missing values during inference (case-insensitive).
+_NA_TOKENS = frozenset({"", "na", "n/a", "nan", "null", "none"})
+
+# Sentinel epoch for unparseable/blank datetime cells (NaT analogue — int
+# columns can't carry NaN).  int32-min so it survives the device path even
+# when jax runs with x64 disabled (int64 arrays truncate to int32 there).
+NAT_SENTINEL = int(np.iinfo(np.int32).min)
+
+
+def _is_na(v: str) -> bool:
+    return v.strip().lower() in _NA_TOKENS
+
+
+def _apply_usecols(source, cols):
+    """Record static usecols for this source (column selection, §3.1)."""
+    ctx = get_context()
+    if cols is not None and ctx.analysis:
+        ctx.analysis.setdefault("scan_extra_cols", {})[id(source)] = list(cols)
+    return source
+
+
+def read_source(source):
+    cols = usecols_hint()
+    frame = _read_source(_apply_usecols(source, cols))
+    if cols is not None:
+        valid = [c for c in cols if c in source.schema]
+        if valid:
+            frame = LazyFrame(G.Scan(source, tuple(valid)),
+                              source_vocab=source.dicts)
+    return frame
+
+
+def read_npz(path: str):
+    from repro.core.source import NpzDirectorySource
+    return read_source(NpzDirectorySource(path))
+
+
+def from_arrays(arrays, partition_rows: int = 1 << 16, dicts=None,
+                datetimes=(), name="mem"):
+    src = InMemorySource(arrays, partition_rows, dicts, datetimes, name)
+    return read_source(src)
+
+
+def _coerce_numeric(vals) -> np.ndarray | None:
+    """int64 when every cell parses as int; float64-with-NaN when cells are
+    blank/NA or fractional; None when the column isn't numeric at all."""
+    clean = [v for v in vals if not _is_na(v)]
+    if not clean:
+        return None                        # all-blank: not numeric evidence
+    if len(clean) == len(vals):
+        try:
+            return np.asarray(vals, dtype=np.int64)
+        except (ValueError, OverflowError):
+            pass
+    try:
+        return np.asarray([np.nan if _is_na(v) else float(v) for v in vals],
+                          dtype=np.float64)
+    except (ValueError, OverflowError):
+        return None
+
+
+def _looks_datetime(vals) -> bool:
+    """Probe the first *non-blank* value for an ISO date shape."""
+    probe = next((v for v in vals if not _is_na(v)), "")
+    return len(probe) >= 10 and probe[4:5] == "-" and probe[7:8] == "-"
+
+
+def _parse_datetimes(vals) -> np.ndarray:
+    import datetime as _dt
+    out = np.empty(len(vals), np.int64)
+    for i, v in enumerate(vals):
+        if _is_na(v):
+            out[i] = NAT_SENTINEL
+            continue
+        v = v.strip().replace("T", " ")
+        fmt = "%Y-%m-%d %H:%M:%S" if len(v) > 10 else "%Y-%m-%d"
+        out[i] = int(_dt.datetime.strptime(v, fmt)
+                     .replace(tzinfo=_dt.timezone.utc).timestamp())
+    return out
+
+
+def read_csv(path: str, usecols=None, dtype=None, parse_dates=()):
+    import csv as _csv
+
+    hint = usecols if usecols is not None else usecols_hint()
+    with open(path, newline="") as f:
+        reader = _csv.reader(f)
+        header = next(reader)
+        keep = [i for i, h in enumerate(header)
+                if hint is None or h in hint]
+        names = [header[i] for i in keep]
+        cols: dict[str, list] = {n: [] for n in names}
+        for row in reader:
+            if not row:
+                continue                    # skip blank lines (pandas default)
+            for i, n in zip(keep, names):
+                cols[n].append(row[i] if i < len(row) else "")
+    arrays: dict[str, np.ndarray] = {}
+    dicts: dict[str, list] = {}
+    datetimes: list[str] = list(parse_dates)
+    for n, vals in cols.items():
+        if n in datetimes:
+            arrays[n] = _parse_datetimes(vals)
+            continue
+        arr = _coerce_numeric(vals)
+        if arr is None:
+            if _looks_datetime(vals):
+                arrays[n] = _parse_datetimes(vals)
+                datetimes.append(n)
+                continue
+            codes, vocab = encode_strings(vals)
+            arrays[n] = codes
+            dicts[n] = vocab
+            continue
+        if dtype and n in dtype:
+            arr = arr.astype(dtype[n])
+        arrays[n] = arr
+    src = InMemorySource(arrays, dicts=dicts, datetimes=datetimes,
+                         name=path)
+    return _read_source(_apply_usecols(src, hint))

@@ -1,15 +1,16 @@
 import numpy as np
 import pytest
 
-from repro.core.context import get_context
+from repro.core.context import LaFPContext, pop_session, push_session
 
 
 @pytest.fixture(autouse=True)
 def fresh_context():
-    """Each test gets a clean LaFP context (backend, sinks, caches)."""
-    get_context().reset()
-    yield
-    get_context().reset()
+    """Each test runs inside its own pushed session — the one place test
+    isolation happens (no scattered get_context().reset() calls)."""
+    ctx = push_session(LaFPContext(name="test"))
+    yield ctx
+    pop_session()
 
 
 @pytest.fixture

@@ -1,0 +1,131 @@
+"""Session-scoped context tests: nesting, isolation of persist caches /
+sinks / stats stores / traces, thread safety, and sink flushing on exit."""
+import threading
+
+import numpy as np
+import pytest
+
+import repro.pandas as pd
+from repro.core import BackendEngines, get_context
+from repro.core.context import (LaFPContext, pop_session, push_session,
+                                session_depth)
+
+
+def test_get_context_returns_stack_top():
+    outer = get_context()
+    with pd.session() as inner:
+        assert get_context() is inner
+        assert inner is not outer
+    assert get_context() is outer
+
+
+def test_nested_sessions_isolate_backend_and_budget():
+    with pd.session(backend=BackendEngines.STREAMING, memory_budget=123):
+        assert get_context().backend is BackendEngines.STREAMING
+        assert get_context().memory_budget == 123
+        with pd.session(backend=BackendEngines.DISTRIBUTED):
+            assert get_context().backend is BackendEngines.DISTRIBUTED
+            assert get_context().memory_budget is None
+        assert get_context().backend is BackendEngines.STREAMING
+    assert get_context().backend is BackendEngines.EAGER
+
+
+def test_nested_sessions_do_not_share_persist_or_sinks_or_stats(rng):
+    arrays = {"x": rng.uniform(0, 1, 1000), "k": rng.integers(0, 5, 1000)}
+    with pd.session() as outer:
+        df = pd.from_arrays(arrays)
+        df.compute()
+        outer_cache_keys = set(outer.persist_cache)
+        outer_stats = outer.stats_store
+        outer.print_fn = lambda *a: None
+        from repro.core.func import print as lazy_print
+        lazy_print(df.head())               # pending sink in outer
+        assert outer.pending_sinks
+        with pd.session() as inner:
+            assert inner.persist_cache == {}
+            assert inner.pending_sinks == []
+            assert inner.stats_store is not outer_stats
+            inner.print_fn = lambda *a: None
+            df2 = pd.from_arrays(arrays)
+            df2[df2["x"] > 0.5].compute()
+            assert set(outer.persist_cache) == outer_cache_keys
+        # inner popped; outer sink still pending and flushable
+        assert get_context() is outer
+        assert outer.pending_sinks
+
+
+def test_session_flushes_pending_sinks_on_clean_exit(rng):
+    lines = []
+    with pd.session() as ctx:
+        ctx.print_fn = lambda *a: lines.append(a)
+        from repro.core.func import print as lazy_print
+        df = pd.from_arrays({"x": np.arange(10.0)})
+        lazy_print(df.head(3))
+        assert not lines                    # still lazy inside the block
+    assert lines                            # flushed at session exit
+
+
+def test_session_exception_pops_without_flush(rng):
+    lines = []
+    with pytest.raises(RuntimeError):
+        with pd.session() as ctx:
+            ctx.print_fn = lambda *a: lines.append(a)
+            from repro.core.func import print as lazy_print
+            lazy_print(pd.from_arrays({"x": np.arange(4.0)}))
+            raise RuntimeError("boom")
+    assert not lines
+
+
+def test_fallback_trace_is_session_scoped(rng):
+    df = pd.from_arrays({"x": rng.uniform(0, 1, 100)})
+    with pd.session():
+        pd.from_arrays({"x": rng.uniform(0, 1, 100)})["x"].median()
+        assert any(e.op == "Series.median"
+                   for e in get_context().fallback_trace)
+    assert not any(e.op == "Series.median"
+                   for e in get_context().fallback_trace)
+
+
+def test_push_pop_explicit():
+    depth = session_depth()
+    ctx = push_session(LaFPContext(name="manual"))
+    assert get_context() is ctx
+    assert session_depth() == depth + 1
+    assert pop_session() is ctx
+    assert session_depth() == depth
+
+
+def test_thread_safety_smoke(rng):
+    """Each thread's session stack is private: concurrent sessions with
+    different backends never observe each other's state."""
+    errors = []
+
+    def worker(backend, n):
+        try:
+            for _ in range(n):
+                with pd.session(backend=backend) as ctx:
+                    assert get_context() is ctx
+                    assert get_context().backend is backend
+                    df = pd.from_arrays({"x": np.arange(50.0)})
+                    res = df[df["x"] > 10].compute()
+                    assert res.rows() == 39
+                    assert get_context() is ctx
+        except Exception as e:  # noqa: BLE001
+            errors.append(e)
+
+    threads = [threading.Thread(target=worker, args=(b, 5))
+               for b in (BackendEngines.EAGER, BackendEngines.STREAMING)
+               for _ in range(3)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    assert not errors, errors
+
+
+def test_default_session_still_works_for_module_scripts():
+    from repro.core.context import default_context
+    base = default_context()
+    assert base.session_name == "default"
+    # the test fixture pushed a session, so the default is shadowed
+    assert get_context() is not base
