@@ -97,7 +97,7 @@ class MemoryMeter:
         self.current -= int(nbytes)
 
 
-def get_backend(kind: BackendEngines, **options):
+def backend_class(kind: BackendEngines):
     if kind == BackendEngines.AUTO:
         raise ValueError(
             "BackendEngines.AUTO is resolved by the planner at force points "
@@ -105,11 +105,15 @@ def get_backend(kind: BackendEngines, **options):
             "physical backend")
     if kind == BackendEngines.EAGER:
         from .eager import EagerBackend
-        return EagerBackend(**options)
+        return EagerBackend
     if kind == BackendEngines.STREAMING:
         from .streaming import StreamingBackend
-        return StreamingBackend(**options)
+        return StreamingBackend
     if kind == BackendEngines.DISTRIBUTED:
         from .distributed import DistributedBackend
-        return DistributedBackend(**options)
+        return DistributedBackend
     raise ValueError(kind)
+
+
+def get_backend(kind: BackendEngines, **options):
+    return backend_class(kind)(**options)

@@ -63,8 +63,12 @@ class DistributedBackend:
     def execute(self, roots: list[G.Node], ctx: LaFPContext) -> dict[int, Any]:
         self._ctx = ctx
         results: dict[int, Any] = {}
+        memo: dict[int, Any] = {}        # shared: CSE'd subtrees run once
         for r in roots:
-            results[r.id] = self._eval(r, {})
+            v = self._eval(r, memo)
+            # ShardedTable is internal representation; callers (runtime
+            # _wrap, segment handoffs) expect host tables at the boundary
+            results[r.id] = v.gather() if isinstance(v, ShardedTable) else v
         return results
 
     def _eval(self, n: G.Node, memo: dict[int, Any]) -> Any:
@@ -85,6 +89,8 @@ class DistributedBackend:
         return out
 
     def _eval_inner(self, n: G.Node, memo) -> Any:
+        if isinstance(n, G.Handoff):
+            return X.handoff_value(n)
         if isinstance(n, G.Materialized):
             return dict(n.table)
         if isinstance(n, G.SinkPrint):

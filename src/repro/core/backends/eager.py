@@ -42,6 +42,8 @@ class EagerBackend:
         return table
 
     def eval_node(self, n: G.Node, vals: list[Any], ctx: LaFPContext):
+        if isinstance(n, G.Handoff):
+            return X.handoff_value(n, self.device_arrays)
         if isinstance(n, G.Materialized):
             return (X.to_jax(n.table) if self.device_arrays else n.table)
         if isinstance(n, G.Scan):

@@ -96,6 +96,12 @@ class StreamingBackend:
 
     def _stream_fresh(self, n: G.Node) -> Iterator[Table]:
         meter = self._meter
+        if isinstance(n, G.Handoff):
+            v = X.handoff_value(n)
+            if not isinstance(v, dict):
+                raise RuntimeError(f"cannot stream scalar handoff #{n.id}")
+            yield from _part_stream_from_table(v, self.chunk_rows)
+            return
         if isinstance(n, G.Materialized):
             yield from _part_stream_from_table(n.table, self.chunk_rows)
             return
@@ -226,6 +232,8 @@ class StreamingBackend:
 
     def _collect_value_inner(self, n: G.Node) -> Any:
         meter = self._meter
+        if isinstance(n, G.Handoff):
+            return X.handoff_value(n)
         cached = self._cached(n)
         if cached is not None:
             return cached

@@ -46,7 +46,11 @@ class LaFPContext:
         self.memory_budget: int | None = None   # bytes; streaming backend enforces
         self.last_peak_bytes: int = 0           # streaming backend peak accounting
         # cost-based planner (planner/): AUTO plan-choice trace + feedback
-        # stats store (observed cardinalities keyed by structural node key)
+        # stats store (observed cardinalities keyed by structural node key,
+        # plus per-backend runtime samples for cost calibration).  AUTO
+        # placement strategy is per-session via backend_options:
+        #   backend_options["placement"] = "operator" (segments, default)
+        #                                | "per_root" (PR-1 behaviour)
         self.planner_trace: list[str] = []
         from .planner.feedback import StatsStore
         self.stats_store = StatsStore()
@@ -123,11 +127,16 @@ def session(backend: BackendEngines | None = None,
             name: str = "session",
             **backend_options):
     """Isolated execution session: fresh backend choice, persist cache,
-    sink chain, stats store, and traces.
+    sink chain, stats store (planner feedback + runtime calibration), and
+    traces.
 
         with repro.pandas.session(backend=BackendEngines.STREAMING,
                                   memory_budget=1 << 28) as ctx:
             ...plain pandas-style code...
+
+    Extra keyword options flow into ``ctx.backend_options`` — e.g.
+    ``session(backend=BackendEngines.AUTO, placement="per_root")`` selects
+    the legacy per-root planner strategy for the block.
 
     Pending lazy sinks are flushed on clean exit (so deferred prints inside
     the block don't silently vanish); on exception the session is popped

@@ -47,6 +47,35 @@ def to_jax(table: Table) -> Table:
 
 
 # ---------------------------------------------------------------------------
+# Segment handoff (operator-granular hybrid placement)
+#
+# When the planner splits one plan across engines, values crossing a segment
+# boundary are normalized to host representation: tables become numpy column
+# dicts, device scalars become python numbers.  This is the explicit
+# materialization the cost model charges as transfer at every cut edge.
+
+
+def to_host_value(value):
+    """Normalize a segment output for transfer to another engine."""
+    if isinstance(value, dict):
+        return to_numpy(value)
+    if isinstance(value, (jax.Array, np.generic)):
+        arr = np.asarray(value)
+        return arr.item() if arr.ndim == 0 else arr
+    return value
+
+
+def handoff_value(node, device_arrays: bool = False):
+    """Evaluate a ``graph.Handoff`` leaf inside a backend: return its
+    pre-materialized payload, converting tables onto the device when the
+    consuming engine wants device-resident columns."""
+    v = node.value
+    if isinstance(v, dict):
+        return to_jax(v) if device_arrays else v
+    return v
+
+
+# ---------------------------------------------------------------------------
 # Row-preserving ops
 
 
@@ -272,6 +301,11 @@ def combine_partials(keys, parts: list[Table],
         if fn == "mean":
             out[out_name] = (merged[f"{out_name}::sum"] /
                              xp.maximum(merged[f"{out_name}::count"], 1))
+        elif fn == "count":
+            # combining count partials goes through a weighted-sum path that
+            # widens to float; counts are integral (pandas conformance)
+            out[out_name] = merged[f"{out_name}::count"].astype(
+                np.int64 if xp is np else jnp.int64)
         else:
             out[out_name] = merged[f"{out_name}::{fn}"]
     return out

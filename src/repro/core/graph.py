@@ -591,6 +591,33 @@ class Materialized(Node):
         return self
 
 
+class Handoff(Node):
+    """Pipe breaker between planner segments (operator-granular hybrid
+    placement).  The producing segment's engine has already materialized
+    ``value`` — a host table (dict of numpy columns) or a scalar — and the
+    consuming segment's engine treats this node as a pre-computed leaf.
+    Keys on the logical key of the node it replaces so persist/CSE machinery
+    sees the original subexpression."""
+    op = "handoff"
+
+    def __init__(self, value, logical_key: tuple, producer: str = "?"):
+        super().__init__([])
+        self.value = value
+        self.producer = producer            # backend name that produced it
+        self._key = logical_key
+
+    def out_cols(self, in_cols):
+        if isinstance(self.value, dict):
+            return frozenset(self.value.keys())
+        return frozenset()
+
+    def key(self):
+        return self._key
+
+    def with_inputs(self, inputs):
+        return self
+
+
 # ---------------------------------------------------------------------------
 # Runtime-flag carrying (rewrites must not lose executor state)
 

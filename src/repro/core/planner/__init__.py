@@ -38,35 +38,45 @@ Four layers, each usable on its own:
     shards until the first fallback gathers.
 
 ``select``
-    ``BackendEngines.AUTO`` resolution.  ``plan_placement`` costs the plan
-    on every candidate backend, drops candidates whose estimated peak
-    exceeds ``ctx.memory_budget``, and picks the cheapest survivor (falling
-    back to the lowest-footprint engine when nothing fits).  Plans with
-    multiple roots get per-subtree hybrid placement: each root subtree is
-    costed independently, and subtrees with very different sizes may land
-    on different engines within one force point.  Every decision appends a
-    human-readable line to ``ctx.planner_trace`` ("plan-choice trace"):
-      auto: root#7 eager cost=1.2e+05 peak=3.1MB (streaming 4.0e+05, ...)
+    ``BackendEngines.AUTO`` resolution: operator-granular hybrid placement.
+    ``plan_placement`` prices every operator on every candidate backend and
+    partitions the DAG into engine *segments* via a min-cut style dynamic
+    program with an explicit transfer charge at cut edges (the cost of
+    materializing a boundary and re-ingesting it in the next engine).  Each
+    segment then picks the cheapest calibrated engine whose estimated peak
+    fits ``ctx.memory_budget`` (falling back to the lowest-footprint engine
+    when nothing fits, flagged ``feasible=False``); backends the model
+    cannot price are rejected with the recorded reason, never silently
+    dropped.  Segments execute in topological order chained by
+    ``graph.Handoff`` pipe breakers.  The PR-1 per-root-subtree strategy
+    remains selectable via ``ctx.backend_options["placement"]="per_root"``.
+    Every segment appends a human-readable line to ``ctx.planner_trace``
+    ("plan-choice trace"):
+      auto: seg0 root#7 ops=3 -> eager cost=1.2e+05 peak=3.1MB cal=x1 (...)
 
 ``feedback``
-    The paper's "runtime optimization" leg.  After execution the runtime
-    records actual cardinalities/bytes into ``ctx.stats_store`` keyed by
-    each node's *structural* key, plus per-backend observed peaks.  On the
-    next estimate of the same (sub)plan the store overrides the a-priori
-    guess, so repeated plans converge to actual cardinalities and the
-    selector's error shrinks with use.
+    The paper's "runtime optimization" leg, twice over.  After execution
+    the runtime records actual cardinalities/bytes into ``ctx.stats_store``
+    keyed by each node's *structural* key, plus per-backend observed peaks
+    — the next estimate of the same (sub)plan overrides the a-priori guess.
+    Every run additionally records an (estimated work, wall seconds) sample
+    per backend; once ``MIN_RUNTIME_SAMPLES`` accumulate, ``cost_scale``
+    regresses (least squares through the origin) the backend's
+    seconds-per-work-unit and the selector compares *calibrated* costs, so
+    cost constants converge to measured values on this machine.
 
 The planner never changes results — only where they are computed.  It
 reads the optimized DAG (after pushdown/pruning), so its stats reflect
 what will actually run.
 """
-from .cost import CostEstimate, plan_cost
-from .feedback import StatsStore, record_execution
-from .select import Decision, plan_placement
+from .cost import CostEstimate, node_work, plan_cost, transfer_cost
+from .feedback import MIN_RUNTIME_SAMPLES, StatsStore, record_execution
+from .select import Decision, calibration_scales, plan_placement
 from .stats import TableStats, estimate_plan, predicate_selectivity, source_stats
 
 __all__ = [
-    "CostEstimate", "plan_cost", "StatsStore", "record_execution",
-    "Decision", "plan_placement", "TableStats", "estimate_plan",
-    "predicate_selectivity", "source_stats",
+    "CostEstimate", "plan_cost", "node_work", "transfer_cost",
+    "StatsStore", "record_execution", "MIN_RUNTIME_SAMPLES",
+    "Decision", "plan_placement", "calibration_scales", "TableStats",
+    "estimate_plan", "predicate_selectivity", "source_stats",
 ]

@@ -42,12 +42,14 @@ class CostEstimate:
                 f"peak={self.peak_bytes / 1e6:.1f}MB>")
 
 
-def _node_work(n: G.Node, stats: dict[int, TableStats], cap) -> float:
+def node_work(n: G.Node, stats: dict[int, TableStats], cap) -> float:
+    """Estimated work for one operator on one backend (public: the
+    operator-granular planner prices nodes individually)."""
     st = stats[n.id]
     in_rows = sum(stats[i.id].rows for i in n.inputs)
     if isinstance(n, G.Scan):
         return st.total_bytes * cap.scan_cost_per_byte
-    if isinstance(n, (G.Materialized, G.SinkPrint)):
+    if isinstance(n, (G.Materialized, G.SinkPrint, G.Handoff)):
         return 0.0
     rows = max(in_rows, st.rows, 1.0)
     work = rows * cap.row_cost
@@ -60,6 +62,28 @@ def _node_work(n: G.Node, stats: dict[int, TableStats], cap) -> float:
         in_bytes = sum(stats[i.id].total_bytes for i in n.inputs)
         work = work * cap.fallback_penalty + in_bytes * cap.transfer_cost_per_byte
     return work
+
+
+def bounded_walk(roots: list[G.Node],
+                 boundary: frozenset[int]) -> list[G.Node]:
+    """Post-order walk that does not descend past ``boundary`` nodes —
+    they are included as leaves (a segment sees its cross-segment inputs
+    as already-materialized handoffs)."""
+    seen: set[int] = set()
+    order: list[G.Node] = []
+
+    def rec(n: G.Node):
+        if n.id in seen:
+            return
+        seen.add(n.id)
+        if n.id not in boundary:
+            for i in n.inputs:
+                rec(i)
+        order.append(n)
+
+    for r in roots:
+        rec(r)
+    return order
 
 
 def _eager_peak(order, roots, stats) -> float:
@@ -85,12 +109,15 @@ _ROWWISE = ("filter", "project", "assign", "rename", "astype", "fillna",
             "map_rows", "head")
 
 
-def _streaming_peak(order, roots, stats, chunk_rows: int) -> float:
+def _streaming_peak(order, roots, stats, chunk_rows: int,
+                    boundary: frozenset[int] = frozenset()) -> float:
     """Chunked flow + breaker state, as StreamingBackend accounts it.
 
     Scans stream at *source partition* granularity; row-wise ops keep their
     input's flow size (scaled by their row ratio); everything else
     re-chunks at ``chunk_rows``.  Pipeline breakers add long-lived state.
+    ``boundary`` nodes are segment handoffs: their table is fully resident
+    host memory for the segment's lifetime and re-streams in chunks.
     """
     parents: dict[int, int] = {}
     for n in order:
@@ -102,6 +129,11 @@ def _streaming_peak(order, roots, stats, chunk_rows: int) -> float:
     flow_rows: dict[int, float] = {}
     for n in order:
         st = stats[n.id]
+        if n.id in boundary:
+            state += st.total_bytes
+            flow_rows[n.id] = min(float(chunk_rows), st.rows)
+            max_flow = max(max_flow, flow_rows[n.id] * st.row_bytes)
+            continue
         if isinstance(n, G.Scan):
             fr = 0.0
             for pi in range(n.source.n_partitions):
@@ -134,19 +166,31 @@ def _streaming_peak(order, roots, stats, chunk_rows: int) -> float:
 
 def plan_cost(roots: list[G.Node], stats: dict[int, TableStats],
               kind: BackendEngines, chunk_rows: int = 1 << 16,
-              n_shards: int | None = None) -> CostEstimate:
-    """Price an optimized plan on one backend given per-node stats."""
+              n_shards: int | None = None,
+              boundary: frozenset[int] = frozenset()) -> CostEstimate:
+    """Price an optimized plan (or one planner segment) on one backend.
+
+    ``boundary`` marks cross-segment inputs: they are priced as
+    already-materialized handoff leaves (no work; resident bytes)."""
     from ..backends import capabilities
     cap = capabilities(kind)
-    order = G.walk(roots)
+    order = bounded_walk(roots, boundary)
+    # a distributed segment fed by a handoff runs its ops on the gathered
+    # host table (single-host fallback), not across shards
+    unsharded = kind == BackendEngines.DISTRIBUTED and bool(boundary)
     per_node: dict[int, float] = {}
     total = cap.startup_cost
     for n in order:
-        w = _node_work(n, stats, cap)
+        if n.id in boundary:
+            w = 0.0
+        else:
+            w = node_work(n, stats, cap)
+            if unsharded and n.op in cap.native_ops:
+                w *= cap.parallelism
         per_node[n.id] = w
         total += w
     if cap.streams_partitions:
-        peak = _streaming_peak(order, roots, stats, chunk_rows)
+        peak = _streaming_peak(order, roots, stats, chunk_rows, boundary)
     else:
         peak = _eager_peak(order, roots, stats)
         if kind == BackendEngines.DISTRIBUTED:
@@ -156,7 +200,18 @@ def plan_cost(roots: list[G.Node], stats: dict[int, TableStats],
                     n_shards = max(1, len(jax.devices()))
                 except Exception:  # noqa: BLE001 — planning must never crash
                     n_shards = 1
-            if all(n.op in cap.native_ops for n in order):
+            # a handoff-fed segment starts from a host-resident table (the
+            # runtime hands distributed a plain dict, not shards), so only
+            # boundary-free all-native segments earn the sharded peak
+            if not boundary and all(n.op in cap.native_ops for n in order):
                 peak /= n_shards
             # else: first fallback gathers on one host → full-peak estimate
     return CostEstimate(cap.name, total, peak, per_node)
+
+
+def transfer_cost(bytes_: float, from_cap, to_cap) -> float:
+    """Work charged for materializing a segment boundary: the producer
+    gathers/host-normalizes its output and the consumer re-ingests it, plus
+    the consumer's fixed startup (a new engine spins up per segment)."""
+    per_byte = from_cap.transfer_cost_per_byte + to_cap.transfer_cost_per_byte
+    return bytes_ * max(per_byte, 0.25) + to_cap.startup_cost

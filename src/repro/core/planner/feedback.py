@@ -13,12 +13,21 @@ from typing import Any
 from .. import graph as G
 
 
+# a backend's cost scale is trusted only after this many observed runs —
+# a single noisy measurement must not flip placement
+MIN_RUNTIME_SAMPLES = 3
+_MAX_RUNTIME_SAMPLES = 64
+
+
 class StatsStore:
-    """Bounded store of observed per-node cardinalities + backend peaks."""
+    """Bounded store of observed per-node cardinalities, backend peaks, and
+    per-backend (estimated work, wall seconds) runtime samples used to
+    calibrate the cost model's ``BackendCapability`` constants."""
 
     def __init__(self, max_entries: int = 4096):
         self.observed: dict[tuple, dict[str, float]] = {}
         self.backend_peaks: dict[str, int] = {}
+        self.runtime_samples: dict[str, list[tuple[float, float]]] = {}
         self.max_entries = max_entries
 
     def record(self, key: tuple, rows: int, nbytes: int) -> None:
@@ -33,6 +42,41 @@ class StatsStore:
     def record_peak(self, backend: str, peak_bytes: int) -> None:
         self.backend_peaks[backend] = max(
             self.backend_peaks.get(backend, 0), int(peak_bytes))
+
+    # -- runtime calibration (measured, not guessed, cost constants) --------
+
+    def record_runtime(self, backend: str, est_work: float,
+                       seconds: float) -> None:
+        """One observed execution: the plan's estimated (uncalibrated) work
+        on ``backend`` and the wall seconds it actually took."""
+        if est_work <= 0 or seconds < 0:
+            return
+        samples = self.runtime_samples.setdefault(backend, [])
+        samples.append((float(est_work), float(seconds)))
+        if len(samples) > _MAX_RUNTIME_SAMPLES:
+            del samples[0]
+
+    def cost_scale(self, backend: str) -> float | None:
+        """Calibrated seconds-per-work-unit for ``backend``: least-squares
+        regression through the origin over the recorded (work, seconds)
+        samples.  None until ``MIN_RUNTIME_SAMPLES`` runs were observed."""
+        samples = self.runtime_samples.get(backend, ())
+        if len(samples) < MIN_RUNTIME_SAMPLES:
+            return None
+        num = sum(w * s for w, s in samples)
+        den = sum(w * w for w, s in samples)
+        if den <= 0 or num <= 0:
+            return None
+        return num / den
+
+    def calibration(self) -> dict[str, float]:
+        """All backends with a trusted calibrated scale."""
+        out = {}
+        for backend in self.runtime_samples:
+            scale = self.cost_scale(backend)
+            if scale is not None:
+                out[backend] = scale
+        return out
 
     def __len__(self):
         return len(self.observed)
@@ -70,7 +114,7 @@ def record_execution(roots: list[G.Node], results: dict[int, Any],
         rn = _rows_nbytes(val)
         if rn is None:
             continue
-        if isinstance(n, (G.SinkPrint, G.Materialized)):
+        if isinstance(n, (G.SinkPrint, G.Materialized, G.Handoff)):
             continue
         store.record(n.key(), rn[0], rn[1])
         recorded += 1

@@ -1,15 +1,36 @@
-"""AUTO backend selection: cost every candidate engine, respect the memory
-budget, dispatch to the cheapest — per root subtree (hybrid placement).
+"""AUTO backend selection: operator-granular hybrid placement with
+runtime-calibrated costs.
 
-The plan-choice trace (``ctx.planner_trace``) records one line per decision:
+The optimized DAG is partitioned into engine *segments* — connected groups
+of operators assigned to one backend — by a min-cut style dynamic program
+over per-node per-backend costs with an explicit transfer charge for
+materializing at segment boundaries (``cost.transfer_cost``).  Segments
+execute in topological order; values crossing a boundary are materialized
+to host and re-enter the next segment as ``graph.Handoff`` leaves
+(``runtime._dispatch`` chains them).
 
-    auto: root#12 -> eager cost=2.1e+05 peak=3.4MB | streaming 5.0e+05/0.3MB,
-    distributed 8.7e+05/0.9MB
+Costs are calibrated: once ``ctx.stats_store`` holds enough observed
+(estimated-work, wall-seconds) samples for a backend
+(``feedback.MIN_RUNTIME_SAMPLES``), its cost constants are scaled by the
+regressed seconds-per-work-unit, so repeated workloads converge to measured
+— not guessed — constants.
 
-Read it as: subtree rooted at node 12 dispatched to eager with estimated
-work 2.1e5 and estimated peak 3.4 MB; the rejected candidates follow with
-their work/peak.  ``budget!`` marks candidates rejected for exceeding
-``ctx.memory_budget``.
+The plan-choice trace (``ctx.planner_trace``) records one line per segment:
+
+    auto: seg0 root#12 ops=4 -> eager cost=2.1e+05 peak=3.4MB cal=x1 |
+    streaming 5.0e+05/0.3MB, distributed 8.7e+05/0.9MB
+
+Read it as: segment 0 (4 operators, output node 12) dispatched to eager
+with calibrated work 2.1e5 and estimated peak 3.4 MB; rejected candidates
+follow with their work/peak.  ``budget!`` marks candidates rejected for
+exceeding ``ctx.memory_budget``; ``pricing-failed:`` marks candidates the
+cost model could not price (with the reason — never silently dropped).
+Segments with cross-segment inputs append ``handoff<-#id`` markers.
+
+``ctx.backend_options["placement"]`` selects the strategy: ``"operator"``
+(default, segments) or ``"per_root"`` (the PR-1 behaviour: one choice per
+root subtree; kept for regret comparisons in
+``benchmarks/run.py backend_selection``).
 """
 from __future__ import annotations
 
@@ -17,7 +38,7 @@ import dataclasses
 
 from .. import graph as G
 from ..context import BackendEngines
-from .cost import CostEstimate, plan_cost
+from .cost import CostEstimate, node_work, plan_cost, transfer_cost
 from .stats import estimate_plan
 
 CANDIDATES = (BackendEngines.EAGER, BackendEngines.STREAMING,
@@ -26,53 +47,95 @@ CANDIDATES = (BackendEngines.EAGER, BackendEngines.STREAMING,
 
 @dataclasses.dataclass
 class Decision:
-    roots: list                          # root nodes assigned to this engine
+    """One planner segment: a connected group of operators dispatched to one
+    engine.  ``roots`` are the segment's outputs (nodes consumed by other
+    segments, or plan roots); ``nodes`` is every operator the segment runs;
+    ``boundary`` lists cross-segment inputs that arrive as handoffs."""
+    roots: list                          # segment output nodes
     backend: BackendEngines
     cost: CostEstimate
     rejected: dict[str, str]             # backend name -> reason string
+    nodes: list = dataclasses.field(default_factory=list)
+    boundary: list = dataclasses.field(default_factory=list)
+    feasible: bool = True                # est. peak fits ctx.memory_budget
+    scale: float = 1.0                   # calibrated sec/work for backend
 
 
-def _choose(roots: list[G.Node], stats, budget, chunk_rows) -> Decision:
+def _caps():
+    from ..backends import capabilities
+    return {kind: capabilities(kind) for kind in CANDIDATES}
+
+
+def calibration_scales(ctx) -> dict[BackendEngines, float]:
+    """Per-backend cost multipliers regressed from observed runtimes.
+
+    Backends with enough samples get their measured seconds-per-work-unit;
+    backends not yet observed get the median of the known scales (so all
+    candidates stay comparable); with no observations at all, every scale
+    is 1.0 and costs compare raw — exactly the uncalibrated model."""
+    store = getattr(ctx, "stats_store", None)
+    known = store.calibration() if store is not None else {}
+    caps = _caps()
+    if not known:
+        return {kind: 1.0 for kind in CANDIDATES}
+    ordered = sorted(known.values())
+    default = ordered[len(ordered) // 2]
+    return {kind: known.get(caps[kind].name, default) for kind in CANDIDATES}
+
+
+def _price(roots: list[G.Node], boundary_ids: frozenset[int], stats,
+           budget, chunk_rows, scales,
+           preferred: BackendEngines | None = None) -> Decision:
+    """Price one segment on every candidate engine and decide.
+
+    A backend the cost model cannot price is *not* silently dropped: the
+    failure reason is recorded in ``Decision.rejected``.  ``preferred``
+    (the min-cut assignment) wins when it is budget-feasible; otherwise the
+    cheapest calibrated feasible candidate; if nothing fits the budget, the
+    smallest-footprint engine survives and ``feasible=False``."""
+    caps = _caps()
     costs: dict[BackendEngines, CostEstimate] = {}
+    rejected: dict[str, str] = {}
     for kind in CANDIDATES:
         try:
-            costs[kind] = plan_cost(roots, stats, kind, chunk_rows)
-        except Exception:  # noqa: BLE001 — a backend we can't price is skipped
-            continue
+            costs[kind] = plan_cost(roots, stats, kind, chunk_rows,
+                                    boundary=boundary_ids)
+        except Exception as e:  # noqa: BLE001 — reason recorded, not dropped
+            rejected[caps[kind].name] = (
+                f"{caps[kind].name} pricing-failed: {type(e).__name__}: {e}")
+    if not costs:
+        raise RuntimeError(
+            f"no backend could price this plan: {rejected}")
     feasible = {k: c for k, c in costs.items()
                 if budget is None or c.peak_bytes <= budget}
-    rejected: dict[str, str] = {}
-    if feasible:
-        best = min(feasible, key=lambda k: costs[k].total)
+    ok = True
+    if preferred in feasible:
+        best = preferred
+    elif feasible:
+        best = min(feasible, key=lambda k: costs[k].total * scales[k])
     else:
         # nothing fits: take the smallest-footprint engine (streaming's
         # chunked model is the usual survivor) and let the meter arbitrate
         best = min(costs, key=lambda k: costs[k].peak_bytes)
+        ok = False
     for k, c in costs.items():
         if k is best:
             continue
         over = budget is not None and c.peak_bytes > budget
         rejected[c.backend] = (
-            f"{c.backend} {c.total:.3g}/{c.peak_bytes / 1e6:.1f}MB"
+            f"{c.backend} {c.total * scales[k]:.3g}/{c.peak_bytes / 1e6:.1f}MB"
             + (" budget!" if over else ""))
-    return Decision(list(roots), best, costs[best], rejected)
+    return Decision(list(roots), best, costs[best], rejected,
+                    feasible=ok, scale=scales[best])
 
 
-def plan_placement(roots: list[G.Node], ctx) -> list[Decision]:
-    """Partition ``roots`` into per-backend execution groups.
+# ---------------------------------------------------------------------------
+# Per-root placement (PR-1 behaviour, kept for regret comparison)
 
-    Each root subtree is costed independently (hybrid placement — branches
-    of very different sizes may land on different engines); all roots
-    choosing the same engine form one dispatch group (each backend's
-    executor then memoizes shared work within the group).  When subtrees
-    assigned to *different* engines overlap, hybrid placement would
-    execute the shared nodes once per group — in that case we fall back
-    to a single whole-plan choice instead.
-    """
-    stats = estimate_plan(roots, ctx)
-    budget = ctx.memory_budget
-    chunk_rows = ctx.backend_options.get("chunk_rows", 1 << 16)
-    per_root = [_choose([r], stats, budget, chunk_rows) for r in roots]
+
+def _per_root_placement(roots, stats, budget, chunk_rows, scales):
+    per_root = [_price([r], frozenset(), stats, budget, chunk_rows, scales)
+                for r in roots]
     # group same-backend decisions (first-appearance order; safe — at most
     # one root carries the ordered sink chain)
     merged: list[Decision] = []
@@ -85,6 +148,7 @@ def plan_placement(roots: list[G.Node], ctx) -> list[Decision]:
                 prev.cost.backend, prev.cost.total + d.cost.total,
                 max(prev.cost.peak_bytes, d.cost.peak_bytes),
                 {**prev.cost.per_node, **d.cost.per_node})
+            prev.feasible = prev.feasible and d.feasible
         else:
             by_backend[d.backend] = d
             merged.append(d)
@@ -99,11 +163,251 @@ def plan_placement(roots: list[G.Node], ctx) -> list[Decision]:
             if overlap:
                 break
         if overlap:
-            merged = [_choose(roots, stats, budget, chunk_rows)]
+            # subtrees assigned to different engines share nodes — hybrid
+            # per-root placement would run the shared work once per group,
+            # so fall back to a single whole-plan choice
+            merged = [_price(roots, frozenset(), stats, budget, chunk_rows,
+                             scales)]
     for d in merged:
+        d.nodes = G.walk(d.roots)
+    return merged
+
+
+# ---------------------------------------------------------------------------
+# Operator-granular placement (min-cut DP + acyclic segment formation)
+
+
+def _assign_operators(order, roots, stats, scales, caps):
+    """Min-cut style assignment: bottom-up DP minimizing calibrated node
+    work plus transfer charges at engine-boundary edges.  Multi-parent
+    nodes (and roots that are also consumed elsewhere) are fixed at their
+    own subtree optimum so shared work is priced exactly once.  Returns
+    (assignment node-id -> backend, pricing-failure reasons)."""
+    errors: dict[str, str] = {}
+    w: dict[int, dict[BackendEngines, float]] = {}
+    for n in order:
+        w[n.id] = {}
+        for kind, cap in caps.items():
+            try:
+                # amortize the backend's fixed startup over the plan so the
+                # per-node DP sees the same constant plan_cost charges once
+                # per segment (extra segments pay it again via transfer)
+                w[n.id][kind] = (node_work(n, stats, cap)
+                                 + cap.startup_cost / len(order)) * scales[kind]
+            except Exception as e:  # noqa: BLE001 — reason surfaces in trace
+                errors.setdefault(cap.name, (
+                    f"{cap.name} pricing-failed: {type(e).__name__}: {e}"))
+        if not w[n.id]:
+            raise RuntimeError(f"no backend can price node {n!r}: {errors}")
+
+    parents: dict[int, int] = {}
+    for n in order:
+        for i in n.inputs:
+            parents[i.id] = parents.get(i.id, 0) + 1
+    for r in roots:
+        parents[r.id] = parents.get(r.id, 0) + 1   # the caller consumes roots
+
+    def _transfer(child, b_from, b_to):
+        work = transfer_cost(stats[child.id].total_bytes,
+                             caps[b_from], caps[b_to])
+        return work * 0.5 * (scales[b_from] + scales[b_to])
+
+    dp: dict[int, dict[BackendEngines, float]] = {}
+    choice: dict[int, dict[BackendEngines, dict[int, BackendEngines]]] = {}
+    fixed: dict[int, BackendEngines] = {}
+    for n in order:
+        dp[n.id] = {}
+        choice[n.id] = {}
+        for b in w[n.id]:
+            tot = w[n.id][b]
+            ch: dict[int, BackendEngines] = {}
+            for i in n.inputs:
+                if i.id in fixed:
+                    bi = fixed[i.id]
+                    tot += 0.0 if bi == b else _transfer(i, bi, b)
+                    ch[i.id] = bi
+                else:
+                    best_b, best_c = None, float("inf")
+                    for bi, ci in dp[i.id].items():
+                        c = ci + (0.0 if bi == b else _transfer(i, bi, b))
+                        if c < best_c:
+                            best_c, best_b = c, bi
+                    tot += best_c
+                    ch[i.id] = best_b
+            dp[n.id][b] = tot
+            choice[n.id][b] = ch
+        if parents.get(n.id, 0) > 1:
+            fixed[n.id] = min(dp[n.id], key=dp[n.id].get)
+
+    assign: dict[int, BackendEngines] = dict(fixed)
+
+    def backtrack(n: G.Node, b: BackendEngines):
+        for i in n.inputs:
+            bi = choice[n.id][b][i.id]
+            if i.id not in assign:
+                assign[i.id] = bi
+                backtrack(i, bi)
+            elif i.id in fixed and i.id not in _expanded:
+                _expanded.add(i.id)
+                backtrack(i, assign[i.id])
+
+    _expanded: set[int] = set()
+    for r in roots:
+        if r.id not in assign:
+            assign[r.id] = min(dp[r.id], key=dp[r.id].get)
+        if r.id not in _expanded:
+            _expanded.add(r.id)
+            backtrack(r, assign[r.id])
+    return assign, errors
+
+
+def _form_segments(order, assign):
+    """Group same-backend connected operators into segments, keeping the
+    segment graph acyclic: a node may join an input's segment only if no
+    other input segment transitively depends on it."""
+    seg_of: dict[int, int] = {}
+    seg_nodes: list[list[G.Node]] = []
+    seg_backend: list[BackendEngines] = []
+    seg_deps: list[set[int]] = []        # direct segment dependencies
+
+    def depends_on(s: int, t: int) -> bool:
+        """True if segment s (transitively) depends on segment t."""
+        stack, seen = [s], set()
+        while stack:
+            x = stack.pop()
+            if x == t:
+                return True
+            if x in seen:
+                continue
+            seen.add(x)
+            stack.extend(seg_deps[x])
+        return False
+
+    for n in order:
+        b = assign[n.id]
+        joined = None
+        for i in n.inputs:
+            s = seg_of[i.id]
+            if seg_backend[s] != b:
+                continue
+            if any(seg_of[j.id] != s and depends_on(seg_of[j.id], s)
+                   for j in n.inputs):
+                continue                 # joining would create a cycle
+            joined = s
+            break
+        if joined is None:
+            joined = len(seg_nodes)
+            seg_nodes.append([])
+            seg_backend.append(b)
+            seg_deps.append(set())
+        seg_of[n.id] = joined
+        seg_nodes[joined].append(n)
+        for i in n.inputs:
+            s = seg_of[i.id]
+            if s != joined:
+                seg_deps[joined].add(s)
+    return seg_of, seg_nodes, seg_backend, seg_deps
+
+
+def _topo_segments(seg_nodes, seg_deps):
+    """Topological order of segments (producers before consumers)."""
+    remaining = {s: set(d) for s, d in enumerate(seg_deps)}
+    out: list[int] = []
+    ready = [s for s, d in remaining.items() if not d]
+    while ready:
+        s = min(ready)                    # deterministic order
+        ready.remove(s)
+        out.append(s)
+        for t, deps in remaining.items():
+            if s in deps:
+                deps.discard(s)
+                if not deps and t not in out and t not in ready:
+                    ready.append(t)
+    assert len(out) == len(seg_nodes), "segment graph has a cycle"
+    return out
+
+
+def _operator_placement(roots, stats, budget, chunk_rows, scales):
+    order = G.walk(roots)
+    caps = _caps()
+    try:
+        assign, errors = _assign_operators(order, roots, stats, scales, caps)
+    except RuntimeError:
+        # some operator priced on no backend: whole-plan choice decides
+        return [_price(roots, frozenset(), stats, budget, chunk_rows,
+                       scales)]
+    seg_of, seg_nodes, seg_backend, seg_deps = _form_segments(order, assign)
+    root_ids = {r.id for r in roots}
+    consumed_outside: dict[int, bool] = {}
+    for n in order:
+        for i in n.inputs:
+            if seg_of[i.id] != seg_of[n.id]:
+                consumed_outside[i.id] = True
+    decisions: list[Decision] = []
+    for s in _topo_segments(seg_nodes, seg_deps):
+        nodes = seg_nodes[s]
+        node_ids = {n.id for n in nodes}
+        outputs = [n for n in nodes
+                   if consumed_outside.get(n.id) or n.id in root_ids]
+        boundary = []
+        seen_b: set[int] = set()
+        for n in nodes:
+            for i in n.inputs:
+                if i.id not in node_ids and i.id not in seen_b:
+                    seen_b.add(i.id)
+                    boundary.append(i)
+        d = _price(outputs, frozenset(seen_b), stats, budget, chunk_rows,
+                   scales, preferred=seg_backend[s])
+        d.nodes = nodes
+        d.boundary = boundary
+        # per-node pricing failures excluded a backend from the assignment
+        # DP — surface them over the generic segment-level rejection
+        d.rejected.update({k: v for k, v in errors.items()
+                           if k != d.cost.backend})
+        decisions.append(d)
+    return decisions
+
+
+# ---------------------------------------------------------------------------
+# Entry point
+
+
+def plan_placement(roots: list[G.Node], ctx) -> list[Decision]:
+    """Partition the optimized plan into engine segments (topological
+    order).  ``ctx.backend_options["placement"]`` picks the strategy:
+    operator-granular segments (default) or the legacy per-root-subtree
+    hybrid."""
+    stats = estimate_plan(roots, ctx)
+    budget = ctx.memory_budget
+    chunk_rows = ctx.backend_options.get("chunk_rows", 1 << 16)
+    scales = calibration_scales(ctx)
+    mode = ctx.backend_options.get("placement", "operator")
+    if mode == "per_root":
+        decisions = _per_root_placement(roots, stats, budget, chunk_rows,
+                                        scales)
+    else:
+        decisions = _operator_placement(roots, stats, budget, chunk_rows,
+                                        scales)
+    # only genuinely measured backends appear in the calibration line —
+    # unmeasured candidates are priced at the median of the known scales,
+    # and printing that default as if profiled would mislead debugging
+    store = getattr(ctx, "stats_store", None)
+    measured = store.calibration() if store is not None else {}
+    if measured:
+        ctx.planner_trace.append(
+            "auto: calibration " + " ".join(
+                f"{name}={v:.3g}s/w" for name, v in sorted(measured.items())))
+    for si, d in enumerate(decisions):
         ids = ",".join(f"#{r.id}" for r in d.roots)
         alts = ", ".join(d.rejected.values()) or "-"
+        hand = ("".join(f" handoff<-#{b.id}" for b in d.boundary)
+                if d.boundary else "")
+        cal = f"cal=x{d.scale:.3g}"
+        if measured and d.cost.backend not in measured:
+            cal += "(default)"
         ctx.planner_trace.append(
-            f"auto: root{ids} -> {d.cost.backend} cost={d.cost.total:.3g} "
-            f"peak={d.cost.peak_bytes / 1e6:.1f}MB | {alts}")
-    return merged
+            f"auto: seg{si} root{ids} ops={len(d.nodes)} -> {d.cost.backend} "
+            f"cost={d.cost.total * d.scale:.3g} "
+            f"peak={d.cost.peak_bytes / 1e6:.1f}MB {cal}"
+            f"{hand} | {alts}")
+    return decisions

@@ -185,6 +185,11 @@ def estimate_node(n: G.Node, child_stats: list[TableStats]) -> TableStats:
         return source_stats(n.source, n.columns, n.skip_partitions)
     if isinstance(n, G.Materialized):
         return _table_stats_of(n.table)
+    if isinstance(n, G.Handoff):
+        if isinstance(n.value, dict):
+            return _table_stats_of(n.value)
+        return TableStats(rows=0.0, col_bytes={}, ndv={}, zonemap={},
+                          exact=True)
     if isinstance(n, (G.Reduce, G.Length)):
         return TableStats(rows=0.0, col_bytes={}, ndv={}, zonemap={})
     if isinstance(n, G.SinkPrint):

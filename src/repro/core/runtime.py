@@ -117,23 +117,113 @@ def _collect_vocab(node: G.Node):
 
 def _dispatch(opt_roots, ctx):
     """Run the optimized plan: fixed backend, or cost-based AUTO placement
-    (plan → select → dispatch, possibly hybrid across root subtrees)."""
-    from .backends import get_backend
+    (plan → select → chain engine segments through Handoff pipe breakers).
+
+    Every execution records an (estimated work, wall seconds) sample into
+    ``ctx.stats_store`` so the planner's cost constants converge to
+    measured values (runtime calibration)."""
+    import time
+
     from .context import BackendEngines
     if ctx.backend != BackendEngines.AUTO:
-        backend = get_backend(ctx.backend, **ctx.backend_options)
-        return backend.execute(opt_roots, ctx), backend.name
+        backend = _backend_with_options(ctx.backend, ctx.backend_options)
+        t0 = time.perf_counter()
+        results = backend.execute(opt_roots, ctx)
+        _record_runtime_sample(opt_roots, ctx, ctx.backend, backend.name,
+                               time.perf_counter() - t0)
+        return results, backend.name
+    from . import exec_common as X
     from .planner.select import plan_placement
     decisions = plan_placement(opt_roots, ctx)
     ctx.planner_decisions = decisions
     results = {}
     names = []
+    produced: dict[int, object] = {}     # original node id -> host value
+    store = getattr(ctx, "stats_store", None)
     for d in decisions:
-        try:
-            backend = get_backend(d.backend, **ctx.backend_options)
-        except TypeError:
-            # options meant for another engine (AUTO may pick any)
-            backend = get_backend(d.backend)
-        results.update(backend.execute(d.roots, ctx))
-        names.append(backend.name)
+        backend = _backend_with_options(d.backend, ctx.backend_options)
+        seg_roots = _segment_subgraph(d, produced)
+        t0 = time.perf_counter()
+        vals = backend.execute(seg_roots, ctx)
+        if store is not None:
+            store.record_runtime(backend.name, d.cost.total,
+                                 time.perf_counter() - t0)
+        for orig, new in zip(d.roots, seg_roots):
+            v = vals[new.id]
+            results[orig.id] = v
+            produced[orig.id] = X.to_host_value(v)
+        if backend.name not in names:
+            names.append(backend.name)
     return results, "+".join(names) or "auto"
+
+
+def _backend_with_options(kind, options: dict):
+    """Construct a backend passing only the options its constructor
+    accepts.  ``ctx.backend_options`` mixes per-engine knobs (chunk_rows,
+    device_arrays, …) with planner-level ones (placement) — a backend must
+    neither crash on foreign keys nor lose its own."""
+    import inspect
+
+    from .backends import backend_class
+    cls = backend_class(kind)
+    if not options:
+        return cls()
+    params = inspect.signature(cls.__init__).parameters
+    return cls(**{k: v for k, v in options.items() if k in params})
+
+
+def _segment_subgraph(d, produced: dict[int, object]) -> list[G.Node]:
+    """Rebuild one planner segment for execution: inputs living in other
+    segments are replaced by ``Handoff`` leaves carrying the value the
+    producing segment already materialized."""
+    if not d.boundary:
+        return list(d.roots)
+    seg_ids = {n.id for n in d.nodes}
+    memo: dict[int, G.Node] = {}
+
+    def rec(n: G.Node) -> G.Node:
+        if n.id in memo:
+            return memo[n.id]
+        if n.id not in seg_ids:
+            key = getattr(n, "cache_key", None)
+            if key is None:
+                try:
+                    key = n.key()
+                except Exception:  # noqa: BLE001 — side-effect nodes key on id
+                    key = ("handoff", n.id)
+            out = G.Handoff(produced[n.id], key, producer=n.op)
+        else:
+            new_inputs = [rec(i) for i in n.inputs]
+            if all(a is b for a, b in zip(new_inputs, n.inputs)):
+                out = n
+            else:
+                out = G.copy_runtime_flags(n, n.with_inputs(new_inputs))
+        memo[n.id] = out
+        return out
+
+    return [rec(r) for r in d.roots]
+
+
+def _record_runtime_sample(opt_roots, ctx, kind, backend_name: str,
+                           seconds: float) -> None:
+    """Calibration sample for a fixed-backend run: estimate the plan's work
+    with the a-priori cost model and pair it with the measured wall time.
+    Best-effort — estimation failures never affect execution."""
+    store = getattr(ctx, "stats_store", None)
+    if store is None:
+        return
+    # once a backend is well-sampled, only refresh every 8th force point —
+    # plan estimation is metadata arithmetic, but sessions with many tiny
+    # fixed-backend force points shouldn't pay it each time
+    samples = store.runtime_samples.get(backend_name, ())
+    if len(samples) >= 16 and ctx.exec_count % 8:
+        return
+    try:
+        from .planner.cost import plan_cost
+        from .planner.stats import estimate_plan
+        stats = estimate_plan(opt_roots, ctx)
+        est = plan_cost(opt_roots, stats, kind,
+                        ctx.backend_options.get("chunk_rows", 1 << 16))
+        store.record_runtime(backend_name, est.total, seconds)
+    except Exception:  # noqa: BLE001 — calibration is advisory
+        pass

@@ -1,0 +1,261 @@
+"""Differential conformance suite: every ``benchmarks/api_corpus.py``
+program runs through the ``repro.pandas`` facade under EAGER, STREAMING and
+AUTO, and its result must equal real-pandas ground truth — values, dtype
+kinds, and NaN placement — via the shared ``assert_frame_matches`` helper.
+
+Ground truth is computed by hand-written plain-pandas reference programs
+(``_REFS``) that mirror the corpus semantics (PandasBench-style: a facade
+reproduction is only credible against a systematic differential corpus).
+
+Precision note: the eager backend runs jax in x32 mode, so float64 pandas
+results are compared at float32-friendly tolerances and exact dtypes are
+compared at *kind* granularity (float/int/bool/object), not width.
+"""
+from __future__ import annotations
+
+import numpy as np
+import pytest
+
+pd_real = pytest.importorskip("pandas")
+
+import repro.pandas as rpd  # noqa: E402
+from repro.core import BackendEngines, get_context  # noqa: E402
+from repro.core.lazyframe import Result  # noqa: E402
+
+from benchmarks.api_corpus import CORPUS, _taxi  # noqa: E402
+
+ENGINES = (BackendEngines.EAGER, BackendEngines.STREAMING,
+           BackendEngines.AUTO)
+
+
+# ---------------------------------------------------------------------------
+# Canonicalization: both sides become {col: np.ndarray} dicts / scalars /
+# tuples so one comparator covers frames, series-like outputs and scalars.
+
+
+def _canon_actual(obj):
+    """Facade output → canonical form (vocab columns decode to strings)."""
+    if isinstance(obj, Result):
+        out = {}
+        for k, v in obj.columns.items():
+            arr = np.asarray(v)
+            if k in obj.vocab:
+                out[k] = np.asarray([obj.vocab[k][int(c)] for c in arr],
+                                    dtype=object)
+            else:
+                out[k] = arr
+        return out
+    if isinstance(obj, tuple):
+        return tuple(_canon_actual(x) for x in obj)
+    if isinstance(obj, dict):
+        return {k: np.asarray(v) for k, v in obj.items()}
+    arr = np.asarray(obj)
+    if arr.ndim == 0:
+        return arr[()]
+    return arr
+
+
+def _canon_expected(obj):
+    """Plain-pandas ground truth → canonical form."""
+    if isinstance(obj, pd_real.DataFrame):
+        out = {}
+        for k in obj.columns:
+            col = obj[k]
+            if col.dtype == object or str(col.dtype).startswith(
+                    ("string", "category")):
+                out[k] = col.astype(str).to_numpy(dtype=object)
+            else:
+                out[k] = col.to_numpy()
+        return out
+    if isinstance(obj, pd_real.Series):
+        return _canon_expected(obj.reset_index())
+    if isinstance(obj, tuple):
+        return tuple(_canon_expected(x) for x in obj)
+    return obj
+
+
+def _sort_rows(cols: dict, by: list[str]) -> dict:
+    keys = [np.asarray(cols[b]).astype(str) if cols[b].dtype == object
+            else np.asarray(cols[b]) for b in reversed(by)]
+    idx = np.lexsort(keys)
+    return {k: v[idx] for k, v in cols.items()}
+
+
+def _assert_scalar(actual, expected, rtol, atol):
+    a = np.asarray(actual, dtype=np.float64)[()]
+    e = np.asarray(expected, dtype=np.float64)[()]
+    if np.isnan(e):
+        assert np.isnan(a), f"expected NaN, got {a}"
+        return
+    np.testing.assert_allclose(a, e, rtol=rtol, atol=atol)
+
+
+_KIND_GROUPS = {"f": "float", "i": "int", "u": "int", "b": "bool",
+                "O": "object", "U": "object", "S": "object"}
+
+
+def assert_frame_matches(actual, expected, rtol=1e-3, atol=1e-6,
+                         sort_by=None):
+    """`assert_frame_equal`-style comparison between a canonicalized facade
+    result and real-pandas ground truth: same columns, row count, dtype
+    *kinds*, NaN placement, and (tolerance-aware) values."""
+    actual = _canon_actual(actual)
+    expected = _canon_expected(expected)
+    if isinstance(expected, tuple):
+        assert isinstance(actual, tuple) and len(actual) == len(expected)
+        for a, e in zip(actual, expected):
+            assert_frame_matches(a, e, rtol=rtol, atol=atol, sort_by=sort_by)
+        return
+    if not isinstance(expected, dict):
+        _assert_scalar(actual, expected, rtol, atol)
+        return
+    assert isinstance(actual, dict), f"expected frame, got {type(actual)}"
+    assert set(actual) == set(expected), (
+        f"column mismatch: {sorted(actual)} vs {sorted(expected)}")
+    a_rows = {len(np.asarray(v)) for v in actual.values()}
+    e_rows = {len(np.asarray(v)) for v in expected.values()}
+    assert a_rows == e_rows, f"row count mismatch: {a_rows} vs {e_rows}"
+    if sort_by:
+        actual = _sort_rows(actual, sort_by)
+        expected = _sort_rows(expected, sort_by)
+    for k in expected:
+        a, e = np.asarray(actual[k]), np.asarray(expected[k])
+        ak = _KIND_GROUPS.get(a.dtype.kind, a.dtype.kind)
+        ek = _KIND_GROUPS.get(e.dtype.kind, e.dtype.kind)
+        assert ak == ek, f"dtype kind mismatch on {k!r}: {a.dtype} vs {e.dtype}"
+        if ek == "float":
+            a64, e64 = a.astype(np.float64), e.astype(np.float64)
+            np.testing.assert_array_equal(
+                np.isnan(a64), np.isnan(e64),
+                err_msg=f"NaN placement differs on {k!r}")
+            mask = ~np.isnan(e64)
+            np.testing.assert_allclose(a64[mask], e64[mask], rtol=rtol,
+                                       atol=atol, err_msg=f"column {k!r}")
+        elif ek in ("int", "bool"):
+            np.testing.assert_array_equal(a.astype(np.int64),
+                                          e.astype(np.int64),
+                                          err_msg=f"column {k!r}")
+        else:
+            np.testing.assert_array_equal(a.astype(str), e.astype(str),
+                                          err_msg=f"column {k!r}")
+
+
+# ---------------------------------------------------------------------------
+# Plain-pandas reference programs (ground truth), mirroring api_corpus.
+# ``_taxi`` builds identical data for both sides: the rng draw sequence is
+# the same and real pandas accepts the same dict-of-arrays constructor.
+
+
+def _ref_filter_groupby(rng):
+    df = _taxi(pd_real, rng)
+    df = df[df["fare"] > 0].copy()
+    df["tip_rate"] = df["tip"] / df["fare"]
+    return df.groupby("vendor")["tip_rate"].mean().reset_index()
+
+
+def _ref_feature_engineering(rng):
+    df = _taxi(pd_real, rng)
+    ts = pd_real.to_datetime(df["pickup"], unit="s")
+    df["day"] = ts.dt.dayofweek
+    df["quarter"] = ts.dt.quarter
+    df["fare_clipped"] = df["fare"].clip(0, 50)
+    return df.groupby("quarter")["fare_clipped"].sum().reset_index()
+
+
+def _ref_order_statistics(rng):
+    df = _taxi(pd_real, rng)
+    return df.nlargest(10, "fare")["fare"].median()
+
+
+def _ref_missing_data(rng):
+    df = _taxi(pd_real, rng)
+    df["maybe"] = df["fare"] / df["fare"].round()
+    clean = df.dropna()
+    return len(clean.columns)
+
+
+def _ref_join_and_concat(rng):
+    rides = _taxi(pd_real, rng, n=2_000)
+    vendors = pd_real.DataFrame({"vendor": ["acme", "beta", "cabco"],
+                                 "fee": [1.0, 2.0, 0.5]})
+    j = pd_real.merge(rides, vendors, on="vendor")
+    both = pd_real.concat([j, j])
+    return both.groupby("vendor")["fee"].count().reset_index()
+
+
+def _ref_string_and_counts(rng):
+    df = _taxi(pd_real, rng)
+    mask = df["vendor"].str.contains("a")
+    vc = df[mask]["vendor"].value_counts()
+    return pd_real.DataFrame({"value": vc.index.to_numpy(dtype=object),
+                              "count": vc.to_numpy()})
+
+
+def _ref_robust_statistics(rng):
+    df = _taxi(pd_real, rng)
+    spread = df["fare"].std()
+    q90 = df["fare"].quantile(0.9)
+    by_vendor = df.groupby("vendor").median().reset_index()
+    return (spread, q90, by_vendor)
+
+
+def _ref_sort_head_describe(rng):
+    df = _taxi(pd_real, rng)
+    ordered = df.sort_values("fare", ascending=False).head(20)
+    return float(ordered["tip"].mean())
+
+
+def _ref_datetime_pipeline(rng):
+    df = pd_real.DataFrame({
+        "when": ["2021-03-01", "2021-06-15", "2021-06-16", "2021-11-30"],
+        "amount": [1.0, 2.0, 3.0, 4.0],
+    })
+    ts = pd_real.to_datetime(df["when"])
+    df["month"] = ts.dt.month
+    return df.groupby("month")["amount"].sum().reset_index()
+
+
+def _ref_unsupported_ops(rng):
+    # this corpus program *measures* the failed-op bucket; ground truth is
+    # the number of deliberately-unimplemented calls, not a pandas value
+    return 3
+
+
+_REFS = {
+    "filter_groupby": (_ref_filter_groupby, {"sort_by": ["vendor"]}),
+    "feature_engineering": (_ref_feature_engineering,
+                            {"sort_by": ["quarter"]}),
+    "order_statistics": (_ref_order_statistics, {}),
+    "missing_data": (_ref_missing_data, {}),
+    "join_and_concat": (_ref_join_and_concat, {"sort_by": ["vendor"]}),
+    "string_and_counts": (_ref_string_and_counts, {"sort_by": ["value"]}),
+    "robust_statistics": (_ref_robust_statistics, {"sort_by": ["vendor"]}),
+    "sort_head_describe": (_ref_sort_head_describe, {}),
+    "datetime_pipeline": (_ref_datetime_pipeline, {"sort_by": ["month"]}),
+    "unsupported_ops": (_ref_unsupported_ops, {}),
+}
+
+_GROUND_TRUTH: dict[str, object] = {}
+
+
+def _ground_truth(name):
+    if name not in _GROUND_TRUTH:
+        ref, _ = _REFS[name]
+        _GROUND_TRUTH[name] = ref(np.random.default_rng(0))
+    return _GROUND_TRUTH[name]
+
+
+def test_every_corpus_program_has_a_reference():
+    assert {name for name, _ in CORPUS} == set(_REFS)
+
+
+@pytest.mark.parametrize("engine", ENGINES, ids=lambda e: e.value)
+@pytest.mark.parametrize("name,prog", CORPUS, ids=[n for n, _ in CORPUS])
+def test_conformance(engine, name, prog):
+    ctx = get_context()
+    ctx.backend = engine
+    ctx.print_fn = lambda *a: None
+    rng = np.random.default_rng(0)
+    actual = prog(rpd, rng)
+    ref, opts = _REFS[name]
+    assert_frame_matches(actual, _ground_truth(name), **opts)

@@ -289,6 +289,244 @@ def test_hybrid_grouping_never_splits_shared_subtrees():
     assert sum(len(d.roots) for d in decisions) == 2
 
 
+# ---------------------------------------------------------------------------
+# Runtime-calibrated costs (feedback → cost-constant regression)
+
+
+def test_cost_scale_least_squares_regression():
+    from repro.core.planner.feedback import MIN_RUNTIME_SAMPLES, StatsStore
+    store = StatsStore()
+    # below the sample floor the scale is not trusted
+    for _ in range(MIN_RUNTIME_SAMPLES - 1):
+        store.record_runtime("eager", 1e5, 0.1)
+    assert store.cost_scale("eager") is None
+    store.record_runtime("eager", 1e5, 0.1)
+    assert store.cost_scale("eager") == pytest.approx(1e-6)
+    # regression through the origin over mixed workloads
+    store2 = StatsStore()
+    for w, s in ((1e4, 0.02), (2e4, 0.04), (4e4, 0.08)):
+        store2.record_runtime("streaming", w, s)
+    assert store2.cost_scale("streaming") == pytest.approx(2e-6)
+    assert store2.calibration() == {"streaming": pytest.approx(2e-6)}
+
+
+def test_calibration_flips_auto_to_measured_cheaper_engine():
+    """Regression test for the feedback loop: with a-priori constants AUTO
+    picks eager for a small scan+filter, but after N observed runs showing
+    eager is measured-slow and streaming measured-fast, the same workload
+    flips to streaming."""
+    from repro.core.planner.feedback import MIN_RUNTIME_SAMPLES
+    ctx = get_context()
+    ctx.backend = BackendEngines.AUTO
+    src = _uniform_source(n=5000)
+
+    def run():
+        df = core.read_source(src)
+        return df[df["fare"] > 10.0].compute()
+
+    run()
+    assert ctx.planner_decisions[0].backend == BackendEngines.EAGER
+    # N observed runs with skewed runtimes: eager 1000 s/work-unit,
+    # streaming 1e-9 s/work-unit
+    for _ in range(MIN_RUNTIME_SAMPLES):
+        ctx.stats_store.record_runtime("eager", 1.0, 1000.0)
+        ctx.stats_store.record_runtime("streaming", 1.0, 1e-9)
+    run()
+    assert ctx.planner_decisions[0].backend == BackendEngines.STREAMING
+    assert any(line.startswith("auto: calibration")
+               for line in ctx.planner_trace)
+    assert any("cal=x" in line for line in ctx.planner_trace)
+
+
+def test_fixed_backend_runs_record_calibration_samples():
+    """Every execution (not just AUTO) contributes (est work, seconds)
+    samples, so ordinary runs calibrate future AUTO choices."""
+    ctx = get_context()
+    ctx.backend = BackendEngines.EAGER
+    src = _uniform_source(n=2000)
+    df = core.read_source(src)
+    df[df["fare"] > 10.0].compute()
+    samples = ctx.stats_store.runtime_samples.get("eager")
+    assert samples, "fixed eager run recorded no runtime sample"
+    est_work, seconds = samples[-1]
+    assert est_work > 0 and seconds >= 0
+
+
+# ---------------------------------------------------------------------------
+# Pricing failures are recorded, never silently dropped
+
+
+def test_pricing_failure_recorded_in_rejected(monkeypatch):
+    import repro.core.planner.select as sel
+    real_plan_cost = sel.plan_cost
+
+    def exploding(roots, stats, kind, *args, **kwargs):
+        if kind == BackendEngines.DISTRIBUTED:
+            raise ZeroDivisionError("synthetic pricing bug")
+        return real_plan_cost(roots, stats, kind, *args, **kwargs)
+
+    monkeypatch.setattr(sel, "plan_cost", exploding)
+    ctx = get_context()
+    src = _uniform_source(n=5000)
+    scan = G.Scan(src)
+    f = G.Filter(scan, E.BinOp("gt", E.Col("fare"), E.Lit(10.0)))
+    decisions = sel.plan_placement([f], ctx)
+    assert len(decisions) == 1
+    reason = decisions[0].rejected.get("distributed")
+    assert reason is not None and "pricing-failed" in reason
+    assert "ZeroDivisionError" in reason
+    assert any("pricing-failed" in line for line in ctx.planner_trace)
+
+
+def test_node_pricing_failure_recorded_in_rejected(monkeypatch):
+    """The operator-granular DP also surfaces per-node pricing failures."""
+    import repro.core.planner.select as sel
+    real_node_work = sel.node_work
+
+    def exploding(n, stats, cap):
+        if cap.name == "distributed":
+            raise KeyError("synthetic per-node pricing bug")
+        return real_node_work(n, stats, cap)
+
+    monkeypatch.setattr(sel, "node_work", exploding)
+    ctx = get_context()
+    src = _uniform_source(n=5000)
+    scan = G.Scan(src)
+    f = G.Filter(scan, E.BinOp("gt", E.Col("fare"), E.Lit(10.0)))
+    decisions = sel.plan_placement([f], ctx)
+    assert any("pricing-failed" in d.rejected.get("distributed", "")
+               for d in decisions)
+
+
+# ---------------------------------------------------------------------------
+# Operator-granular segments + handoff execution
+
+
+def _skewed_capabilities(monkeypatch):
+    """Capability constants that make streaming the clear winner for
+    scan/filter but punitive for group-by (not native), forcing a split."""
+    import dataclasses as dc
+
+    from repro.core import backends as B
+    orig = B.CAPABILITIES
+    monkeypatch.setitem(
+        B.CAPABILITIES, BackendEngines.STREAMING,
+        dc.replace(orig[BackendEngines.STREAMING],
+                   native_ops=frozenset(
+                       orig[BackendEngines.STREAMING].native_ops
+                       - {"groupby_agg"}),
+                   scan_cost_per_byte=0.001, row_cost=0.001,
+                   fallback_penalty=1e7))
+    monkeypatch.setitem(
+        B.CAPABILITIES, BackendEngines.EAGER,
+        dc.replace(orig[BackendEngines.EAGER], scan_cost_per_byte=1e4))
+    monkeypatch.setitem(
+        B.CAPABILITIES, BackendEngines.DISTRIBUTED,
+        dc.replace(orig[BackendEngines.DISTRIBUTED], startup_cost=1e14))
+
+
+def test_operator_granular_split_executes_through_handoff(monkeypatch):
+    """A plan whose cheapest placement splits mid-pipeline really executes
+    as two segments chained by a Handoff, and the hybrid result matches a
+    single-backend run."""
+    _skewed_capabilities(monkeypatch)
+    ctx = get_context()
+    ctx.backend = BackendEngines.AUTO
+    src = _uniform_source(n=20_000, partition_rows=1024)
+    df = core.read_source(src)
+    out = df[df["fare"] > 10.0].groupby("vendor")["miles"].sum().compute()
+    decisions = ctx.planner_decisions
+    assert len(decisions) == 2
+    assert decisions[0].backend == BackendEngines.STREAMING
+    assert [n.op for n in decisions[0].nodes] == ["scan", "filter"]
+    assert decisions[1].backend == BackendEngines.EAGER
+    assert [n.op for n in decisions[1].nodes] == ["groupby_agg"]
+    assert [b.op for b in decisions[1].boundary] == ["filter"]
+    assert any("handoff<-" in line for line in ctx.planner_trace)
+    # node sets partition the plan: no operator runs twice
+    seg_ids = [frozenset(n.id for n in d.nodes) for d in decisions]
+    assert not (seg_ids[0] & seg_ids[1])
+    # hybrid result equals the fixed eager result
+    from repro.core.context import LaFPContext, pop_session, push_session
+    push_session(LaFPContext(name="ref"))
+    try:
+        df2 = core.read_source(src)
+        ref = df2[df2["fare"] > 10.0].groupby("vendor")["miles"].sum().compute()
+    finally:
+        pop_session()
+    np.testing.assert_array_equal(np.asarray(out["vendor"]),
+                                  np.asarray(ref["vendor"]))
+    np.testing.assert_allclose(np.asarray(out["miles"], np.float64),
+                               np.asarray(ref["miles"], np.float64),
+                               rtol=5e-4)
+
+
+def test_handoff_node_evaluates_on_every_backend():
+    from repro.core.backends import get_backend
+    table = {"x": np.arange(8, dtype=np.int64),
+             "y": np.linspace(0.0, 1.0, 8)}
+    ctx = get_context()
+    for kind in (BackendEngines.EAGER, BackendEngines.STREAMING,
+                 BackendEngines.DISTRIBUTED):
+        h = G.Handoff({k: v.copy() for k, v in table.items()},
+                      ("test-handoff",), producer="filter")
+        f = G.Filter(h, E.BinOp("ge", E.Col("x"), E.Lit(4)))
+        backend = get_backend(kind)
+        res = backend.execute([f], ctx)[f.id]
+        assert isinstance(res, dict), kind
+        np.testing.assert_array_equal(np.asarray(res["x"]),
+                                      np.arange(4, 8))
+
+
+def test_segment_decisions_respect_memory_budget():
+    """Every feasible segment's estimated peak fits the budget; segments
+    that cannot fit anywhere are explicitly marked infeasible."""
+    from repro.core.planner.select import plan_placement
+    ctx = get_context()
+    ctx.backend = BackendEngines.AUTO
+    src = _uniform_source(n=50_000, partition_rows=2048)
+    ctx.memory_budget = int(50_000 * 24 * 0.3)
+    scan = G.Scan(src)
+    f = G.Filter(scan, E.BinOp("gt", E.Col("fare"), E.Lit(10.0)))
+    gb = G.GroupByAgg(f, ["vendor"], {"m": ("miles", "sum")})
+    decisions = plan_placement([gb], ctx)
+    for d in decisions:
+        if d.feasible:
+            assert d.cost.peak_bytes <= ctx.memory_budget
+        else:
+            assert all("budget!" in r or "pricing-failed" in r
+                       for r in d.rejected.values())
+
+
+def test_backend_options_mix_planner_and_engine_keys():
+    """Planner-level options (placement) coexist with engine options
+    (chunk_rows) in ``backend_options`` — backends are constructed with
+    exactly the keys they accept, on both the fixed and AUTO paths."""
+    ctx = get_context()
+    ctx.backend = BackendEngines.STREAMING
+    ctx.backend_options.update(placement="per_root", chunk_rows=512)
+    src = _uniform_source(n=2000)
+    df = core.read_source(src)
+    assert df[df["fare"] > 10.0].compute().rows() > 0
+    ctx.backend = BackendEngines.AUTO
+    df = core.read_source(src)
+    assert df[df["fare"] > 10.0].compute().rows() > 0
+
+
+def test_per_root_placement_option_still_available():
+    """The PR-1 per-root strategy remains selectable (regret baseline for
+    benchmarks/run.py backend_selection)."""
+    ctx = get_context()
+    ctx.backend = BackendEngines.AUTO
+    ctx.backend_options["placement"] = "per_root"
+    src = _uniform_source(n=5000)
+    df = core.read_source(src)
+    res = df[df["fare"] > 10.0].compute()
+    assert res.rows() > 0
+    assert len(ctx.planner_decisions) == 1
+    assert not ctx.planner_decisions[0].boundary
+
+
 def test_persist_mark_survives_full_optimize():
     ctx = get_context()
     src = _uniform_source(n=1000)

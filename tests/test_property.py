@@ -138,6 +138,74 @@ def test_groupby_partial_combine_law(table, keycol, fn):
                                atol=1e-6)
 
 
+@st.composite
+def calibration_scales(draw):
+    """Randomized measured sec/work scales spanning orders of magnitude —
+    skewed calibrations push the operator-granular planner into different
+    (possibly split) placements."""
+    return {name: draw(st.sampled_from([1e-9, 1e-6, 1e-3, 1.0]))
+            for name in ("eager", "streaming", "distributed")}
+
+
+@settings(max_examples=15, deadline=None)
+@given(table=small_table(), ops=pipeline_ops(), scales=calibration_scales())
+def test_operator_granular_auto_matches_fixed_backend(table, ops, scales):
+    """Whatever segments the operator-granular planner picks (under any
+    runtime calibration), the hybrid result equals forcing one backend."""
+    from repro.core.planner.feedback import MIN_RUNTIME_SAMPLES
+    get_context().reset()
+    ctx = get_context()
+
+    ctx.backend = BackendEngines.EAGER
+    df = core.from_arrays(table, partition_rows=32)
+    ref = _values(_apply_ops(df, ops, {}).compute())
+
+    ctx.reset()
+    ctx.backend = BackendEngines.AUTO
+    for name, s in scales.items():
+        for _ in range(MIN_RUNTIME_SAMPLES):
+            ctx.stats_store.record_runtime(name, 1.0, s)
+    df = core.from_arrays(table, partition_rows=32)
+    av = _values(_apply_ops(df, ops, {}).compute())
+
+    assert set(ref.keys()) == set(av.keys())
+    for k in ref:
+        # engines differ in float width (eager f32, streaming f64)
+        np.testing.assert_allclose(np.asarray(ref[k], np.float64),
+                                   np.asarray(av[k], np.float64),
+                                   rtol=5e-4, atol=1e-6)
+
+
+@settings(max_examples=15, deadline=None)
+@given(table=small_table(), ops=pipeline_ops(),
+       budget=st.sampled_from([1 << 10, 1 << 14, 1 << 20, None]))
+def test_planner_segments_respect_memory_budget(table, ops, budget):
+    """Every segment the planner emits either fits ``ctx.memory_budget``
+    (estimated peak) or is explicitly marked infeasible with every
+    alternative rejected for the budget too."""
+    from repro.core.optimizer import optimize as opt
+    from repro.core.planner.select import plan_placement
+    get_context().reset()
+    ctx = get_context()
+    ctx.backend = BackendEngines.AUTO
+    ctx.memory_budget = budget
+    df = core.from_arrays(table, partition_rows=32)
+    node = _apply_ops(df, ops, {})._node
+    roots, _ = opt([node], ctx)
+    decisions = plan_placement(roots, ctx)
+    seen: set[int] = set()
+    for d in decisions:
+        if budget is not None and d.feasible:
+            assert d.cost.peak_bytes <= budget
+        elif budget is not None:
+            assert all("budget!" in r or "pricing-failed" in r
+                       for r in d.rejected.values())
+        # segments partition the plan: no operator is assigned twice
+        ids = {n.id for n in d.nodes}
+        assert not (ids & seen)
+        seen |= ids
+
+
 @settings(max_examples=20, deadline=None)
 @given(st.lists(st.booleans(), min_size=1, max_size=300),
        st.integers(0, 2 ** 16))
