@@ -185,8 +185,13 @@ def backend_selection():
                 ok_all = ok_all and ok
                 if backend == BackendEngines.AUTO:
                     ctx = get_context()
-                    chosen.extend(d.cost.backend
-                                  for d in ctx.planner_decisions)
+                    prog_chose = sorted({d.cost.backend
+                                         for d in ctx.planner_decisions})
+                    per_program[name]["auto_chose"] = prog_chose
+                    per_program[name]["device_resident_handoffs"] = sum(
+                        "device-resident" in line
+                        for line in ctx.planner_trace)
+                    chosen.extend(prog_chose)
             # only the streaming backend wires the budget into a MemoryMeter;
             # under a budget, eager/distributed run unconstrained and are not
             # a fair regret baseline
@@ -234,6 +239,17 @@ def backend_selection():
             res["operator_regret_le_per_root"] = {
                 name: op_r[name] <= pr_r[name] * 1.05  # 5% timing jitter
                 for name in op_r if name in pr_r}
+        # native-distributed-join figure: did AUTO select (and by selection,
+        # cost-win with) the distributed engine on the join-bearing program,
+        # and did its segment chain pass a device-resident handoff?
+        jd = res["auto_operator"]["per_program"].get("ratings_join", {})
+        res["join_distributed_selected"] = (
+            "distributed" in jd.get("auto_chose", []))
+        res["join_device_resident_handoffs"] = jd.get(
+            "device_resident_handoffs", 0)
+        emit(f"backend_selection_{label}_join_distributed", 0.0,
+             f"selected={res['join_distributed_selected']} "
+             f"device_resident_handoffs={res['join_device_resident_handoffs']}")
     path = os.environ.get("REPRO_BENCH_SELECTION_OUT",
                           "backend_selection.json")
     with open(path, "w") as f:

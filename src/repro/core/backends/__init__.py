@@ -12,6 +12,7 @@ from __future__ import annotations
 import dataclasses
 
 from ..context import BackendEngines
+from ..physical.sharded import BROADCAST_BUILD_BYTES
 
 
 # ---------------------------------------------------------------------------
@@ -39,6 +40,11 @@ class BackendCapability:
     transfer_cost_per_byte: float       # host<->device / gather movement
     fallback_penalty: float             # multiplier for non-native ops
     streams_partitions: bool            # True → peak memory is chunk-scaled
+    # joins are costed by *build side*: builds at or below this many bytes
+    # replicate cheaply (broadcast-hash); larger builds pay an all-to-all
+    # shuffle of both sides.  0.0 → the engine has no exchange-based join
+    # (its join is a plain local hash join, no extra movement charge).
+    broadcast_join_bytes: float = 0.0
 
 
 CAPABILITIES: dict[BackendEngines, BackendCapability] = {
@@ -56,11 +62,17 @@ CAPABILITIES: dict[BackendEngines, BackendCapability] = {
         name="distributed",
         native_ops=frozenset({"scan", "materialized", "filter", "project",
                               "assign", "rename", "astype", "fillna",
-                              "reduce", "length", "groupby_agg",
+                              "reduce", "length", "groupby_agg", "join",
+                              "sort_values", "drop_duplicates",
                               "sink_print"}),
-        startup_cost=5e4, scan_cost_per_byte=1.2, row_cost=1.0,
+        # scan models parallel partition ingest across shard workers (cheaper
+        # per byte than eager's single-device load), paid for by the highest
+        # fixed startup: distributed only wins once tables are large enough
+        # to amortize mesh dispatch.  Runtime calibration corrects both.
+        startup_cost=8e4, scan_cost_per_byte=0.6, row_cost=1.0,
         parallelism=8.0, transfer_cost_per_byte=2.0, fallback_penalty=3.0,
-        streams_partitions=False),
+        streams_partitions=False,
+        broadcast_join_bytes=float(BROADCAST_BUILD_BYTES)),
 }
 
 

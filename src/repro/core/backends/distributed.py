@@ -2,17 +2,27 @@
 Modin/cluster analogue of paper §2.6).
 
 Physical model: each source partition group is padded to a fixed per-shard
-row count and stacked to ``(n_shards, rows)`` with a validity mask.  Row-wise
-ops and mask updates run inside a single jit+shard_map program per pipeline
-stage; reductions and group-bys compute shard-local partials and combine with
-``jax.lax.psum`` over the data axis.  Group-by keys must be dictionary-coded
-/ small-domain ints (the metadata store guarantees this for category
-columns), giving a dense ``segment_sum`` of size G per shard — the same
-layout the MXU group-by kernel uses on TPU.
+row count and stacked to ``(n_shards, rows)`` with a validity mask
+(``physical.ShardedTable``).  Row-wise ops and mask updates run inside a
+single jit+shard_map program per pipeline stage; reductions and group-bys
+compute shard-local partials and combine with ``jax.lax.psum`` over the data
+axis.  Group-by keys must be dictionary-coded / small-domain ints (the
+metadata store guarantees this for category columns), giving a dense
+``segment_sum`` of size G per shard — the same layout the MXU group-by
+kernel uses on TPU.
 
-Ops without a distributed implementation (join, sort, distinct) fall back to
-the eager backend — mirroring the paper's "convert to Pandas, run, convert
-back" fallback for unsupported Dask ops.
+Join, sort, and distinct are *native* (``physical.sharded``): broadcast-hash
+join for small unique-key build sides (device-resident, shape-preserving),
+shuffle-by-dict-code join / sort / distinct otherwise, all producing
+device-resident ``ShardedTable`` outputs.  Only genuinely unsupported cases
+(non-integer keys, unbounded key domains, exotic ``how=``) fall back to the
+eager kernel — mirroring the paper's "convert to Pandas, run, convert back"
+fallback for unsupported Dask ops.
+
+Segment handoffs: ``execute(..., keep_sharded=...)`` lets the runtime keep
+named roots device-resident, so distributed→distributed segment chains pass
+``ShardedTable`` payloads through ``graph.Handoff`` without a host gather;
+incoming sharded handoffs are consumed in place.
 """
 from __future__ import annotations
 
@@ -22,12 +32,13 @@ from typing import Any
 import jax
 import jax.numpy as jnp
 import numpy as np
-from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+from jax.sharding import Mesh, PartitionSpec as P
 
 from ...compat import shard_map
-from .. import exec_common as X
 from .. import graph as G
+from .. import physical as X
 from ..context import LaFPContext
+from ..physical.sharded import ShardedTable
 from .eager import EagerBackend
 
 _DIST_OPS = ("scan", "filter", "project", "assign", "rename", "astype",
@@ -39,20 +50,9 @@ def _default_mesh() -> Mesh:
     return Mesh(devs.reshape(len(devs)), ("data",))
 
 
-class ShardedTable:
-    """(n_shards, rows) column arrays + validity mask, device-sharded."""
-
-    def __init__(self, cols: dict[str, jax.Array], valid: jax.Array):
-        self.cols = cols
-        self.valid = valid  # (n_shards, rows) bool
-
-    def gather(self) -> dict[str, np.ndarray]:
-        mask = np.asarray(self.valid).reshape(-1)
-        return {k: np.asarray(v).reshape(-1)[mask] for k, v in self.cols.items()}
-
-
 class DistributedBackend:
     name = "distributed"
+    supports_device_handoff = True
 
     def __init__(self, mesh: Mesh | None = None, axis: str = "data"):
         self.mesh = mesh or _default_mesh()
@@ -60,15 +60,21 @@ class DistributedBackend:
         self._fallback = EagerBackend()
 
     # -- planning: greatest distributable subgraphs -------------------------
-    def execute(self, roots: list[G.Node], ctx: LaFPContext) -> dict[int, Any]:
+    def execute(self, roots: list[G.Node], ctx: LaFPContext,
+                keep_sharded: frozenset[int] = frozenset()) -> dict[int, Any]:
+        """Evaluate ``roots``.  Results are host values except for root ids
+        in ``keep_sharded``, whose ``ShardedTable`` stays device-resident —
+        the runtime requests this for distributed→distributed handoffs."""
         self._ctx = ctx
         results: dict[int, Any] = {}
         memo: dict[int, Any] = {}        # shared: CSE'd subtrees run once
         for r in roots:
             v = self._eval(r, memo)
-            # ShardedTable is internal representation; callers (runtime
-            # _wrap, segment handoffs) expect host tables at the boundary
-            results[r.id] = v.gather() if isinstance(v, ShardedTable) else v
+            if isinstance(v, ShardedTable) and r.id not in keep_sharded:
+                # ShardedTable is internal representation; callers (runtime
+                # _wrap, host segment handoffs) expect host tables
+                v = v.gather()
+            results[r.id] = v
         return results
 
     def _eval(self, n: G.Node, memo: dict[int, Any]) -> Any:
@@ -90,6 +96,11 @@ class DistributedBackend:
 
     def _eval_inner(self, n: G.Node, memo) -> Any:
         if isinstance(n, G.Handoff):
+            v = n.value
+            if isinstance(v, ShardedTable):
+                if v.n_shards == self._n_shards():
+                    return v                  # device-resident, no re-shard
+                return X.shard_host_table(v.gather(), self.mesh, self.axis)
             return X.handoff_value(n)
         if isinstance(n, G.Materialized):
             return dict(n.table)
@@ -108,7 +119,16 @@ class DistributedBackend:
         if n.op in _DIST_OPS:
             child = self._eval(n.inputs[0], memo)
             if isinstance(child, ShardedTable):
-                return self._rowwise_sharded(n, child)
+                try:
+                    return self._rowwise_sharded(n, child)
+                except Exception as e:  # noqa: BLE001 — e.g. host-numpy UDF
+                    # exprs that cannot be jit-traced: gather and delegate
+                    # like any other unsupported op — but never silently
+                    # (a genuine native-kernel bug must stay visible)
+                    self._ctx.planner_trace.append(
+                        f"distributed: {n.op}#{n.id} native path failed, "
+                        f"falling back ({type(e).__name__}: {e})")
+                    return self._fallback_node(n, [child])
             return self._fallback_node(n, [child])
         if isinstance(n, G.Reduce):
             child = self._eval(n.inputs[0], memo)
@@ -129,7 +149,33 @@ class DistributedBackend:
                     return dense
             return self._fallback_node(
                 n, [child.gather() if isinstance(child, ShardedTable) else child])
-        # fallback for join/sort/distinct/head/concat/maprows
+        if isinstance(n, G.Join):
+            left = self._eval(n.inputs[0], memo)
+            right = self._eval(n.inputs[1], memo)
+            if isinstance(left, ShardedTable):
+                build = right.gather() if isinstance(right, ShardedTable) else right
+                if isinstance(build, dict):
+                    out = X.sharded_join(left, build, n.on, n.how, n.suffixes,
+                                         self.mesh, self.axis)
+                    if out is not None:
+                        return out
+            return self._fallback_node(n, [left, right])
+        if isinstance(n, G.SortValues):
+            child = self._eval(n.inputs[0], memo)
+            if isinstance(child, ShardedTable):
+                out = X.sharded_sort(child, n.by, n.ascending,
+                                     self.mesh, self.axis)
+                if out is not None:
+                    return out
+            return self._fallback_node(n, [child])
+        if isinstance(n, G.DropDuplicates):
+            child = self._eval(n.inputs[0], memo)
+            if isinstance(child, ShardedTable):
+                out = X.sharded_distinct(child, n.subset, self.mesh, self.axis)
+                if out is not None:
+                    return out
+            return self._fallback_node(n, [child])
+        # fallback for head/concat/maprows and unsupported native cases
         vals = []
         for i in n.inputs:
             v = self._eval(i, memo)
@@ -159,18 +205,7 @@ class DistributedBackend:
             parts = [{c: np.zeros(0, n.source.schema.col(c).np_dtype)
                       for c in cols}]
         full = {c: np.concatenate([p[c] for p in parts]) for c in parts[0]}
-        rows = len(next(iter(full.values()))) if full else 0
-        S = self._n_shards()
-        per = -(-max(rows, 1) // S)
-        pad = S * per - rows
-        valid = np.arange(S * per) < rows
-        sharding = NamedSharding(self.mesh, P(self.axis))
-        cols = {}
-        for c, v in full.items():
-            vp = np.concatenate([v, np.zeros(pad, v.dtype)]) if pad else v
-            cols[c] = jax.device_put(vp.reshape(S, per), sharding)
-        vmask = jax.device_put(valid.reshape(S, per), sharding)
-        return ShardedTable(cols, vmask)
+        return X.shard_host_table(full, self.mesh, self.axis)
 
     def _rowwise_sharded(self, n: G.Node, t: ShardedTable) -> ShardedTable:
         if isinstance(n, G.Filter):

@@ -11,7 +11,7 @@ from typing import Any
 import jax.numpy as jnp
 import numpy as np
 
-from .. import exec_common as X
+from .. import physical as X
 from .. import graph as G
 from ..context import LaFPContext
 

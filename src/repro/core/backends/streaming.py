@@ -4,7 +4,7 @@ Dask analogue), with deterministic memory accounting.
 The DAG is executed as pull-based partition streams.  Row-preserving ops map
 over partitions; pipeline breakers (group-by, reductions, sort, join build
 side, distinct) hold bounded combiner state — group-by uses partial
-aggregation + combine (``exec_common.partial_aggs``), so memory scales with
+aggregation + combine (``physical.partial_aggs``), so memory scales with
 the number of groups, not rows.  ``Head`` short-circuits the stream.
 
 Nodes with multiple consumers are materialized once and re-streamed (and
@@ -18,7 +18,7 @@ from typing import Any, Iterator
 
 import numpy as np
 
-from .. import exec_common as X
+from .. import physical as X
 from .. import graph as G
 from ..context import LaFPContext
 from . import MemoryMeter
@@ -60,8 +60,10 @@ class StreamingBackend:
         for r in roots:
             results[r.id] = self._collect_value(r)
         # accumulate across force points (reset() clears) so program-level
-        # peaks are visible to the benchmarks
+        # peaks are visible to the benchmarks; the per-run peak feeds the
+        # planner's peak-estimate calibration (feedback.record_peak samples)
         ctx.last_peak_bytes = max(ctx.last_peak_bytes, meter.peak)
+        ctx.last_run_peak_bytes = meter.peak
         return results
 
     # ------------------------------------------------------------------

@@ -45,6 +45,7 @@ class LaFPContext:
         self.optimizer_trace: list[str] = []
         self.memory_budget: int | None = None   # bytes; streaming backend enforces
         self.last_peak_bytes: int = 0           # streaming backend peak accounting
+        self.last_run_peak_bytes: int = 0       # peak of the latest single run
         # cost-based planner (planner/): AUTO plan-choice trace + feedback
         # stats store (observed cardinalities keyed by structural node key,
         # plus per-backend runtime samples for cost calibration).  AUTO
@@ -54,6 +55,17 @@ class LaFPContext:
         self.planner_trace: list[str] = []
         from .planner.feedback import StatsStore
         self.stats_store = StatsStore()
+        # stats-store persistence: when REPRO_STATS_CACHE_DIR is set (or a
+        # session passes stats_path=...), calibration + cardinality feedback
+        # is reloaded here and re-saved after every execute, so AUTO
+        # calibration survives process restarts (per-context cache file,
+        # keyed by session name)
+        import os as _os
+        cache_dir = _os.environ.get("REPRO_STATS_CACHE_DIR")
+        self.stats_path: str | None = (
+            _os.path.join(cache_dir, f"{name}.json") if cache_dir else None)
+        if self.stats_path:
+            self.stats_store.load(self.stats_path)
         self.planner_decisions: list[Any] = []  # last force point's Decisions
         self.print_fn = print                   # patched in tests
         # facade fallback protocol (repro.pandas): every op the lazy layer
@@ -125,6 +137,7 @@ def session_depth() -> int:
 def session(backend: BackendEngines | None = None,
             memory_budget: int | None = None,
             name: str = "session",
+            stats_path: str | None = None,
             **backend_options):
     """Isolated execution session: fresh backend choice, persist cache,
     sink chain, stats store (planner feedback + runtime calibration), and
@@ -138,6 +151,12 @@ def session(backend: BackendEngines | None = None,
     ``session(backend=BackendEngines.AUTO, placement="per_root")`` selects
     the legacy per-root planner strategy for the block.
 
+    ``stats_path`` persists the session's stats store (cardinality feedback
+    + runtime/peak calibration samples) to a JSON file: reloaded here,
+    re-saved after every execute — AUTO calibration survives process
+    restarts.  ``REPRO_STATS_CACHE_DIR`` enables the same per-context
+    persistence globally.
+
     Pending lazy sinks are flushed on clean exit (so deferred prints inside
     the block don't silently vanish); on exception the session is popped
     unflushed."""
@@ -145,6 +164,9 @@ def session(backend: BackendEngines | None = None,
     if backend is not None:
         ctx.backend = backend
     ctx.memory_budget = memory_budget
+    if stats_path is not None:
+        ctx.stats_path = stats_path
+        ctx.stats_store.load(stats_path)
     ctx.backend_options.update(backend_options)
     push_session(ctx)
     try:

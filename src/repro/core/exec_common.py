@@ -1,417 +1,10 @@
-"""Physical operator implementations shared by the backends.
-
-A "table" is ``dict[str, array]`` of equal-length 1-D columns; arrays are
-either numpy (host / streaming backend) or jax (eager device backend) — the
-ops below dispatch on the array type.  Group-by and filter have Pallas TPU
-kernel counterparts in ``repro.kernels`` (selected via ``repro.kernels.ops``);
-these jnp paths double as their oracles' production fallback.
+"""Back-compat shim — the physical operators moved to
+``repro.core.physical`` (the unified physical-operator layer shared by all
+backends).  Import from there in new code; this module re-exports the full
+surface so existing ``from .. import exec_common as X`` call sites keep
+working unchanged.
 """
 from __future__ import annotations
 
-from typing import Mapping, Sequence
-
-import numpy as np
-
-import jax
-import jax.numpy as jnp
-
-Table = dict
-
-
-def is_jax(arr) -> bool:
-    return isinstance(arr, jax.Array)
-
-
-def xp_of(table: Table):
-    for v in table.values():
-        return jnp if is_jax(v) else np
-    return np
-
-
-def table_rows(table: Table) -> int:
-    for v in table.values():
-        return int(v.shape[0])
-    return 0
-
-
-def table_nbytes(table: Table) -> int:
-    return sum(int(v.nbytes) for v in table.values())
-
-
-def to_numpy(table: Table) -> Table:
-    return {k: np.asarray(v) for k, v in table.items()}
-
-
-def to_jax(table: Table) -> Table:
-    return {k: jnp.asarray(v) for k, v in table.items()}
-
-
-# ---------------------------------------------------------------------------
-# Segment handoff (operator-granular hybrid placement)
-#
-# When the planner splits one plan across engines, values crossing a segment
-# boundary are normalized to host representation: tables become numpy column
-# dicts, device scalars become python numbers.  This is the explicit
-# materialization the cost model charges as transfer at every cut edge.
-
-
-def to_host_value(value):
-    """Normalize a segment output for transfer to another engine."""
-    if isinstance(value, dict):
-        return to_numpy(value)
-    if isinstance(value, (jax.Array, np.generic)):
-        arr = np.asarray(value)
-        return arr.item() if arr.ndim == 0 else arr
-    return value
-
-
-def handoff_value(node, device_arrays: bool = False):
-    """Evaluate a ``graph.Handoff`` leaf inside a backend: return its
-    pre-materialized payload, converting tables onto the device when the
-    consuming engine wants device-resident columns."""
-    v = node.value
-    if isinstance(v, dict):
-        return to_jax(v) if device_arrays else v
-    return v
-
-
-# ---------------------------------------------------------------------------
-# Row-preserving ops
-
-
-def apply_filter(table: Table, predicate) -> Table:
-    mask = predicate.evaluate(table)
-    # boolean advanced indexing works eagerly for both np and jnp
-    return {k: v[mask] for k, v in table.items()}
-
-
-def apply_project(table: Table, columns: Sequence[str]) -> Table:
-    return {c: table[c] for c in columns}
-
-
-def apply_assign(table: Table, name: str, expr) -> Table:
-    out = dict(table)
-    val = expr.evaluate(table)
-    xp = xp_of(table)
-    if np.isscalar(val) or getattr(val, "ndim", 1) == 0:
-        val = xp.full((table_rows(table),), val)
-    out[name] = val
-    return out
-
-
-def apply_rename(table: Table, mapping: Mapping[str, str]) -> Table:
-    return {mapping.get(k, k): v for k, v in table.items()}
-
-
-def apply_astype(table: Table, dtypes: Mapping[str, str]) -> Table:
-    out = dict(table)
-    for c, dt in dtypes.items():
-        out[c] = out[c].astype(dt)
-    return out
-
-
-def apply_fillna(table: Table, value, columns=None) -> Table:
-    xp = xp_of(table)
-    out = dict(table)
-    for c in (columns or table.keys()):
-        arr = out[c]
-        if arr.dtype.kind == "f":
-            out[c] = xp.where(xp.isnan(arr), xp.asarray(value, dtype=arr.dtype), arr)
-    return out
-
-
-def apply_head(table: Table, n: int) -> Table:
-    return {k: v[:n] for k, v in table.items()}
-
-
-def apply_sort(table: Table, by: Sequence[str], ascending: bool = True) -> Table:
-    xp = xp_of(table)
-    # lexsort: last key is primary in np.lexsort; jnp has lexsort too.
-    keys = tuple(table[b] for b in reversed(by))
-    idx = xp.lexsort(keys) if len(keys) > 1 else xp.argsort(keys[0], stable=True)
-    if not ascending:
-        idx = idx[::-1]
-    return {k: v[idx] for k, v in table.items()}
-
-
-def apply_drop_duplicates(table: Table, subset=None) -> Table:
-    cols = list(subset) if subset else list(table.keys())
-    codes, _ = _factorize_multi(table, cols)
-    xp = xp_of(table)
-    if xp is jnp:
-        _, first_idx = jnp.unique(codes, return_index=True)
-        idx = jnp.sort(first_idx)
-    else:
-        _, first_idx = np.unique(codes, return_index=True)
-        idx = np.sort(first_idx)
-    return {k: v[idx] for k, v in table.items()}
-
-
-def apply_map_rows(table: Table, fn) -> Table:
-    return fn(dict(table))
-
-
-# ---------------------------------------------------------------------------
-# Group-by aggregation
-
-
-def _factorize(arr):
-    """codes, uniques — order of uniques is sorted-value order."""
-    if is_jax(arr):
-        uniques, codes = jnp.unique(arr, return_inverse=True)
-    else:
-        uniques, codes = np.unique(arr, return_inverse=True)
-    return codes, uniques
-
-
-def _factorize_multi(table: Table, cols: Sequence[str]):
-    """Multi-column factorize via mixed-radix combination.
-
-    Returns (codes, key_arrays_fn) where key_arrays_fn(group_codes) maps the
-    final group code array back to per-column key values.
-    """
-    per = []
-    radices = []
-    for c in cols:
-        codes, uniques = _factorize(table[c])
-        per.append((codes, uniques))
-        radices.append(int(uniques.shape[0]))
-    xp = jnp if is_jax(per[0][0]) else np
-    combined = per[0][0].astype(np.int64 if xp is np else jnp.int32)
-    for (codes, _), r in zip(per[1:], radices[1:]):
-        combined = combined * r + codes
-
-    def decode(group_codes):
-        out = {}
-        rem = group_codes
-        for (c, (_, uniques)), r in zip(
-                reversed(list(zip(cols, per))), reversed(radices)):
-            out[c] = uniques[rem % r]
-            rem = rem // r
-        return out
-
-    return combined, decode
-
-
-def apply_groupby_agg(table: Table, keys: Sequence[str],
-                      aggs: Mapping[str, tuple[str, str]]) -> Table:
-    """Dense aggregation: factorize keys → segment reductions.
-
-    This jnp/np path is also the oracle for the MXU one-hot kernel
-    (``repro.kernels.groupby_sum``)."""
-    combined, decode = _factorize_multi(table, list(keys))
-    if is_jax(combined):
-        groups, inv = jnp.unique(combined, return_inverse=True)
-        num = int(groups.shape[0])
-        out = decode(groups)
-        for out_name, (col, fn) in aggs.items():
-            out[out_name] = _segment_agg_jax(table, col, fn, inv, num)
-    else:
-        groups, inv = np.unique(combined, return_inverse=True)
-        num = int(groups.shape[0])
-        out = decode(groups)
-        for out_name, (col, fn) in aggs.items():
-            out[out_name] = _segment_agg_np(table, col, fn, inv, num)
-    return out
-
-
-def _segment_agg_jax(table, col, fn, seg_ids, num):
-    ones = jnp.ones((seg_ids.shape[0],), jnp.float32)
-    if fn == "count":
-        return jax.ops.segment_sum(ones, seg_ids, num).astype(jnp.int64)
-    vals = table[col]
-    if vals.dtype.kind in "iub" and vals.dtype.itemsize < 4:
-        vals = vals.astype(jnp.int32)   # widen narrow ints: no int8 accumulate
-    if fn == "sum":
-        return jax.ops.segment_sum(vals, seg_ids, num)
-    if fn == "mean":
-        s = jax.ops.segment_sum(vals.astype(jnp.float32), seg_ids, num)
-        c = jax.ops.segment_sum(ones, seg_ids, num)
-        return s / c
-    if fn == "min":
-        return jax.ops.segment_min(vals, seg_ids, num)
-    if fn == "max":
-        return jax.ops.segment_max(vals, seg_ids, num)
-    if fn == "nunique":
-        sub_codes, _ = _factorize(vals)
-        pair = seg_ids.astype(jnp.int64) * (jnp.max(sub_codes) + 1) + sub_codes
-        uniq_pairs = jnp.unique(pair)
-        seg_of_pair = uniq_pairs // (jnp.max(sub_codes) + 1)
-        return jax.ops.segment_sum(jnp.ones_like(seg_of_pair), seg_of_pair, num)
-    raise ValueError(f"unknown agg fn {fn}")
-
-
-def _segment_agg_np(table, col, fn, seg_ids, num):
-    if fn == "count":
-        return np.bincount(seg_ids, minlength=num).astype(np.int64)
-    vals = table[col]
-    if fn == "sum":
-        return np.bincount(seg_ids, weights=vals, minlength=num).astype(
-            vals.dtype if vals.dtype.kind == "f" else np.float64)
-    if fn == "mean":
-        s = np.bincount(seg_ids, weights=vals.astype(np.float64), minlength=num)
-        c = np.bincount(seg_ids, minlength=num)
-        return s / np.maximum(c, 1)
-    if fn in ("min", "max"):
-        out = np.full(num, np.inf if fn == "min" else -np.inf, dtype=np.float64)
-        ufn = np.minimum if fn == "min" else np.maximum
-        ufn.at(out, seg_ids, vals.astype(np.float64))
-        return out.astype(vals.dtype) if vals.dtype.kind == "f" else out
-    if fn == "nunique":
-        sub_codes, _ = _factorize(vals)
-        pair = seg_ids.astype(np.int64) * (int(sub_codes.max()) + 1) + sub_codes
-        uniq = np.unique(pair)
-        seg = (uniq // (int(sub_codes.max()) + 1)).astype(np.int64)
-        return np.bincount(seg, minlength=num).astype(np.int64)
-    raise ValueError(f"unknown agg fn {fn}")
-
-
-# partial/combine pairs for the streaming backend (out-of-core group-by).
-
-_PARTIAL_FORMS = {
-    "sum": ["sum"], "count": ["count"], "min": ["min"], "max": ["max"],
-    "mean": ["sum", "count"],
-}
-
-
-def partial_aggs(aggs: Mapping[str, tuple[str, str]]):
-    """Decompose logical aggs into partial aggs computable per partition."""
-    partial = {}
-    for out_name, (col, fn) in aggs.items():
-        for p in _PARTIAL_FORMS[fn]:
-            partial[f"{out_name}::{p}"] = (col, p)
-    return partial
-
-
-def combine_partials(keys, parts: list[Table],
-                     aggs: Mapping[str, tuple[str, str]]) -> Table:
-    """Re-aggregate concatenated per-partition partials, then finalize."""
-    xp = jnp if (parts and is_jax(next(iter(parts[0].values())))) else np
-    concat = {k: xp.concatenate([p[k] for p in parts]) for k in parts[0]}
-    combine_spec = {}
-    for pname in concat:
-        if "::" not in pname:
-            continue
-        _out, p = pname.rsplit("::", 1)
-        combine_spec[pname] = (pname, "max" if p == "max" else
-                               ("min" if p == "min" else "sum"))
-    merged = apply_groupby_agg(concat, list(keys), combine_spec)
-    out = {k: merged[k] for k in keys}
-    for out_name, (_col, fn) in aggs.items():
-        if fn == "mean":
-            out[out_name] = (merged[f"{out_name}::sum"] /
-                             xp.maximum(merged[f"{out_name}::count"], 1))
-        elif fn == "count":
-            # combining count partials goes through a weighted-sum path that
-            # widens to float; counts are integral (pandas conformance)
-            out[out_name] = merged[f"{out_name}::count"].astype(
-                np.int64 if xp is np else jnp.int64)
-        else:
-            out[out_name] = merged[f"{out_name}::{fn}"]
-    return out
-
-
-# ---------------------------------------------------------------------------
-# Reductions
-
-def apply_reduce(table: Table, column: str | None, fn: str):
-    xp = xp_of(table)
-    if fn == "count":
-        return table_rows(table) if column is None else int(table[column].shape[0])
-    vals = table[column]
-    if xp is jnp and vals.dtype.kind in "iub" and vals.dtype.itemsize < 4:
-        vals = vals.astype(jnp.int32)   # widen: no int8 accumulation
-    if fn == "sum":
-        return xp.sum(vals)
-    if fn == "mean":
-        return xp.mean(vals.astype(xp.float64 if xp is np else jnp.float32))
-    if fn == "min":
-        return xp.min(vals)
-    if fn == "max":
-        return xp.max(vals)
-    if fn == "nunique":
-        return int(xp.unique(vals).shape[0])
-    raise ValueError(fn)
-
-
-REDUCE_PARTIAL = {
-    "sum": ("sum", lambda xs, xp: xp.sum(xp.asarray(xs))),
-    "min": ("min", lambda xs, xp: xp.min(xp.asarray(xs))),
-    "max": ("max", lambda xs, xp: xp.max(xp.asarray(xs))),
-    "count": ("count", lambda xs, xp: int(np.sum(xs))),
-}
-
-
-# ---------------------------------------------------------------------------
-# Join (host-side hash/sort join; build side = right)
-
-
-def apply_join(left: Table, right: Table, on: Sequence[str], how="inner",
-               suffixes=("_x", "_y")) -> Table:
-    lj, rj = to_numpy(left), to_numpy(right)
-    was_jax = xp_of(left) is jnp
-    lkeys, _ = _factorize_multi_np_pair(lj, rj, on)
-    lcode, rcode = lkeys
-    order = np.argsort(rcode, kind="stable")
-    rsorted = rcode[order]
-    lo = np.searchsorted(rsorted, lcode, side="left")
-    hi = np.searchsorted(rsorted, lcode, side="right")
-    counts = hi - lo
-    if how == "inner":
-        l_idx = np.repeat(np.arange(lcode.shape[0]), counts)
-        starts = np.repeat(lo, counts)
-        within = np.arange(l_idx.shape[0]) - np.repeat(
-            np.cumsum(counts) - counts, counts)
-        r_idx = order[starts + within]
-    elif how == "left":
-        counts2 = np.maximum(counts, 1)
-        l_idx = np.repeat(np.arange(lcode.shape[0]), counts2)
-        starts = np.repeat(lo, counts2)
-        within = np.arange(l_idx.shape[0]) - np.repeat(
-            np.cumsum(counts2) - counts2, counts2)
-        matched = np.repeat(counts > 0, counts2)
-        r_idx = np.where(matched, order[np.minimum(starts + within,
-                                                   len(order) - 1)], -1)
-    else:
-        raise ValueError(f"join how={how!r} not supported")
-    out = {}
-    overlap = (set(lj) & set(rj)) - set(on)
-    for k in on:
-        out[k] = lj[k][l_idx]
-    for k, v in lj.items():
-        if k in on:
-            continue
-        out[k + suffixes[0] if k in overlap else k] = v[l_idx]
-    for k, v in rj.items():
-        if k in on:
-            continue
-        name = k + suffixes[1] if k in overlap else k
-        col = v[np.maximum(r_idx, 0)]
-        if how == "left" and col.dtype.kind == "f":
-            col = np.where(r_idx >= 0, col, np.nan)
-        out[name] = col
-    if was_jax:
-        out = to_jax(out)
-    return out
-
-
-def _factorize_multi_np_pair(lt: Table, rt: Table, on: Sequence[str]):
-    """Factorize join keys over the union of both sides so codes align."""
-    lcode = np.zeros(len(next(iter(lt.values()))), np.int64)
-    rcode = np.zeros(len(next(iter(rt.values()))), np.int64)
-    for c in on:
-        both = np.concatenate([np.asarray(lt[c]), np.asarray(rt[c])])
-        uniques, codes = np.unique(both, return_inverse=True)
-        lc = codes[: len(lt[c])]
-        rc = codes[len(lt[c]):]
-        lcode = lcode * len(uniques) + lc
-        rcode = rcode * len(uniques) + rc
-    return (lcode, rcode), None
-
-
-def apply_concat(tables: list[Table]) -> Table:
-    xp = xp_of(tables[0])
-    cols = set(tables[0])
-    for t in tables[1:]:
-        cols &= set(t)
-    return {c: xp.concatenate([t[c] for t in tables]) for c in sorted(cols)}
+from .physical import *  # noqa: F401,F403
+from .physical import __all__  # noqa: F401

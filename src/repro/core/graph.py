@@ -94,7 +94,9 @@ class Scan(Node):
         return frozenset(self.source.schema.names)
 
     def key(self):
-        return ("scan", id(self.source), self.columns,
+        token = getattr(self.source, "cache_token", None)
+        token = token() if callable(token) else id(self.source)
+        return ("scan", token, self.columns,
                 tuple(sorted(self.dtype_overrides.items())), self.skip_partitions)
 
     def with_inputs(self, inputs):
@@ -594,10 +596,12 @@ class Materialized(Node):
 class Handoff(Node):
     """Pipe breaker between planner segments (operator-granular hybrid
     placement).  The producing segment's engine has already materialized
-    ``value`` — a host table (dict of numpy columns) or a scalar — and the
-    consuming segment's engine treats this node as a pre-computed leaf.
-    Keys on the logical key of the node it replaces so persist/CSE machinery
-    sees the original subexpression."""
+    ``value`` — a host table (dict of numpy columns), a scalar, or, for
+    distributed→distributed chains, a device-resident
+    ``physical.ShardedTable`` that never round-trips through host memory —
+    and the consuming segment's engine treats this node as a pre-computed
+    leaf.  Keys on the logical key of the node it replaces so persist/CSE
+    machinery sees the original subexpression."""
     op = "handoff"
 
     def __init__(self, value, logical_key: tuple, producer: str = "?"):
@@ -609,6 +613,9 @@ class Handoff(Node):
     def out_cols(self, in_cols):
         if isinstance(self.value, dict):
             return frozenset(self.value.keys())
+        cols = getattr(self.value, "cols", None)   # ShardedTable payload
+        if isinstance(cols, dict):
+            return frozenset(cols.keys())
         return frozenset()
 
     def key(self):

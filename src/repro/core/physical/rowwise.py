@@ -1,0 +1,60 @@
+"""Row-preserving pipeline operators (np/jnp dispatch via the table
+protocol).  These run identically on whole tables (eager), partition chunks
+(streaming), and — lifted over ``(n_shards, rows)`` arrays — inside the
+distributed backend's shard programs."""
+from __future__ import annotations
+
+from typing import Mapping, Sequence
+
+import numpy as np
+
+from .table import Table, table_rows, xp_of
+
+
+def apply_filter(table: Table, predicate) -> Table:
+    mask = predicate.evaluate(table)
+    # boolean advanced indexing works eagerly for both np and jnp
+    return {k: v[mask] for k, v in table.items()}
+
+
+def apply_project(table: Table, columns: Sequence[str]) -> Table:
+    return {c: table[c] for c in columns}
+
+
+def apply_assign(table: Table, name: str, expr) -> Table:
+    out = dict(table)
+    val = expr.evaluate(table)
+    xp = xp_of(table)
+    if np.isscalar(val) or getattr(val, "ndim", 1) == 0:
+        val = xp.full((table_rows(table),), val)
+    out[name] = val
+    return out
+
+
+def apply_rename(table: Table, mapping: Mapping[str, str]) -> Table:
+    return {mapping.get(k, k): v for k, v in table.items()}
+
+
+def apply_astype(table: Table, dtypes: Mapping[str, str]) -> Table:
+    out = dict(table)
+    for c, dt in dtypes.items():
+        out[c] = out[c].astype(dt)
+    return out
+
+
+def apply_fillna(table: Table, value, columns=None) -> Table:
+    xp = xp_of(table)
+    out = dict(table)
+    for c in (columns or table.keys()):
+        arr = out[c]
+        if arr.dtype.kind == "f":
+            out[c] = xp.where(xp.isnan(arr), xp.asarray(value, dtype=arr.dtype), arr)
+    return out
+
+
+def apply_head(table: Table, n: int) -> Table:
+    return {k: v[:n] for k, v in table.items()}
+
+
+def apply_map_rows(table: Table, fn) -> Table:
+    return fn(dict(table))

@@ -1,0 +1,39 @@
+"""Sort and distinct (host + device whole-table kernels).
+
+Stable lexsort keeps pandas row-order semantics (descending = reversed
+ascending, ties included); distinct keeps first occurrences in input order.
+The distributed shuffle variants in ``sharded.py`` reuse these as their
+per-shard local kernels."""
+from __future__ import annotations
+
+from typing import Sequence
+
+import numpy as np
+
+import jax.numpy as jnp
+
+from .groupby import _factorize_multi
+from .table import Table, xp_of
+
+
+def apply_sort(table: Table, by: Sequence[str], ascending: bool = True) -> Table:
+    xp = xp_of(table)
+    # lexsort: last key is primary in np.lexsort; jnp has lexsort too.
+    keys = tuple(table[b] for b in reversed(by))
+    idx = xp.lexsort(keys) if len(keys) > 1 else xp.argsort(keys[0], stable=True)
+    if not ascending:
+        idx = idx[::-1]
+    return {k: v[idx] for k, v in table.items()}
+
+
+def apply_drop_duplicates(table: Table, subset=None) -> Table:
+    cols = list(subset) if subset else list(table.keys())
+    codes, _ = _factorize_multi(table, cols)
+    xp = xp_of(table)
+    if xp is jnp:
+        _, first_idx = jnp.unique(codes, return_index=True)
+        idx = jnp.sort(first_idx)
+    else:
+        _, first_idx = np.unique(codes, return_index=True)
+        idx = np.sort(first_idx)
+    return {k: v[idx] for k, v in table.items()}

@@ -1,0 +1,96 @@
+"""Chunk/shard table protocol.
+
+A host *table* is ``dict[str, array]`` of equal-length 1-D columns; arrays
+are either numpy (host / streaming chunks) or jax (eager whole-table).  The
+distributed backend's :class:`~repro.core.physical.sharded.ShardedTable`
+binds the same column-dict shape to ``(n_shards, rows)`` device-sharded
+arrays plus a validity mask.  Physical operators dispatch on the array type
+(``xp_of``), so one implementation serves every chunk granularity.
+
+Segment handoff payloads (``graph.Handoff``) are normalized here: host
+tables, scalars, or — for distributed→distributed chains — device-resident
+``ShardedTable`` values that never round-trip through host memory.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+Table = dict
+
+
+def is_jax(arr) -> bool:
+    return isinstance(arr, jax.Array)
+
+
+def xp_of(table: Table):
+    for v in table.values():
+        return jnp if is_jax(v) else np
+    return np
+
+
+def table_rows(table: Table) -> int:
+    for v in table.values():
+        return int(v.shape[0])
+    return 0
+
+
+def table_nbytes(table: Table) -> int:
+    return sum(int(v.nbytes) for v in table.values())
+
+
+def to_numpy(table: Table) -> Table:
+    return {k: np.asarray(v) for k, v in table.items()}
+
+
+def to_jax(table: Table) -> Table:
+    return {k: jnp.asarray(v) for k, v in table.items()}
+
+
+def apply_concat(tables: list[Table]) -> Table:
+    xp = xp_of(tables[0])
+    cols = set(tables[0])
+    for t in tables[1:]:
+        cols &= set(t)
+    return {c: xp.concatenate([t[c] for t in tables]) for c in sorted(cols)}
+
+
+# ---------------------------------------------------------------------------
+# Segment handoff (operator-granular hybrid placement)
+#
+# When the planner splits one plan across engines, values crossing a segment
+# boundary are normalized to host representation: tables become numpy column
+# dicts, device scalars become python numbers.  This is the explicit
+# materialization the cost model charges as transfer at every cut edge.
+# The one exception is a distributed→distributed boundary, where the payload
+# stays a device-resident ShardedTable (see ``runtime.execute_segments``).
+
+
+def to_host_value(value):
+    """Normalize a segment output for transfer to another engine."""
+    from .sharded import ShardedTable
+    if isinstance(value, ShardedTable):
+        return value.gather()
+    if isinstance(value, dict):
+        return to_numpy(value)
+    if isinstance(value, (jax.Array, np.generic)):
+        arr = np.asarray(value)
+        return arr.item() if arr.ndim == 0 else arr
+    return value
+
+
+def handoff_value(node, device_arrays: bool = False):
+    """Evaluate a ``graph.Handoff`` leaf inside a backend: return its
+    pre-materialized payload, converting tables onto the device when the
+    consuming engine wants device-resident columns.  A device-resident
+    ``ShardedTable`` payload is gathered defensively — only the distributed
+    backend consumes it in place (``DistributedBackend._eval_inner``)."""
+    from .sharded import ShardedTable
+    v = node.value
+    if isinstance(v, ShardedTable):
+        v = v.gather()
+    if isinstance(v, dict):
+        return to_jax(v) if device_arrays else v
+    return v

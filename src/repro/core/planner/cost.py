@@ -26,7 +26,7 @@ from .. import graph as G
 from ..context import BackendEngines
 from .stats import TableStats
 
-_LOG_OPS = ("sort_values", "drop_duplicates", "join")  # n log n ops
+_LOG_OPS = ("sort_values", "drop_duplicates")  # n log n ops
 _BREAKERS = ("sort_values", "groupby_agg", "join", "drop_duplicates")
 
 
@@ -36,6 +36,11 @@ class CostEstimate:
     total: float                         # unitless work
     peak_bytes: float                    # estimated resident high-water mark
     per_node: dict[int, float]           # node id -> work contribution
+    # pre-calibration peak: ``peak_bytes`` may be rescaled by the measured
+    # peak_scale (select._price); calibration samples must pair the *raw*
+    # model estimate with the observed peak, or the regression would chase
+    # its own output back toward 1
+    raw_peak_bytes: float | None = None
 
     def __repr__(self):
         return (f"<Cost {self.backend} total={self.total:.3g} "
@@ -51,6 +56,8 @@ def node_work(n: G.Node, stats: dict[int, TableStats], cap) -> float:
         return st.total_bytes * cap.scan_cost_per_byte
     if isinstance(n, (G.Materialized, G.SinkPrint, G.Handoff)):
         return 0.0
+    if isinstance(n, G.Join):
+        return _join_work(n, stats, cap)
     rows = max(in_rows, st.rows, 1.0)
     work = rows * cap.row_cost
     if n.op in _LOG_OPS:
@@ -60,6 +67,35 @@ def node_work(n: G.Node, stats: dict[int, TableStats], cap) -> float:
         work /= cap.parallelism
     else:
         in_bytes = sum(stats[i.id].total_bytes for i in n.inputs)
+        work = work * cap.fallback_penalty + in_bytes * cap.transfer_cost_per_byte
+    return work
+
+
+def _join_work(n: G.Join, stats: dict[int, TableStats], cap) -> float:
+    """Joins are costed by *build side* (hash-join model): linear probe and
+    output plus an n-log-n build on the (right) build side only.  Engines
+    with an exchange-based join (``cap.broadcast_join_bytes > 0``) add the
+    data movement their strategy implies — replicating the build side when
+    it fits the broadcast threshold, an all-to-all shuffle of both sides
+    otherwise — so the planner can prefer distributed joins exactly when
+    the build side is small."""
+    probe, build = stats[n.inputs[0].id], stats[n.inputs[1].id]
+    out_rows = max(stats[n.id].rows, 1.0)
+    work = (max(probe.rows, 1.0) + out_rows) * cap.row_cost
+    work += (max(build.rows, 1.0) * cap.row_cost
+             * max(1.0, math.log2(build.rows + 2)))
+    if "join" in cap.native_ops:
+        work /= cap.parallelism
+        if cap.broadcast_join_bytes:
+            if build.total_bytes <= cap.broadcast_join_bytes:
+                # broadcast-hash: replicate the small build side
+                work += build.total_bytes * cap.transfer_cost_per_byte
+            else:
+                # shuffle-by-dict-code: exchange both sides
+                work += ((probe.total_bytes + build.total_bytes)
+                         * cap.transfer_cost_per_byte)
+    else:
+        in_bytes = probe.total_bytes + build.total_bytes
         work = work * cap.fallback_penalty + in_bytes * cap.transfer_cost_per_byte
     return work
 
@@ -167,17 +203,23 @@ def _streaming_peak(order, roots, stats, chunk_rows: int,
 def plan_cost(roots: list[G.Node], stats: dict[int, TableStats],
               kind: BackendEngines, chunk_rows: int = 1 << 16,
               n_shards: int | None = None,
-              boundary: frozenset[int] = frozenset()) -> CostEstimate:
+              boundary: frozenset[int] = frozenset(),
+              sharded_boundary: frozenset[int] = frozenset()) -> CostEstimate:
     """Price an optimized plan (or one planner segment) on one backend.
 
     ``boundary`` marks cross-segment inputs: they are priced as
-    already-materialized handoff leaves (no work; resident bytes)."""
+    already-materialized handoff leaves (no work; resident bytes).
+    ``sharded_boundary`` names the subset whose handoff payload arrives as a
+    device-resident ``ShardedTable`` (distributed producer → distributed
+    consumer): those cost no re-shard and keep the segment's sharded peak."""
     from ..backends import capabilities
     cap = capabilities(kind)
     order = bounded_walk(roots, boundary)
-    # a distributed segment fed by a handoff runs its ops on the gathered
-    # host table (single-host fallback), not across shards
-    unsharded = kind == BackendEngines.DISTRIBUTED and bool(boundary)
+    # a distributed segment fed by *host* handoffs runs its ops on the
+    # gathered host table (single-host fallback), not across shards;
+    # device-resident (sharded) handoffs keep it distributed
+    host_boundary = boundary - sharded_boundary
+    unsharded = kind == BackendEngines.DISTRIBUTED and bool(host_boundary)
     per_node: dict[int, float] = {}
     total = cap.startup_cost
     for n in order:
@@ -200,10 +242,12 @@ def plan_cost(roots: list[G.Node], stats: dict[int, TableStats],
                     n_shards = max(1, len(jax.devices()))
                 except Exception:  # noqa: BLE001 — planning must never crash
                     n_shards = 1
-            # a handoff-fed segment starts from a host-resident table (the
-            # runtime hands distributed a plain dict, not shards), so only
-            # boundary-free all-native segments earn the sharded peak
-            if not boundary and all(n.op in cap.native_ops for n in order):
+            # host-handoff-fed segments start from a host-resident table
+            # (the runtime hands distributed a plain dict, not shards), so
+            # only segments whose inputs are scans or sharded handoffs and
+            # whose ops are all native earn the sharded peak
+            if not host_boundary and all(n.op in cap.native_ops
+                                         for n in order):
                 peak /= n_shards
             # else: first fallback gathers on one host → full-peak estimate
     return CostEstimate(cap.name, total, peak, per_node)

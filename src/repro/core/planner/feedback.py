@@ -5,9 +5,18 @@ Observations are keyed by each node's *structural* key, so a re-built plan
 with the same shape (the common case for scripted/repeated workloads) hits
 the store even though node ids differ.  ``estimate_plan`` consults the
 store and overrides a-priori estimates with observed row counts.
+
+The store is JSON-persistable (``save``/``load``): cardinalities are keyed
+by the ``repr`` of the structural key — deterministic across processes for
+disk-backed sources (``Source.cache_token``) — and runtime/peak calibration
+samples are keyed by backend name, so AUTO calibration survives restarts
+(``LaFPContext.stats_path`` / ``REPRO_STATS_CACHE_DIR``).
 """
 from __future__ import annotations
 
+import json
+import os
+import tempfile
 from typing import Any
 
 from .. import graph as G
@@ -17,31 +26,60 @@ from .. import graph as G
 # a single noisy measurement must not flip placement
 MIN_RUNTIME_SAMPLES = 3
 _MAX_RUNTIME_SAMPLES = 64
+# same floor for peak-estimate calibration (observed vs estimated peaks)
+MIN_PEAK_SAMPLES = MIN_RUNTIME_SAMPLES
+_MAX_PEAK_SAMPLES = 64
+
+
+def _least_squares_scale(samples) -> float | None:
+    """Regression through the origin: observed = scale * estimated."""
+    num = sum(e * o for e, o in samples)
+    den = sum(e * e for e, _o in samples)
+    if den <= 0 or num <= 0:
+        return None
+    return num / den
 
 
 class StatsStore:
     """Bounded store of observed per-node cardinalities, backend peaks, and
-    per-backend (estimated work, wall seconds) runtime samples used to
-    calibrate the cost model's ``BackendCapability`` constants."""
+    per-backend (estimated, observed) samples used to calibrate the cost
+    model's ``BackendCapability`` constants — both *work* (estimated work →
+    wall seconds) and *peak* (estimated peak bytes → metered peak bytes)."""
 
     def __init__(self, max_entries: int = 4096):
-        self.observed: dict[tuple, dict[str, float]] = {}
+        # keyed by repr(structural key): deterministic, JSON-serializable,
+        # and stable across processes for path-token sources
+        self.observed: dict[str, dict[str, float]] = {}
         self.backend_peaks: dict[str, int] = {}
         self.runtime_samples: dict[str, list[tuple[float, float]]] = {}
+        self.peak_samples: dict[str, list[tuple[float, float]]] = {}
         self.max_entries = max_entries
 
-    def record(self, key: tuple, rows: int, nbytes: int) -> None:
-        if len(self.observed) >= self.max_entries and key not in self.observed:
+    @staticmethod
+    def _k(key) -> str:
+        return key if isinstance(key, str) else repr(key)
+
+    def record(self, key, rows: int, nbytes: int) -> None:
+        k = self._k(key)
+        if len(self.observed) >= self.max_entries and k not in self.observed:
             # drop the oldest insertion (dict preserves order)
             self.observed.pop(next(iter(self.observed)))
-        self.observed[key] = {"rows": float(rows), "nbytes": float(nbytes)}
+        self.observed[k] = {"rows": float(rows), "nbytes": float(nbytes)}
 
-    def lookup(self, key: tuple) -> dict[str, float] | None:
-        return self.observed.get(key)
+    def lookup(self, key) -> dict[str, float] | None:
+        return self.observed.get(self._k(key))
 
-    def record_peak(self, backend: str, peak_bytes: int) -> None:
+    def record_peak(self, backend: str, peak_bytes: int,
+                    est_peak: float | None = None) -> None:
+        """One observed peak.  With ``est_peak`` (the cost model's a-priori
+        estimate for the same run) it also becomes a calibration sample."""
         self.backend_peaks[backend] = max(
             self.backend_peaks.get(backend, 0), int(peak_bytes))
+        if est_peak is not None and est_peak > 0 and peak_bytes > 0:
+            samples = self.peak_samples.setdefault(backend, [])
+            samples.append((float(est_peak), float(peak_bytes)))
+            if len(samples) > _MAX_PEAK_SAMPLES:
+                del samples[0]
 
     # -- runtime calibration (measured, not guessed, cost constants) --------
 
@@ -63,11 +101,7 @@ class StatsStore:
         samples = self.runtime_samples.get(backend, ())
         if len(samples) < MIN_RUNTIME_SAMPLES:
             return None
-        num = sum(w * s for w, s in samples)
-        den = sum(w * w for w, s in samples)
-        if den <= 0 or num <= 0:
-            return None
-        return num / den
+        return _least_squares_scale(samples)
 
     def calibration(self) -> dict[str, float]:
         """All backends with a trusted calibrated scale."""
@@ -78,12 +112,79 @@ class StatsStore:
                 out[backend] = scale
         return out
 
+    # -- peak calibration (observed peaks recalibrate peak estimates) -------
+
+    def peak_scale(self, backend: str) -> float | None:
+        """Calibrated observed-per-estimated-peak ratio, regressed the same
+        way runtimes calibrate work constants.  None until
+        ``MIN_PEAK_SAMPLES`` metered runs were observed."""
+        samples = self.peak_samples.get(backend, ())
+        if len(samples) < MIN_PEAK_SAMPLES:
+            return None
+        return _least_squares_scale(samples)
+
+    def peak_calibration(self) -> dict[str, float]:
+        out = {}
+        for backend in self.peak_samples:
+            scale = self.peak_scale(backend)
+            if scale is not None:
+                out[backend] = scale
+        return out
+
     def __len__(self):
         return len(self.observed)
+
+    # -- persistence (AUTO calibration survives process restarts) -----------
+
+    def to_json(self) -> dict:
+        return {
+            "observed": self.observed,
+            "backend_peaks": self.backend_peaks,
+            "runtime_samples": {b: [list(s) for s in ss]
+                                for b, ss in self.runtime_samples.items()},
+            "peak_samples": {b: [list(s) for s in ss]
+                             for b, ss in self.peak_samples.items()},
+        }
+
+    def merge_json(self, data: dict) -> None:
+        for k, v in data.get("observed", {}).items():
+            self.record(k, v.get("rows", 0.0), v.get("nbytes", 0.0))
+        for b, p in data.get("backend_peaks", {}).items():
+            self.backend_peaks[b] = max(self.backend_peaks.get(b, 0), int(p))
+        for b, ss in data.get("runtime_samples", {}).items():
+            for est, sec in ss:
+                self.record_runtime(b, est, sec)
+        for b, ss in data.get("peak_samples", {}).items():
+            for est, obs in ss:
+                self.record_peak(b, obs, est_peak=est)
+
+    def save(self, path: str) -> None:
+        """Atomic write; best-effort (a read-only cache dir never breaks
+        execution)."""
+        try:
+            os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+            fd, tmp = tempfile.mkstemp(dir=os.path.dirname(path) or ".",
+                                       prefix=".stats-", suffix=".json")
+            with os.fdopen(fd, "w") as f:
+                json.dump(self.to_json(), f)
+            os.replace(tmp, path)
+        except OSError:
+            pass
+
+    def load(self, path: str) -> bool:
+        try:
+            with open(path) as f:
+                self.merge_json(json.load(f))
+            return True
+        except (OSError, ValueError):
+            return False
 
 
 def _rows_nbytes(value: Any) -> tuple[int, int] | None:
     """(rows, nbytes) of a materialized table value; None for scalars."""
+    gather = getattr(value, "rows", None)
+    if callable(gather) and hasattr(value, "valid"):     # ShardedTable
+        return value.rows(), value.nbytes()
     if not isinstance(value, dict):
         return None
     rows = 0

@@ -25,7 +25,11 @@ with calibrated work 2.1e5 and estimated peak 3.4 MB; rejected candidates
 follow with their work/peak.  ``budget!`` marks candidates rejected for
 exceeding ``ctx.memory_budget``; ``pricing-failed:`` marks candidates the
 cost model could not price (with the reason — never silently dropped).
-Segments with cross-segment inputs append ``handoff<-#id`` markers.
+Segments with cross-segment inputs append ``handoff<-#id`` markers; at
+execution time ``runtime.execute_segments`` adds one line per boundary
+value kept device-resident (``payload=ShardedTable``), and when peak
+calibration is active an ``auto: peak-calibration`` summary precedes the
+segments.
 
 ``ctx.backend_options["placement"]`` selects the strategy: ``"operator"``
 (default, segments) or ``"per_root"`` (the PR-1 behaviour: one choice per
@@ -85,21 +89,36 @@ def calibration_scales(ctx) -> dict[BackendEngines, float]:
 
 def _price(roots: list[G.Node], boundary_ids: frozenset[int], stats,
            budget, chunk_rows, scales,
-           preferred: BackendEngines | None = None) -> Decision:
+           preferred: BackendEngines | None = None,
+           peak_scales: dict[str, float] | None = None,
+           sharded_boundary: frozenset[int] = frozenset()) -> Decision:
     """Price one segment on every candidate engine and decide.
 
     A backend the cost model cannot price is *not* silently dropped: the
     failure reason is recorded in ``Decision.rejected``.  ``preferred``
     (the min-cut assignment) wins when it is budget-feasible; otherwise the
     cheapest calibrated feasible candidate; if nothing fits the budget, the
-    smallest-footprint engine survives and ``feasible=False``."""
+    smallest-footprint engine survives and ``feasible=False``.
+
+    ``peak_scales`` are the measured observed/estimated peak ratios
+    (``StatsStore.peak_scale``): candidate peak estimates are recalibrated
+    by them before the budget check, the same way runtime scales calibrate
+    work.  ``sharded_boundary`` marks handoff inputs arriving as
+    device-resident shards (only meaningful for the distributed candidate)."""
     caps = _caps()
     costs: dict[BackendEngines, CostEstimate] = {}
     rejected: dict[str, str] = {}
     for kind in CANDIDATES:
         try:
+            sb = (sharded_boundary if kind == BackendEngines.DISTRIBUTED
+                  else frozenset())
             costs[kind] = plan_cost(roots, stats, kind, chunk_rows,
-                                    boundary=boundary_ids)
+                                    boundary=boundary_ids,
+                                    sharded_boundary=sb)
+            costs[kind].raw_peak_bytes = costs[kind].peak_bytes
+            ps = (peak_scales or {}).get(caps[kind].name)
+            if ps is not None:
+                costs[kind].peak_bytes *= ps     # calibrated peak estimate
         except Exception as e:  # noqa: BLE001 — reason recorded, not dropped
             rejected[caps[kind].name] = (
                 f"{caps[kind].name} pricing-failed: {type(e).__name__}: {e}")
@@ -133,8 +152,10 @@ def _price(roots: list[G.Node], boundary_ids: frozenset[int], stats,
 # Per-root placement (PR-1 behaviour, kept for regret comparison)
 
 
-def _per_root_placement(roots, stats, budget, chunk_rows, scales):
-    per_root = [_price([r], frozenset(), stats, budget, chunk_rows, scales)
+def _per_root_placement(roots, stats, budget, chunk_rows, scales,
+                        peak_scales=None):
+    per_root = [_price([r], frozenset(), stats, budget, chunk_rows, scales,
+                       peak_scales=peak_scales)
                 for r in roots]
     # group same-backend decisions (first-appearance order; safe — at most
     # one root carries the ordered sink chain)
@@ -147,7 +168,10 @@ def _per_root_placement(roots, stats, budget, chunk_rows, scales):
             prev.cost = CostEstimate(
                 prev.cost.backend, prev.cost.total + d.cost.total,
                 max(prev.cost.peak_bytes, d.cost.peak_bytes),
-                {**prev.cost.per_node, **d.cost.per_node})
+                {**prev.cost.per_node, **d.cost.per_node},
+                raw_peak_bytes=max(
+                    prev.cost.raw_peak_bytes or prev.cost.peak_bytes,
+                    d.cost.raw_peak_bytes or d.cost.peak_bytes))
             prev.feasible = prev.feasible and d.feasible
         else:
             by_backend[d.backend] = d
@@ -167,7 +191,7 @@ def _per_root_placement(roots, stats, budget, chunk_rows, scales):
             # per-root placement would run the shared work once per group,
             # so fall back to a single whole-plan choice
             merged = [_price(roots, frozenset(), stats, budget, chunk_rows,
-                             scales)]
+                             scales, peak_scales=peak_scales)]
     for d in merged:
         d.nodes = G.walk(d.roots)
     return merged
@@ -327,7 +351,8 @@ def _topo_segments(seg_nodes, seg_deps):
     return out
 
 
-def _operator_placement(roots, stats, budget, chunk_rows, scales):
+def _operator_placement(roots, stats, budget, chunk_rows, scales,
+                        peak_scales=None):
     order = G.walk(roots)
     caps = _caps()
     try:
@@ -335,14 +360,24 @@ def _operator_placement(roots, stats, budget, chunk_rows, scales):
     except RuntimeError:
         # some operator priced on no backend: whole-plan choice decides
         return [_price(roots, frozenset(), stats, budget, chunk_rows,
-                       scales)]
+                       scales, peak_scales=peak_scales)]
     seg_of, seg_nodes, seg_backend, seg_deps = _form_segments(order, assign)
     root_ids = {r.id for r in roots}
     consumed_outside: dict[int, bool] = {}
+    consumer_backends: dict[int, set] = {}
     for n in order:
         for i in n.inputs:
             if seg_of[i.id] != seg_of[n.id]:
                 consumed_outside[i.id] = True
+                consumer_backends.setdefault(i.id, set()).add(assign[n.id])
+    # a cross-segment value stays device-resident iff a distributed segment
+    # produced it and *every* consumer (and no final root) is distributed —
+    # mirroring runtime.execute_segments' keep-sharded rule
+    device_resident = {
+        nid for nid, bs in consumer_backends.items()
+        if assign[nid] == BackendEngines.DISTRIBUTED
+        and nid not in root_ids
+        and all(b == BackendEngines.DISTRIBUTED for b in bs)}
     decisions: list[Decision] = []
     for s in _topo_segments(seg_nodes, seg_deps):
         nodes = seg_nodes[s]
@@ -356,8 +391,12 @@ def _operator_placement(roots, stats, budget, chunk_rows, scales):
                 if i.id not in node_ids and i.id not in seen_b:
                     seen_b.add(i.id)
                     boundary.append(i)
+        sharded_b = (frozenset(seen_b & device_resident)
+                     if seg_backend[s] == BackendEngines.DISTRIBUTED
+                     else frozenset())
         d = _price(outputs, frozenset(seen_b), stats, budget, chunk_rows,
-                   scales, preferred=seg_backend[s])
+                   scales, preferred=seg_backend[s],
+                   peak_scales=peak_scales, sharded_boundary=sharded_b)
         d.nodes = nodes
         d.boundary = boundary
         # per-node pricing failures excluded a backend from the assignment
@@ -381,22 +420,27 @@ def plan_placement(roots: list[G.Node], ctx) -> list[Decision]:
     budget = ctx.memory_budget
     chunk_rows = ctx.backend_options.get("chunk_rows", 1 << 16)
     scales = calibration_scales(ctx)
+    store = getattr(ctx, "stats_store", None)
+    peak_scales = store.peak_calibration() if store is not None else {}
     mode = ctx.backend_options.get("placement", "operator")
     if mode == "per_root":
         decisions = _per_root_placement(roots, stats, budget, chunk_rows,
-                                        scales)
+                                        scales, peak_scales)
     else:
         decisions = _operator_placement(roots, stats, budget, chunk_rows,
-                                        scales)
+                                        scales, peak_scales)
     # only genuinely measured backends appear in the calibration line —
     # unmeasured candidates are priced at the median of the known scales,
     # and printing that default as if profiled would mislead debugging
-    store = getattr(ctx, "stats_store", None)
     measured = store.calibration() if store is not None else {}
     if measured:
         ctx.planner_trace.append(
             "auto: calibration " + " ".join(
                 f"{name}={v:.3g}s/w" for name, v in sorted(measured.items())))
+    if peak_scales:
+        ctx.planner_trace.append(
+            "auto: peak-calibration " + " ".join(
+                f"{name}=x{v:.3g}" for name, v in sorted(peak_scales.items())))
     for si, d in enumerate(decisions):
         ids = ",".join(f"#{r.id}" for r in d.roots)
         alts = ", ".join(d.rejected.values()) or "-"

@@ -78,6 +78,8 @@ def execute(roots: list[G.Node], live_df=None,
     # recalibrate future estimates for repeated plans
     from .planner.feedback import record_execution
     record_execution(opt_roots, results, ctx, backend_name)
+    if getattr(ctx, "stats_path", None):
+        ctx.stats_store.save(ctx.stats_path)
 
     if sink_roots:
         ctx.sinks_flushed()
@@ -132,26 +134,76 @@ def _dispatch(opt_roots, ctx):
         _record_runtime_sample(opt_roots, ctx, ctx.backend, backend.name,
                                time.perf_counter() - t0)
         return results, backend.name
-    from . import exec_common as X
     from .planner.select import plan_placement
     decisions = plan_placement(opt_roots, ctx)
     ctx.planner_decisions = decisions
-    results = {}
-    names = []
-    produced: dict[int, object] = {}     # original node id -> host value
+    return execute_segments(decisions, ctx,
+                            final_root_ids={r.id for r in opt_roots})
+
+
+def execute_segments(decisions, ctx, final_root_ids=frozenset()):
+    """Run planner segments in topological order, chaining boundary values
+    through ``Handoff`` leaves.
+
+    Boundary payloads are host-normalized (the transfer the cost model
+    charges) — except when the producing segment *and every consumer* of a
+    value run on the distributed backend: then the ``ShardedTable`` stays
+    device-resident and the consuming segment uses it in place, so
+    distributed→distributed chains never re-shard from host.  Each kept
+    payload is recorded in ``ctx.planner_trace`` (``payload=ShardedTable``).
+
+    ``final_root_ids`` are plan roots the caller will unwrap: those are
+    always gathered to host values."""
+    import time
+
+    from . import physical as X
+    results: dict[int, object] = {}
+    names: list[str] = []
+    produced: dict[int, object] = {}     # original node id -> handoff payload
     store = getattr(ctx, "stats_store", None)
+    # who consumes each cross-segment value, by backend
+    consumers: dict[int, set] = {}
     for d in decisions:
+        for b in d.boundary:
+            consumers.setdefault(b.id, set()).add(d.backend)
+    for si, d in enumerate(decisions):
         backend = _backend_with_options(d.backend, ctx.backend_options)
         seg_roots = _segment_subgraph(d, produced)
+        device_resident: set[int] = set()
+        if getattr(backend, "supports_device_handoff", False):
+            device_resident = {
+                orig.id for orig in d.roots
+                if orig.id not in final_root_ids
+                and consumers.get(orig.id)
+                and all(c == d.backend for c in consumers[orig.id])}
+        keep = frozenset(new.id for orig, new in zip(d.roots, seg_roots)
+                         if orig.id in device_resident)
         t0 = time.perf_counter()
-        vals = backend.execute(seg_roots, ctx)
+        if keep:
+            vals = backend.execute(seg_roots, ctx, keep_sharded=keep)
+        else:
+            vals = backend.execute(seg_roots, ctx)
+        seconds = time.perf_counter() - t0
         if store is not None:
-            store.record_runtime(backend.name, d.cost.total,
-                                 time.perf_counter() - t0)
+            store.record_runtime(backend.name, d.cost.total, seconds)
+            observed_peak = getattr(ctx, "last_run_peak_bytes", 0)
+            if backend.name == "streaming" and observed_peak:
+                raw_est = (d.cost.raw_peak_bytes
+                           if d.cost.raw_peak_bytes is not None
+                           else d.cost.peak_bytes)
+                store.record_peak(backend.name, observed_peak,
+                                  est_peak=raw_est)
         for orig, new in zip(d.roots, seg_roots):
             v = vals[new.id]
             results[orig.id] = v
-            produced[orig.id] = X.to_host_value(v)
+            if orig.id in device_resident:
+                produced[orig.id] = v        # ShardedTable, stays on device
+                ctx.planner_trace.append(
+                    f"auto: handoff #{orig.id} seg{si} "
+                    f"payload={type(v).__name__} device-resident "
+                    f"({d.cost.backend}->{d.cost.backend})")
+            else:
+                produced[orig.id] = X.to_host_value(v)
         if backend.name not in names:
             names.append(backend.name)
     return results, "+".join(names) or "auto"
@@ -225,5 +277,9 @@ def _record_runtime_sample(opt_roots, ctx, kind, backend_name: str,
         est = plan_cost(opt_roots, stats, kind,
                         ctx.backend_options.get("chunk_rows", 1 << 16))
         store.record_runtime(backend_name, est.total, seconds)
+        observed_peak = getattr(ctx, "last_run_peak_bytes", 0)
+        if backend_name == "streaming" and observed_peak:
+            store.record_peak(backend_name, observed_peak,
+                              est_peak=est.peak_bytes)
     except Exception:  # noqa: BLE001 — calibration is advisory
         pass

@@ -40,6 +40,13 @@ class Source:
         were never computed."""
         return {}
 
+    def cache_token(self):
+        """Identity token used in ``Scan.key()``.  Disk-backed sources
+        override with a path-stable token so plan keys (and therefore the
+        persisted stats store's cardinality feedback) survive process
+        restarts; in-memory sources stay identity-keyed."""
+        return ("mem", id(self))
+
     def total_rows(self) -> int | None:
         metas = [self.partition_meta(i) for i in range(self.n_partitions)]
         if any("rows" not in m for m in metas):
@@ -154,6 +161,16 @@ class NpzDirectorySource(Source):
                          is_datetime=c.get("is_datetime", False))
             for n, c in cols.items()))
         self.name = os.path.basename(path.rstrip("/"))
+        # content fingerprint over the partition metadata (files, row
+        # counts, zone maps): a rewritten directory gets a fresh token, so
+        # correctness-bearing key consumers (persist cache) never serve
+        # stale results for structurally-identical plans over changed data
+        import hashlib
+        self._fingerprint = hashlib.md5(
+            json.dumps(meta, sort_keys=True).encode()).hexdigest()[:16]
+
+    def cache_token(self):
+        return ("npz", os.path.abspath(self.path), self._fingerprint)
 
     @property
     def n_partitions(self):

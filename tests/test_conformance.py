@@ -259,3 +259,75 @@ def test_conformance(engine, name, prog):
     actual = prog(rpd, rng)
     ref, opts = _REFS[name]
     assert_frame_matches(actual, _ground_truth(name), **opts)
+
+
+# ---------------------------------------------------------------------------
+# Distributed-engine conformance: join / sort / distinct programs.  These
+# paths were untested eager fallbacks before the native distributed
+# operators (physical/sharded.py) — each program runs under the DISTRIBUTED
+# backend through the core API and must equal real-pandas ground truth.
+
+import repro.core as core  # noqa: E402
+
+_VENDORS = ["acme", "beta", "cabco", "dax"]
+
+
+def _dist_tables(rng, n=4_000):
+    codes = rng.integers(0, 4, n).astype(np.int32)
+    zone = rng.integers(0, 50, n).astype(np.int64)
+    # unique sort key, exactly representable in float32 (device precision)
+    fare = rng.permutation(n).astype(np.float64) + 0.5
+    tip = rng.integers(0, 20, n).astype(np.int64)
+    src = core.InMemorySource(
+        {"vendor": codes, "zone": zone, "fare": fare, "tip": tip},
+        partition_rows=512, dicts={"vendor": _VENDORS})
+    fees = rng.uniform(0.5, 2.0, 4)
+    fee_src = core.InMemorySource(
+        {"vendor": np.arange(4, dtype=np.int32), "fee": fees},
+        partition_rows=4, dicts={"vendor": _VENDORS})
+    pdf = pd_real.DataFrame({"vendor": [_VENDORS[c] for c in codes],
+                             "zone": zone, "fare": fare, "tip": tip})
+    fee_pdf = pd_real.DataFrame({"vendor": _VENDORS, "fee": fees})
+    return src, fee_src, pdf, fee_pdf
+
+
+def _dist_join(src, fee_src, pdf, fee_pdf, n):
+    rides = core.read_source(src)
+    j = rides.merge(core.read_source(fee_src), on="vendor")
+    j = j[j["fare"] > n / 2]
+    expected = pd_real.merge(pdf, fee_pdf, on="vendor")
+    return j.compute(), expected[expected["fare"] > n / 2]
+
+
+def _dist_sort(src, fee_src, pdf, fee_pdf, n):
+    df = core.read_source(src)
+    out = df.sort_values("fare", ascending=False).compute()
+    return out, pdf.sort_values("fare", ascending=False)
+
+
+def _dist_distinct(src, fee_src, pdf, fee_pdf, n):
+    df = core.read_source(src)
+    out = df.drop_duplicates(subset=("vendor", "zone")).compute()
+    return out, pdf.drop_duplicates(["vendor", "zone"])
+
+
+# join compares order-insensitively (pandas merge ordering is only loosely
+# specified); sort and distinct compare row order *exactly* — the native
+# range-partition sort and keep-first distinct must reproduce pandas order
+_DIST_CASES = {
+    "join": (_dist_join, {"sort_by": ["fare"]}),
+    "sort": (_dist_sort, {}),
+    "distinct": (_dist_distinct, {}),
+}
+
+
+@pytest.mark.parametrize("name", sorted(_DIST_CASES))
+def test_distributed_conformance(name):
+    ctx = get_context()
+    ctx.backend = BackendEngines.DISTRIBUTED
+    ctx.print_fn = lambda *a: None
+    rng = np.random.default_rng(7)
+    n = 4_000
+    prog, opts = _DIST_CASES[name]
+    actual, expected = prog(*_dist_tables(rng, n), n)
+    assert_frame_matches(actual, expected, **opts)

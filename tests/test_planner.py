@@ -114,6 +114,40 @@ def test_get_backend_auto_raises():
         get_backend(BackendEngines.AUTO)
 
 
+def test_join_costed_by_build_side():
+    """Join pricing follows the hash-join model: the distributed engine
+    charges a cheap broadcast for small build sides and an all-to-all
+    shuffle of both sides for large ones, so a big-probe/small-build join
+    prices below eager while a big-build join pays the exchange."""
+    from repro.core.planner.cost import node_work
+    src = _uniform_source(n=100)
+    probe, build = G.Scan(src), G.Scan(src)
+    join = G.Join(probe, build, ["vendor"])
+
+    def stats_for(build_rows):
+        mk = lambda rows: TableStats(rows=float(rows),
+                                     col_bytes={"vendor": 8.0, "fare": 8.0},
+                                     ndv={}, zonemap={})
+        return {probe.id: mk(1_000_000), build.id: mk(build_rows),
+                join.id: mk(1_000_000)}
+
+    dist = CAPABILITIES[BackendEngines.DISTRIBUTED]
+    eager = CAPABILITIES[BackendEngines.EAGER]
+    small, big = stats_for(1_000), stats_for(1_000_000)
+    assert small[build.id].total_bytes <= dist.broadcast_join_bytes
+    assert big[build.id].total_bytes > dist.broadcast_join_bytes
+    # broadcast: small-build distributed join beats eager on a big probe
+    assert node_work(join, small, dist) < node_work(join, small, eager)
+    # shuffle: the big build pays the all-to-all of both sides on top of
+    # the compute growth — strictly more than the broadcast surcharge
+    shuffle_extra = (node_work(join, big, dist)
+                     - node_work(join, big, eager) * dist.parallelism
+                     / eager.parallelism)
+    assert (node_work(join, big, dist) - node_work(join, small, dist)
+            > (big[build.id].total_bytes - small[build.id].total_bytes))
+    assert shuffle_extra > 0
+
+
 # ---------------------------------------------------------------------------
 # AUTO selection
 
@@ -135,7 +169,9 @@ def test_auto_over_budget_dispatches_streaming():
     ctx = get_context()
     ctx.backend = BackendEngines.AUTO
     src = _uniform_source(n=50_000, partition_rows=2048)
-    ctx.memory_budget = int(50_000 * 24 * 0.3)  # eager can't fit the table
+    # tight enough that no whole-table engine fits — not even distributed
+    # with its peak divided across every forced host device (multishard CI)
+    ctx.memory_budget = int(50_000 * 24 * 0.08)
     df = core.read_source(src)
     df = df[df["fare"] > 10.0]
     out = df.groupby("vendor")["miles"].sum().compute()
