@@ -72,13 +72,12 @@ def _run_program(fn, sources, backend, budget=None, optimize=True,
 def fig12_applicability():
     """Programs that complete under a memory budget (out-of-memory analogue
     of the paper's 12.6 GB runs — the budget is ~35% of the dataset)."""
-    from repro.core import BackendEngines
     from .programs import PROGRAMS, build_sources
     sources = build_sources(SCALE)
     taxi = sources["taxi"]
     dataset_bytes = taxi.total_rows() * taxi.schema.row_bytes()
     budget = int(dataset_bytes * 0.35)
-    for backend in (BackendEngines.STREAMING,):
+    for backend in ("streaming",):
         for optimize in (False, True):
             t0 = time.perf_counter()
             succ = 0
@@ -87,7 +86,7 @@ def fig12_applicability():
                                         optimize)
                 succ += int(ok)
             label = "LaFP" if optimize else "plain"
-            emit(f"fig12_{backend.value}_{label}",
+            emit(f"fig12_{backend}_{label}",
                  (time.perf_counter() - t0) * 1e6,
                  f"{succ}/{len(PROGRAMS)} programs under "
                  f"{budget / 1e6:.0f}MB budget")
@@ -95,25 +94,22 @@ def fig12_applicability():
 
 def fig13_exec_time():
     import tempfile
-    from repro.core import BackendEngines
     from .programs import PROGRAMS, build_sources
     with tempfile.TemporaryDirectory() as td:
         sources = build_sources(SCALE, tmpdir=td)   # disk-backed (paper CSVs)
-        for backend in (BackendEngines.EAGER, BackendEngines.STREAMING,
-                        BackendEngines.DISTRIBUTED):
+        for backend in ("eager", "streaming", "distributed"):
             for name, fn in PROGRAMS.items():
                 secs, _, ok = _run_program(fn, sources, backend)
-                emit(f"fig13_{backend.value}_{name}", secs * 1e6,
+                emit(f"fig13_{backend}_{name}", secs * 1e6,
                      "ok" if ok else "fail")
 
 
 def fig14_speedup():
     import tempfile
-    from repro.core import BackendEngines
     from .programs import PROGRAMS, build_sources
     with tempfile.TemporaryDirectory() as td:
         sources = build_sources(SCALE, tmpdir=td)   # disk-backed (paper CSVs)
-        for backend in (BackendEngines.EAGER, BackendEngines.STREAMING):
+        for backend in ("eager", "streaming"):
             for name, fn in PROGRAMS.items():
                 t_plain, _, ok1 = _run_program(fn, sources, backend,
                                                optimize=False)
@@ -121,18 +117,17 @@ def fig14_speedup():
                                              optimize=True)
                 if ok1 and ok2 and t_plain > 0:
                     imp = 100.0 * (t_plain - t_opt) / t_plain
-                    emit(f"fig14_{backend.value}_{name}", t_opt * 1e6,
+                    emit(f"fig14_{backend}_{name}", t_opt * 1e6,
                          f"improvement={imp:.1f}%")
 
 
 def fig15_memory():
-    from repro.core import BackendEngines
     from .programs import PROGRAMS, build_sources
     sources = build_sources(SCALE)
     for name, fn in PROGRAMS.items():
-        _, m_plain, ok1 = _run_program(fn, sources, BackendEngines.STREAMING,
+        _, m_plain, ok1 = _run_program(fn, sources, "streaming",
                                        optimize=False)
-        _, m_opt, ok2 = _run_program(fn, sources, BackendEngines.STREAMING,
+        _, m_opt, ok2 = _run_program(fn, sources, "streaming",
                                      optimize=True)
         if ok1 and ok2 and m_plain:
             red = 100.0 * (m_plain - m_opt) / m_plain
@@ -146,17 +141,15 @@ def backend_selection():
     plus ``backend_selection.json`` with per-program regret for both AUTO
     strategies and an ``operator_regret_le_per_root`` flag per program, so
     the trajectory can track the two placements against each other."""
-    from repro.core import BackendEngines, get_context
+    from repro.core import get_context
     from .programs import PROGRAMS, build_sources
     prog_names = ("taxi_agg", "taxi_filter", "ratings_join")
     scales = {"small": max(SCALE // 20, 2_000), "medium": SCALE,
               "large": SCALE * 4}
-    fixed_backends = (BackendEngines.EAGER, BackendEngines.STREAMING,
-                      BackendEngines.DISTRIBUTED)
+    fixed_backends = ("eager", "streaming", "distributed")
     auto_modes = (("auto_operator", "operator"), ("auto_per_root", "per_root"))
-    runners = ([(b.value, b, None) for b in fixed_backends]
-               + [(key, BackendEngines.AUTO, mode)
-                  for key, mode in auto_modes])
+    runners = ([(b, b, None) for b in fixed_backends]
+               + [(key, "auto", mode) for key, mode in auto_modes])
     out: dict = {"scale_rows": dict(scales), "results": {}}
     for label, scale in scales.items():
         sources = build_sources(scale)
@@ -183,7 +176,7 @@ def backend_selection():
                 per_program[name] = {"seconds": secs, "ok": ok}
                 total += secs
                 ok_all = ok_all and ok
-                if backend == BackendEngines.AUTO:
+                if backend == "auto":
                     ctx = get_context()
                     prog_chose = sorted({d.cost.backend
                                          for d in ctx.planner_decisions})
@@ -195,9 +188,7 @@ def backend_selection():
             # only the streaming backend wires the budget into a MemoryMeter;
             # under a budget, eager/distributed run unconstrained and are not
             # a fair regret baseline
-            enforced = (budget is None
-                        or backend in (BackendEngines.STREAMING,
-                                       BackendEngines.AUTO))
+            enforced = budget is None or backend in ("streaming", "auto")
             rec = {"seconds": total, "ok": ok_all,
                    "budget_enforced": enforced, "per_program": per_program}
             if chosen:
@@ -207,8 +198,8 @@ def backend_selection():
                  ("ok" if ok_all else "fail")
                  + (f" chose={'+'.join(sorted(set(chosen)))}" if chosen else ""))
         # regret per AUTO strategy vs the best fixed backend, per program
-        baselines = [res[b.value] for b in fixed_backends
-                     if res[b.value]["budget_enforced"]]
+        baselines = [res[b] for b in fixed_backends
+                     if res[b]["budget_enforced"]]
         for key, _mode in auto_modes:
             rec = res[key]
             if not rec["ok"]:
@@ -255,6 +246,30 @@ def backend_selection():
     with open(path, "w") as f:
         json.dump(out, f, indent=2)
     emit("backend_selection_json", 0.0, path)
+    _explain_golden()
+
+
+def _explain_golden():
+    """Golden ``pd.explain()`` output for the CI artifact: one AUTO run of
+    the join-bearing program, reported as the stable text plan plus the
+    typed records in JSON."""
+    import json as _json
+
+    from repro.core import explain, get_context
+    from .programs import PROGRAMS, build_sources
+    sources = build_sources(max(SCALE // 20, 2_000))
+    ctx = _fresh_ctx("auto")
+    PROGRAMS["ratings_join"](sources)
+    report = explain(ctx=get_context())
+    text_path = os.environ.get("REPRO_EXPLAIN_GOLDEN_OUT",
+                               "explain_golden.txt")
+    with open(text_path, "w") as f:
+        f.write(report.render() + "\n")
+    with open(os.path.splitext(text_path)[0] + ".json", "w") as f:
+        _json.dump(report.to_dict(), f, indent=2, default=str)
+    emit("explain_golden", 0.0,
+         f"{text_path} runs={len(report.runs)} "
+         f"segments={sum(len(r.segments) for r in report.runs)}")
 
 
 def api_coverage():
@@ -333,13 +348,12 @@ def analysis_overhead():
 def ablation_persist():
     """Paper §5.3/§5.4: reuse-heavy program with persist on/off ('stu':
     13× speedup at 2.3× memory in the paper)."""
-    from repro.core import BackendEngines
     from .programs import build_sources, prog_reuse_stu
 
     import tempfile
 
     def run(use_live):
-        ctx = _fresh_ctx(BackendEngines.STREAMING)
+        ctx = _fresh_ctx("streaming")
         with tempfile.TemporaryDirectory() as td:
             # disk-backed + 8× scale: recompute really re-reads (the paper's
             # 13× shows at 12.6 GB; the effect needs IO-bound reuse)

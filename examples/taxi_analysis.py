@@ -10,7 +10,6 @@ import time
 import numpy as np
 
 import repro.pandas as pd
-from repro.pandas import BackendEngines
 from repro.core.source import write_npz_source
 
 
@@ -38,21 +37,20 @@ def main():
         dataset = src.total_rows() * src.schema.row_bytes()
         budget = dataset // 4                     # deliberately too small
         print(f"dataset {dataset/1e6:.0f} MB, budget {budget/1e6:.0f} MB")
-        for backend in (BackendEngines.EAGER, BackendEngines.STREAMING,
-                        BackendEngines.DISTRIBUTED):
+        for backend in ("eager", "streaming", "distributed"):
             # session-scoped context: backend choice, budget and peak
             # accounting are isolated per run — no cross-backend bleed
-            with pd.session(backend=backend, memory_budget=budget) as ctx:
+            with pd.session(engine=backend, memory_budget=budget) as ctx:
                 t0 = time.perf_counter()
                 try:
                     res = program(src)
                     status = f"ok in {time.perf_counter()-t0:.2f}s"
-                    if backend == BackendEngines.STREAMING:
+                    if backend == "streaming":
                         status += f" (peak {ctx.last_peak_bytes/1e6:.0f} MB)"
                 except Exception as e:   # noqa: BLE001
                     status = f"FAILED: {type(e).__name__}"
                     res = None
-                print(f"{backend.value:12s}: {status}")
+                print(f"{backend:12s}: {status}")
                 if res is not None:
                     print(res)
         # note: only streaming respects the budget; eager/distributed load

@@ -1,4 +1,5 @@
-"""Pluggable execution backends (paper §2.6).
+"""In-tree execution engines (paper §2.6), registered with the open
+engine registry (``repro.core.engines``):
 
 * eager       — whole-table, device-resident jnp (the Pandas analogue)
 * streaming   — partition-at-a-time host execution, bounded memory, out-of-
@@ -6,78 +7,17 @@
 * distributed — shard_map over the mesh data axis (the Modin/cluster
                 analogue); unsupported ops fall back to eager, mirroring the
                 paper's convert-to-Pandas fallback.
+
+Importing this package registers all three under their string names; the
+planner derives its candidate set, capabilities, cost constants, and
+calibration namespaces from the registry, so out-of-tree engines added via
+``repro.register_engine`` (or the ``repro.engines`` entry-point group) are
+planned exactly like these.
 """
 from __future__ import annotations
 
-import dataclasses
-
-from ..context import BackendEngines
-from ..physical.sharded import BROADCAST_BUILD_BYTES
-
-
-# ---------------------------------------------------------------------------
-# Capability registry (planner-facing).  Each backend publishes what it can
-# run natively and the constant factors of its cost model; ops outside
-# ``native_ops`` are executed via the backend's fallback path and priced with
-# ``fallback_penalty`` (+ a gather/transfer charge) by the planner.
-
-_ALL_OPS = frozenset({
-    "scan", "materialized", "filter", "project", "assign", "rename",
-    "astype", "fillna", "sort_values", "drop_duplicates", "head",
-    "map_rows", "groupby_agg", "join", "concat", "reduce", "length",
-    "sink_print",
-})
-
-
-@dataclasses.dataclass(frozen=True)
-class BackendCapability:
-    name: str
-    native_ops: frozenset               # ops with a first-class implementation
-    startup_cost: float                 # fixed per-force-point dispatch cost
-    scan_cost_per_byte: float           # reading source bytes
-    row_cost: float                     # per-row per-operator compute
-    parallelism: float                  # effective divisor on row work
-    transfer_cost_per_byte: float       # host<->device / gather movement
-    fallback_penalty: float             # multiplier for non-native ops
-    streams_partitions: bool            # True → peak memory is chunk-scaled
-    # joins are costed by *build side*: builds at or below this many bytes
-    # replicate cheaply (broadcast-hash); larger builds pay an all-to-all
-    # shuffle of both sides.  0.0 → the engine has no exchange-based join
-    # (its join is a plain local hash join, no extra movement charge).
-    broadcast_join_bytes: float = 0.0
-
-
-CAPABILITIES: dict[BackendEngines, BackendCapability] = {
-    BackendEngines.EAGER: BackendCapability(
-        name="eager", native_ops=_ALL_OPS,
-        startup_cost=1e3, scan_cost_per_byte=1.0, row_cost=1.0,
-        parallelism=4.0, transfer_cost_per_byte=0.5, fallback_penalty=1.0,
-        streams_partitions=False),
-    BackendEngines.STREAMING: BackendCapability(
-        name="streaming", native_ops=_ALL_OPS,
-        startup_cost=2e3, scan_cost_per_byte=1.5, row_cost=2.0,
-        parallelism=1.0, transfer_cost_per_byte=0.0, fallback_penalty=1.0,
-        streams_partitions=True),
-    BackendEngines.DISTRIBUTED: BackendCapability(
-        name="distributed",
-        native_ops=frozenset({"scan", "materialized", "filter", "project",
-                              "assign", "rename", "astype", "fillna",
-                              "reduce", "length", "groupby_agg", "join",
-                              "sort_values", "drop_duplicates",
-                              "sink_print"}),
-        # scan models parallel partition ingest across shard workers (cheaper
-        # per byte than eager's single-device load), paid for by the highest
-        # fixed startup: distributed only wins once tables are large enough
-        # to amortize mesh dispatch.  Runtime calibration corrects both.
-        startup_cost=8e4, scan_cost_per_byte=0.6, row_cost=1.0,
-        parallelism=8.0, transfer_cost_per_byte=2.0, fallback_penalty=3.0,
-        streams_partitions=False,
-        broadcast_join_bytes=float(BROADCAST_BUILD_BYTES)),
-}
-
-
-def capabilities(kind: BackendEngines) -> BackendCapability:
-    return CAPABILITIES[kind]
+from ..engines import (ALL_OPS as _ALL_OPS, BackendCapability,
+                       default_registry, normalize_engine)
 
 
 class MemoryBudgetExceeded(RuntimeError):
@@ -109,23 +49,84 @@ class MemoryMeter:
         self.current -= int(nbytes)
 
 
-def backend_class(kind: BackendEngines):
-    if kind == BackendEngines.AUTO:
-        raise ValueError(
-            "BackendEngines.AUTO is resolved by the planner at force points "
-            "(repro.core.planner.select.plan_placement); it is not a "
-            "physical backend")
-    if kind == BackendEngines.EAGER:
-        from .eager import EagerBackend
-        return EagerBackend
-    if kind == BackendEngines.STREAMING:
-        from .streaming import StreamingBackend
-        return StreamingBackend
-    if kind == BackendEngines.DISTRIBUTED:
-        from .distributed import DistributedBackend
-        return DistributedBackend
-    raise ValueError(kind)
+# ---------------------------------------------------------------------------
+# Registration.  The engine classes themselves are the factories — the
+# registry filters construction options against their signatures.  (The
+# imports sit below MemoryMeter on purpose: streaming imports it back from
+# this partially-initialized package.)
+
+from .eager import EagerBackend          # noqa: E402
+from .streaming import StreamingBackend  # noqa: E402
+from .distributed import DistributedBackend  # noqa: E402
 
 
-def get_backend(kind: BackendEngines, **options):
-    return backend_class(kind)(**options)
+def _device_count() -> int:
+    try:
+        import jax
+        return max(1, len(jax.devices()))
+    except Exception:  # noqa: BLE001 — planning must never crash
+        return 1
+
+
+def _broadcast_build_bytes() -> float:
+    from ..physical.sharded import BROADCAST_BUILD_BYTES
+    return float(BROADCAST_BUILD_BYTES)
+
+
+_REG = default_registry()
+
+_REG.register("eager", EagerBackend, BackendCapability(
+    name="eager", native_ops=_ALL_OPS,
+    startup_cost=1e3, scan_cost_per_byte=1.0, row_cost=1.0,
+    parallelism=4.0, transfer_cost_per_byte=0.5, fallback_penalty=1.0,
+    peak_model="resident"), source="builtin", replace=True)
+
+_REG.register("streaming", StreamingBackend, BackendCapability(
+    name="streaming", native_ops=_ALL_OPS,
+    startup_cost=2e3, scan_cost_per_byte=1.5, row_cost=2.0,
+    parallelism=1.0, transfer_cost_per_byte=0.0, fallback_penalty=1.0,
+    peak_model="chunked"), source="builtin", replace=True)
+
+_REG.register("distributed", DistributedBackend, BackendCapability(
+    name="distributed",
+    native_ops=frozenset({"scan", "materialized", "filter", "project",
+                          "assign", "rename", "astype", "fillna",
+                          "reduce", "length", "groupby_agg", "join",
+                          "sort_values", "drop_duplicates", "head",
+                          "sink_print"}),
+    # scan models parallel partition ingest across shard workers (cheaper
+    # per byte than eager's single-device load), paid for by the highest
+    # fixed startup: distributed only wins once tables are large enough
+    # to amortize mesh dispatch.  Runtime calibration corrects both.
+    startup_cost=8e4, scan_cost_per_byte=0.6, row_cost=1.0,
+    parallelism=8.0, transfer_cost_per_byte=2.0, fallback_penalty=3.0,
+    peak_model="sharded",
+    broadcast_join_bytes=_broadcast_build_bytes(),
+    keeps_device_payloads=True,
+    shard_count=_device_count), source="builtin", replace=True)
+
+
+# ---------------------------------------------------------------------------
+# Back-compat surface.  ``CAPABILITIES`` is the registry's live capability
+# dict (string-keyed; ``BackendEngines`` members hash/compare equal to the
+# names, so legacy enum-keyed lookups — and test monkeypatching — work
+# unchanged).
+
+CAPABILITIES = _REG.capabilities
+
+
+def capabilities(kind) -> BackendCapability:
+    return _REG.capability_of(kind)
+
+
+def backend_class(kind):
+    """Deprecated: engine factory lookup by name (kept for callers that
+    expect a constructor)."""
+    kind = normalize_engine(kind)
+    if kind == "auto":
+        _REG.create(kind)           # raises the explanatory ValueError
+    return _REG.spec(kind).factory
+
+
+def get_backend(kind, **options):
+    return _REG.create(kind, options)

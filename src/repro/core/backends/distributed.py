@@ -175,7 +175,15 @@ class DistributedBackend:
                 if out is not None:
                     return out
             return self._fallback_node(n, [child])
-        # fallback for head/concat/maprows and unsupported native cases
+        if isinstance(n, G.Head):
+            child = self._eval(n.inputs[0], memo)
+            if isinstance(child, ShardedTable) and n.n >= 0:
+                # native head: serve from the leading shard(s) by masking —
+                # no gather, no re-shard (physical.sharded_head).  Negative
+                # n (pandas all-but-last-n) takes the host fallback.
+                return X.sharded_head(child, n.n)
+            return self._fallback_node(n, [child])
+        # fallback for concat/maprows and unsupported native cases
         vals = []
         for i in n.inputs:
             v = self._eval(i, memo)

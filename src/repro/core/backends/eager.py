@@ -88,6 +88,15 @@ class EagerBackend:
         return None
 
     # -- driver ----------------------------------------------------------------
+    @staticmethod
+    def _value_nbytes(val) -> int:
+        """Device-buffer size of one node result (tables only — scalars and
+        sinks are negligible)."""
+        if isinstance(val, dict):
+            return int(X.table_nbytes(val))
+        nb = getattr(val, "nbytes", None)
+        return int(nb) if isinstance(nb, (int, float)) else 0
+
     def execute(self, roots: list[G.Node], ctx: LaFPContext) -> dict[int, Any]:
         order = G.walk(roots)
         refcount: dict[int, int] = {}
@@ -96,9 +105,16 @@ class EagerBackend:
                 refcount[i.id] = refcount.get(i.id, 0) + 1
         root_ids = {r.id for r in roots}
         results: dict[int, Any] = {}
+        # deterministic peak metering: resident device-buffer bytes through
+        # the refcounted walk — feeds the planner's peak-estimate
+        # calibration (StatsStore.record_peak), which before only got
+        # samples from the streaming MemoryMeter
+        current = peak = 0
         for n in order:
             vals = [results[i.id] for i in n.inputs]
             results[n.id] = self.eval_node(n, vals, ctx)
+            current += self._value_nbytes(results[n.id])
+            peak = max(peak, current)
             if n.persist and not isinstance(n, (G.SinkPrint, G.Materialized)):
                 ctx.persist_stats["misses"] += 1
                 key = getattr(n, "cache_key", None) or n.key()
@@ -111,5 +127,9 @@ class EagerBackend:
                 refcount[i.id] -= 1
                 if refcount[i.id] == 0 and i.id not in root_ids:
                     if not i.persist:
+                        current -= self._value_nbytes(results[i.id])
                         results[i.id] = None  # allow GC; keep slot for roots
+        ctx.last_run_peak_bytes = peak
+        ctx.last_run_peak_engine = self.name
+        ctx.last_peak_bytes = max(ctx.last_peak_bytes, peak)
         return {rid: results.get(rid) for rid in root_ids}

@@ -64,6 +64,7 @@ class StreamingBackend:
         # planner's peak-estimate calibration (feedback.record_peak samples)
         ctx.last_peak_bytes = max(ctx.last_peak_bytes, meter.peak)
         ctx.last_run_peak_bytes = meter.peak
+        ctx.last_run_peak_engine = self.name
         return results
 
     # ------------------------------------------------------------------

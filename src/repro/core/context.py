@@ -1,4 +1,4 @@
-"""Session context: backend choice, sink ordering chain, persist cache,
+"""Session context: engine choice, sink ordering chain, persist cache,
 static-analysis hints (the runtime side of the paper's JIT analysis).
 
 Contexts are *session-scoped*: ``get_context()`` returns the top of a
@@ -6,18 +6,34 @@ thread-local session stack, falling back to a process-wide default session.
 ``session(...)`` is the public context manager (re-exported as
 ``repro.pandas.session``) giving an isolated planner / persist / sink /
 stats state; nested sessions stack, and each thread gets its own stack so
-concurrent sessions never share mutable state."""
+concurrent sessions never share mutable state.
+
+Engines are addressed by **string name** (``"eager"``, ``"streaming"``,
+``"distributed"``, ``"auto"``, plus anything registered through
+``repro.register_engine`` / the ``repro.engines`` entry-point group).
+``BackendEngines`` survives as a deprecated ``str``-mixin enum alias layer:
+its members compare and hash equal to the plain names, so legacy code
+keeps working while new code writes ``session(engine="streaming")``."""
 from __future__ import annotations
 
 import contextlib
 import enum
 import threading
+import warnings
 from typing import Any
 
 from . import graph
+from .engines import normalize_engine
 
 
-class BackendEngines(enum.Enum):
+class BackendEngines(str, enum.Enum):
+    """DEPRECATED alias layer for the string-named engine API.
+
+    Members are ``str`` subclasses equal to their engine name, so
+    ``BackendEngines.STREAMING == "streaming"`` and either form is accepted
+    anywhere an engine is named.  New code should pass the strings; the
+    open registry (``repro.register_engine``) admits engines this closed
+    enum can never know about."""
     EAGER = "eager"            # device-resident jnp, whole-table (Pandas analogue)
     STREAMING = "streaming"    # host out-of-core, partition-at-a-time (Dask analogue)
     DISTRIBUTED = "distributed"  # shard_map over mesh data axis (Modin/cluster analogue)
@@ -27,8 +43,10 @@ class BackendEngines(enum.Enum):
 class LaFPContext:
     def __init__(self, name: str = "default"):
         self.session_name = name
-        self.backend: BackendEngines = BackendEngines.EAGER
+        self._backend: str = "eager"
         self.backend_options: dict[str, Any] = {}
+        # AUTO candidate allow-list (None → every registered engine)
+        self.engine_allowlist: tuple[str, ...] | None = None
         # §3.3 lazy print: chain of sink nodes not yet flushed.
         self.last_sink: graph.SinkPrint | None = None
         self.pending_sinks: list[graph.SinkPrint] = []
@@ -43,12 +61,15 @@ class LaFPContext:
         self.scalar_registry: dict[int, graph.Node] = {}
         # live frame tracking: var name -> LazyFrame (filled by analyze())
         self.optimizer_trace: list[str] = []
-        self.memory_budget: int | None = None   # bytes; streaming backend enforces
-        self.last_peak_bytes: int = 0           # streaming backend peak accounting
+        self.memory_budget: int | None = None   # bytes; chunked engines enforce
+        self.last_peak_bytes: int = 0           # metered peak accounting
         self.last_run_peak_bytes: int = 0       # peak of the latest single run
+        # engine that produced last_run_peak_bytes (peak-calibration samples
+        # are recorded under this stats-store namespace)
+        self.last_run_peak_engine: str | None = None
         # cost-based planner (planner/): AUTO plan-choice trace + feedback
         # stats store (observed cardinalities keyed by structural node key,
-        # plus per-backend runtime samples for cost calibration).  AUTO
+        # plus per-engine runtime samples for cost calibration).  AUTO
         # placement strategy is per-session via backend_options:
         #   backend_options["placement"] = "operator" (segments, default)
         #                                | "per_root" (PR-1 behaviour)
@@ -67,6 +88,10 @@ class LaFPContext:
         if self.stats_path:
             self.stats_store.load(self.stats_path)
         self.planner_decisions: list[Any] = []  # last force point's Decisions
+        # structured per-force-point records (segments, handoffs) consumed
+        # by ``repro.core.explain`` — the typed counterpart of the string
+        # traces above
+        self.run_records: list[Any] = []
         self.print_fn = print                   # patched in tests
         # facade fallback protocol (repro.pandas): every op the lazy layer
         # serves by eager materialization (or fails to serve at all) is
@@ -78,6 +103,16 @@ class LaFPContext:
         # metrics
         self.exec_count = 0
 
+    # -- engine choice (string-named; enum members accepted as aliases) -----
+
+    @property
+    def backend(self) -> str:
+        return self._backend
+
+    @backend.setter
+    def backend(self, value) -> None:
+        self._backend = normalize_engine(value)
+
     def reset(self):
         self.__init__(self.session_name)
 
@@ -88,6 +123,14 @@ class LaFPContext:
     def sinks_flushed(self):
         self.pending_sinks.clear()
         self.last_sink = None
+
+    def report(self):
+        """Typed introspection report of everything this session ran so
+        far: segments (chosen engine, rejected candidates, costs), handoff
+        payloads, fallback events, calibration scales.  See
+        ``repro.core.explain``."""
+        from .explain import build_report
+        return build_report(self)
 
 
 # ---------------------------------------------------------------------------
@@ -134,22 +177,30 @@ def session_depth() -> int:
 
 
 @contextlib.contextmanager
-def session(backend: BackendEngines | None = None,
+def session(engine: str | BackendEngines | None = None,
             memory_budget: int | None = None,
             name: str = "session",
             stats_path: str | None = None,
+            engines: tuple | list | None = None,
+            backend: str | BackendEngines | None = None,
             **backend_options):
-    """Isolated execution session: fresh backend choice, persist cache,
+    """Isolated execution session: fresh engine choice, persist cache,
     sink chain, stats store (planner feedback + runtime calibration), and
     traces.
 
-        with repro.pandas.session(backend=BackendEngines.STREAMING,
+        with repro.pandas.session(engine="streaming",
                                   memory_budget=1 << 28) as ctx:
             ...plain pandas-style code...
 
+    ``engine`` names any registered engine (or ``"auto"``); ``backend`` is
+    the deprecated alias for it and still accepts ``BackendEngines``
+    members.  ``engines`` is an AUTO candidate allow-list — e.g.
+    ``session(engine="auto", engines=("eager", "streaming"))`` keeps the
+    planner from ever considering other engines for the block.
+
     Extra keyword options flow into ``ctx.backend_options`` — e.g.
-    ``session(backend=BackendEngines.AUTO, placement="per_root")`` selects
-    the legacy per-root planner strategy for the block.
+    ``session(engine="auto", placement="per_root")`` selects the legacy
+    per-root planner strategy for the block.
 
     ``stats_path`` persists the session's stats store (cardinality feedback
     + runtime/peak calibration samples) to a JSON file: reloaded here,
@@ -160,10 +211,20 @@ def session(backend: BackendEngines | None = None,
     Pending lazy sinks are flushed on clean exit (so deferred prints inside
     the block don't silently vanish); on exception the session is popped
     unflushed."""
-    ctx = LaFPContext(name=name)
     if backend is not None:
-        ctx.backend = backend
+        if engine is not None:
+            raise TypeError("pass engine=... or backend=..., not both")
+        warnings.warn(
+            "session(backend=...) is deprecated; use session(engine=...) "
+            "with a string engine name", DeprecationWarning, stacklevel=3)
+        engine = backend
+    ctx = LaFPContext(name=name)
+    if engine is not None:
+        ctx.backend = normalize_engine(engine, warn_enum=True)
     ctx.memory_budget = memory_budget
+    if engines is not None:
+        ctx.engine_allowlist = tuple(
+            normalize_engine(e) for e in engines)
     if stats_path is not None:
         ctx.stats_path = stats_path
         ctx.stats_store.load(stats_path)

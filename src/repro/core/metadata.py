@@ -109,14 +109,27 @@ def get_metadata(source: Source) -> SourceMetadata | None:
     return md
 
 
-def choose_backend(source: Source, available_bytes: int):
+def choose_backend(source: Source, available_bytes: int) -> str:
     """Cost-based backend choice sketch (paper future work, implemented):
-    in-memory eager when the table fits comfortably, streaming otherwise."""
-    from .context import BackendEngines
+    a whole-table ("resident"/"sharded" peak model) engine when the table
+    fits comfortably, the first out-of-core ("chunked") engine otherwise.
+    Candidates come from the engine registry — an out-of-tree engine with a
+    chunked peak model is eligible without edits here.  Returns the engine
+    *name*."""
+    from .engines import default_registry
     md = get_metadata(source) or compute_metadata(source, sample_partitions=1)
-    if md.estimated_bytes() * 2 <= available_bytes:
-        return BackendEngines.EAGER
-    return BackendEngines.STREAMING
+    reg = default_registry()
+    names = reg.names()
+    resident = [n for n in names
+                if reg.capability_of(n).peak_model != "chunked"]
+    chunked = [n for n in names
+               if reg.capability_of(n).peak_model == "chunked"]
+    if md.estimated_bytes() * 2 <= available_bytes and resident:
+        # the paper's sketch wants the local in-memory engine, not a
+        # cluster dispatch: startup cost is the registry-generic proxy
+        return min(resident,
+                   key=lambda n: reg.capability_of(n).startup_cost)
+    return chunked[0] if chunked else names[0]
 
 
 def dtype_overrides_for(source: Source,

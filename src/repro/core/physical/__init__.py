@@ -35,7 +35,8 @@ from .join import _factorize_multi_np_pair, apply_join
 from .sort import apply_drop_duplicates, apply_sort
 from .reduce import REDUCE_PARTIAL, apply_reduce
 from .sharded import (BROADCAST_BUILD_BYTES, ShardedTable, shard_host_table,
-                      sharded_distinct, sharded_join, sharded_sort)
+                      sharded_distinct, sharded_head, sharded_join,
+                      sharded_sort)
 
 __all__ = [
     "Table", "is_jax", "xp_of", "table_rows", "table_nbytes", "to_numpy",
@@ -46,5 +47,5 @@ __all__ = [
     "combine_partials", "apply_join", "_factorize_multi_np_pair",
     "apply_sort", "apply_drop_duplicates", "apply_reduce", "REDUCE_PARTIAL",
     "ShardedTable", "shard_host_table", "sharded_join", "sharded_sort",
-    "sharded_distinct", "BROADCAST_BUILD_BYTES",
+    "sharded_distinct", "sharded_head", "BROADCAST_BUILD_BYTES",
 ]

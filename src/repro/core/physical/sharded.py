@@ -69,6 +69,20 @@ class ShardedTable:
         return {k: np.asarray(v).reshape(-1)[mask] for k, v in self.cols.items()}
 
 
+def sharded_head(t: ShardedTable, n: int) -> ShardedTable:
+    """Native distributed ``head(n)``: keep the first ``n`` valid rows in
+    partition-major order by masking — no gather, no re-shard.
+
+    Row order is the flattened ``(shard, row)`` order (how
+    ``shard_host_table`` laid the table out), so a global running count of
+    valid rows identifies exactly the leading-shard prefix; trailing shards
+    end up fully masked and the table stays device-resident and
+    shape-preserving for downstream sharded operators."""
+    flat = jnp.cumsum(t.valid.reshape(-1).astype(jnp.int32))
+    keep = (flat <= n).reshape(t.valid.shape) & t.valid
+    return ShardedTable(dict(t.cols), keep)
+
+
 # ---------------------------------------------------------------------------
 # Host <-> shard layout
 

@@ -1,21 +1,26 @@
-"""Per-operator, per-backend cost model over ``TableStats``.
+"""Per-operator, per-engine cost model over ``TableStats``.
 
-Costs are unitless "work" numbers — only comparisons between backends on
-the *same* plan matter.  Each backend's constants live in its
-``BackendCapability`` descriptor (``repro.core.backends.CAPABILITIES``);
+Costs are unitless "work" numbers — only comparisons between engines on
+the *same* plan matter.  Every engine's constants live in the
+``BackendCapability`` it registered with (``repro.core.engines``);
 unsupported ops are priced via the fallback penalty plus a gather charge,
 mirroring the engines' actual convert-and-delegate fallback paths.
 
-Peak-memory models follow the executors:
+Peak-memory models follow the capability's ``peak_model`` declaration:
 
-* eager       — refcounted topological walk: every node's output is
-                resident until its last consumer ran (exactly what
-                ``EagerBackend.execute`` frees).
-* streaming   — chunk-sized flow for row-wise ops plus pipeline-breaker
-                state: join build sides, group-by partial aggregates, sort
-                materialization, shared-node memoization.
-* distributed — eager-model bytes divided across shards for native ops;
-                the first fallback gathers the whole table on one host.
+* ``"resident"`` — refcounted topological walk: every node's output is
+                   resident until its last consumer ran (exactly what a
+                   whole-table executor frees).
+* ``"chunked"``  — chunk-sized flow for row-wise ops plus pipeline-breaker
+                   state: join build sides, group-by partial aggregates,
+                   sort materialization, shared-node memoization.
+* ``"sharded"``  — resident-model bytes divided across the engine's
+                   ``shard_count()`` for all-native segments; the first
+                   fallback (or a host-materialized boundary input)
+                   gathers the whole table on one host.
+
+Nothing in this module names a concrete engine: candidates, constants, and
+model selection all flow from the registry.
 """
 from __future__ import annotations
 
@@ -23,7 +28,7 @@ import dataclasses
 import math
 
 from .. import graph as G
-from ..context import BackendEngines
+from ..engines import default_registry
 from .stats import TableStats
 
 _LOG_OPS = ("sort_values", "drop_duplicates")  # n log n ops
@@ -48,7 +53,7 @@ class CostEstimate:
 
 
 def node_work(n: G.Node, stats: dict[int, TableStats], cap) -> float:
-    """Estimated work for one operator on one backend (public: the
+    """Estimated work for one operator on one engine (public: the
     operator-granular planner prices nodes individually)."""
     st = stats[n.id]
     in_rows = sum(stats[i.id].rows for i in n.inputs)
@@ -77,7 +82,7 @@ def _join_work(n: G.Join, stats: dict[int, TableStats], cap) -> float:
     with an exchange-based join (``cap.broadcast_join_bytes > 0``) add the
     data movement their strategy implies — replicating the build side when
     it fits the broadcast threshold, an all-to-all shuffle of both sides
-    otherwise — so the planner can prefer distributed joins exactly when
+    otherwise — so the planner can prefer the exchange engine exactly when
     the build side is small."""
     probe, build = stats[n.inputs[0].id], stats[n.inputs[1].id]
     out_rows = max(stats[n.id].rows, 1.0)
@@ -91,7 +96,7 @@ def _join_work(n: G.Join, stats: dict[int, TableStats], cap) -> float:
                 # broadcast-hash: replicate the small build side
                 work += build.total_bytes * cap.transfer_cost_per_byte
             else:
-                # shuffle-by-dict-code: exchange both sides
+                # shuffle exchange of both sides
                 work += ((probe.total_bytes + build.total_bytes)
                          * cap.transfer_cost_per_byte)
     else:
@@ -122,8 +127,8 @@ def bounded_walk(roots: list[G.Node],
     return order
 
 
-def _eager_peak(order, roots, stats) -> float:
-    """Replay the eager executor's refcounted walk on estimated sizes."""
+def _resident_peak(order, roots, stats) -> float:
+    """Replay a whole-table executor's refcounted walk on estimated sizes."""
     refcount: dict[int, int] = {}
     for n in order:
         for i in n.inputs:
@@ -145,9 +150,10 @@ _ROWWISE = ("filter", "project", "assign", "rename", "astype", "fillna",
             "map_rows", "head")
 
 
-def _streaming_peak(order, roots, stats, chunk_rows: int,
-                    boundary: frozenset[int] = frozenset()) -> float:
-    """Chunked flow + breaker state, as StreamingBackend accounts it.
+def _chunked_peak(order, roots, stats, chunk_rows: int,
+                  boundary: frozenset[int] = frozenset()) -> float:
+    """Chunked flow + breaker state, as a partition-at-a-time executor
+    accounts it.
 
     Scans stream at *source partition* granularity; row-wise ops keep their
     input's flow size (scaled by their row ratio); everything else
@@ -201,25 +207,25 @@ def _streaming_peak(order, roots, stats, chunk_rows: int,
 
 
 def plan_cost(roots: list[G.Node], stats: dict[int, TableStats],
-              kind: BackendEngines, chunk_rows: int = 1 << 16,
+              kind, chunk_rows: int = 1 << 16,
               n_shards: int | None = None,
               boundary: frozenset[int] = frozenset(),
               sharded_boundary: frozenset[int] = frozenset()) -> CostEstimate:
-    """Price an optimized plan (or one planner segment) on one backend.
+    """Price an optimized plan (or one planner segment) on one engine.
 
-    ``boundary`` marks cross-segment inputs: they are priced as
-    already-materialized handoff leaves (no work; resident bytes).
-    ``sharded_boundary`` names the subset whose handoff payload arrives as a
-    device-resident ``ShardedTable`` (distributed producer → distributed
-    consumer): those cost no re-shard and keep the segment's sharded peak."""
-    from ..backends import capabilities
-    cap = capabilities(kind)
+    ``kind`` is an engine name (registry key).  ``boundary`` marks
+    cross-segment inputs: they are priced as already-materialized handoff
+    leaves (no work; resident bytes).  ``sharded_boundary`` names the
+    subset whose handoff payload arrives device-resident (same-engine
+    producer → consumer for a ``keeps_device_payloads`` engine): those
+    cost no re-shard and keep the segment's sharded peak."""
+    cap = default_registry().capability_of(kind)
     order = bounded_walk(roots, boundary)
-    # a distributed segment fed by *host* handoffs runs its ops on the
+    # a sharded-model segment fed by *host* handoffs runs its ops on the
     # gathered host table (single-host fallback), not across shards;
-    # device-resident (sharded) handoffs keep it distributed
+    # device-resident (sharded) handoffs keep it sharded
     host_boundary = boundary - sharded_boundary
-    unsharded = kind == BackendEngines.DISTRIBUTED and bool(host_boundary)
+    unsharded = cap.peak_model == "sharded" and bool(host_boundary)
     per_node: dict[int, float] = {}
     total = cap.startup_cost
     for n in order:
@@ -231,24 +237,20 @@ def plan_cost(roots: list[G.Node], stats: dict[int, TableStats],
                 w *= cap.parallelism
         per_node[n.id] = w
         total += w
-    if cap.streams_partitions:
-        peak = _streaming_peak(order, roots, stats, chunk_rows, boundary)
+    if cap.peak_model == "chunked":
+        peak = _chunked_peak(order, roots, stats, chunk_rows, boundary)
     else:
-        peak = _eager_peak(order, roots, stats)
-        if kind == BackendEngines.DISTRIBUTED:
+        peak = _resident_peak(order, roots, stats)
+        if cap.peak_model == "sharded":
             if n_shards is None:
-                try:
-                    import jax
-                    n_shards = max(1, len(jax.devices()))
-                except Exception:  # noqa: BLE001 — planning must never crash
-                    n_shards = 1
+                n_shards = cap.shard_count() if cap.shard_count else 1
             # host-handoff-fed segments start from a host-resident table
-            # (the runtime hands distributed a plain dict, not shards), so
+            # (the runtime hands the engine a plain dict, not shards), so
             # only segments whose inputs are scans or sharded handoffs and
             # whose ops are all native earn the sharded peak
             if not host_boundary and all(n.op in cap.native_ops
                                          for n in order):
-                peak /= n_shards
+                peak /= max(1, n_shards)
             # else: first fallback gathers on one host → full-peak estimate
     return CostEstimate(cap.name, total, peak, per_node)
 

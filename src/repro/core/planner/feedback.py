@@ -219,6 +219,13 @@ def record_execution(roots: list[G.Node], results: dict[int, Any],
             continue
         store.record(n.key(), rn[0], rn[1])
         recorded += 1
-    if backend_name and "streaming" in backend_name and ctx.last_peak_bytes:
-        store.record_peak("streaming", ctx.last_peak_bytes)
+    # engines that meter their own peak (MemoryMeter, device-buffer
+    # accounting) announce it via ctx.last_run_peak_engine — record *this
+    # run's* peak under that engine's namespace (the session-cumulative
+    # ctx.last_peak_bytes may belong to a different engine's earlier run)
+    peak_engine = getattr(ctx, "last_run_peak_engine", None)
+    run_peak = getattr(ctx, "last_run_peak_bytes", 0)
+    if peak_engine and run_peak and backend_name \
+            and peak_engine in str(backend_name).split("+"):
+        store.record_peak(peak_engine, run_peak)
     return recorded

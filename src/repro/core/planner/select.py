@@ -1,26 +1,34 @@
-"""AUTO backend selection: operator-granular hybrid placement with
+"""AUTO engine selection: operator-granular hybrid placement with
 runtime-calibrated costs.
 
 The optimized DAG is partitioned into engine *segments* — connected groups
-of operators assigned to one backend — by a min-cut style dynamic program
-over per-node per-backend costs with an explicit transfer charge for
+of operators assigned to one engine — by a min-cut style dynamic program
+over per-node per-engine costs with an explicit transfer charge for
 materializing at segment boundaries (``cost.transfer_cost``).  Segments
 execute in topological order; values crossing a boundary are materialized
 to host and re-enter the next segment as ``graph.Handoff`` leaves
 (``runtime._dispatch`` chains them).
 
+Candidate engines come from the open registry (``repro.core.engines``):
+every registered engine — in-tree or plug-in — is priced by its declared
+``BackendCapability``, and ``ctx.engine_allowlist`` (``session(engines=
+(...,))``) restricts the candidate set per session.  Calibration keys and
+stats-store namespaces are the engines' registry names, so a runtime-
+registered engine calibrates exactly like a built-in.
+
 Costs are calibrated: once ``ctx.stats_store`` holds enough observed
-(estimated-work, wall-seconds) samples for a backend
+(estimated-work, wall-seconds) samples for an engine
 (``feedback.MIN_RUNTIME_SAMPLES``), its cost constants are scaled by the
 regressed seconds-per-work-unit, so repeated workloads converge to measured
 — not guessed — constants.
 
-The plan-choice trace (``ctx.planner_trace``) records one line per segment:
+The plan-choice trace (``ctx.planner_trace``) records one line per segment
+(engine names are whatever the registry holds):
 
-    auto: seg0 root#12 ops=4 -> eager cost=2.1e+05 peak=3.4MB cal=x1 |
-    streaming 5.0e+05/0.3MB, distributed 8.7e+05/0.9MB
+    auto: seg0 root#12 ops=4 -> engineA cost=2.1e+05 peak=3.4MB cal=x1 |
+    engineB 5.0e+05/0.3MB, engineC 8.7e+05/0.9MB
 
-Read it as: segment 0 (4 operators, output node 12) dispatched to eager
+Read it as: segment 0 (4 operators, output node 12) dispatched to engineA
 with calibrated work 2.1e5 and estimated peak 3.4 MB; rejected candidates
 follow with their work/peak.  ``budget!`` marks candidates rejected for
 exceeding ``ctx.memory_budget``; ``pricing-failed:`` marks candidates the
@@ -29,7 +37,8 @@ Segments with cross-segment inputs append ``handoff<-#id`` markers; at
 execution time ``runtime.execute_segments`` adds one line per boundary
 value kept device-resident (``payload=ShardedTable``), and when peak
 calibration is active an ``auto: peak-calibration`` summary precedes the
-segments.
+segments.  The same information is available as typed records through
+``repro.core.explain`` (``Decision.candidates`` feeds it).
 
 ``ctx.backend_options["placement"]`` selects the strategy: ``"operator"``
 (default, segments) or ``"per_root"`` (the PR-1 behaviour: one choice per
@@ -41,12 +50,29 @@ from __future__ import annotations
 import dataclasses
 
 from .. import graph as G
-from ..context import BackendEngines
+from ..engines import default_registry
 from .cost import CostEstimate, node_work, plan_cost, transfer_cost
 from .stats import estimate_plan
 
-CANDIDATES = (BackendEngines.EAGER, BackendEngines.STREAMING,
-              BackendEngines.DISTRIBUTED)
+
+def candidate_engines(ctx=None) -> tuple[str, ...]:
+    """Engine names the planner may choose from: every registered engine,
+    filtered by the session's allow-list when one is set.
+
+    An allow-list that matches *no* registered engine is an error, not a
+    silent fall-through — otherwise a typo'd ``session(engines=(...))``
+    would dispatch to exactly the engines the user tried to exclude."""
+    from ..engines import UnknownEngineError
+    names = default_registry().names()
+    allow = getattr(ctx, "engine_allowlist", None) if ctx is not None else None
+    if allow:
+        allowed = tuple(n for n in names if n in allow)
+        if not allowed:
+            raise UnknownEngineError(
+                f"engine allow-list {tuple(allow)!r} matches no registered "
+                f"engine; registered engines: {list(names)}")
+        return allowed
+    return names
 
 
 @dataclasses.dataclass
@@ -54,47 +80,53 @@ class Decision:
     """One planner segment: a connected group of operators dispatched to one
     engine.  ``roots`` are the segment's outputs (nodes consumed by other
     segments, or plan roots); ``nodes`` is every operator the segment runs;
-    ``boundary`` lists cross-segment inputs that arrive as handoffs."""
+    ``boundary`` lists cross-segment inputs that arrive as handoffs.
+    ``candidates`` holds one structured record per priced engine (chosen
+    and rejected alike) — the typed source for ``pd.explain()``."""
     roots: list                          # segment output nodes
-    backend: BackendEngines
+    backend: str                         # engine name (registry key)
     cost: CostEstimate
-    rejected: dict[str, str]             # backend name -> reason string
+    rejected: dict[str, str]             # engine name -> reason string
     nodes: list = dataclasses.field(default_factory=list)
     boundary: list = dataclasses.field(default_factory=list)
     feasible: bool = True                # est. peak fits ctx.memory_budget
-    scale: float = 1.0                   # calibrated sec/work for backend
+    scale: float = 1.0                   # calibrated sec/work for the engine
+    # engine name -> {"work", "peak_bytes", "over_budget", "chosen",
+    #                 "reason"} (work/peak None when pricing failed)
+    candidates: dict[str, dict] = dataclasses.field(default_factory=dict)
 
 
-def _caps():
-    from ..backends import capabilities
-    return {kind: capabilities(kind) for kind in CANDIDATES}
+def _caps(cands: tuple[str, ...]):
+    reg = default_registry()
+    return {kind: reg.capability_of(kind) for kind in cands}
 
 
-def calibration_scales(ctx) -> dict[BackendEngines, float]:
-    """Per-backend cost multipliers regressed from observed runtimes.
+def calibration_scales(ctx, cands: tuple[str, ...] | None = None
+                       ) -> dict[str, float]:
+    """Per-engine cost multipliers regressed from observed runtimes.
 
-    Backends with enough samples get their measured seconds-per-work-unit;
-    backends not yet observed get the median of the known scales (so all
+    Engines with enough samples get their measured seconds-per-work-unit;
+    engines not yet observed get the median of the known scales (so all
     candidates stay comparable); with no observations at all, every scale
     is 1.0 and costs compare raw — exactly the uncalibrated model."""
+    cands = cands if cands is not None else candidate_engines(ctx)
     store = getattr(ctx, "stats_store", None)
     known = store.calibration() if store is not None else {}
-    caps = _caps()
     if not known:
-        return {kind: 1.0 for kind in CANDIDATES}
+        return {kind: 1.0 for kind in cands}
     ordered = sorted(known.values())
     default = ordered[len(ordered) // 2]
-    return {kind: known.get(caps[kind].name, default) for kind in CANDIDATES}
+    return {kind: known.get(kind, default) for kind in cands}
 
 
 def _price(roots: list[G.Node], boundary_ids: frozenset[int], stats,
-           budget, chunk_rows, scales,
-           preferred: BackendEngines | None = None,
+           budget, chunk_rows, scales, cands,
+           preferred: str | None = None,
            peak_scales: dict[str, float] | None = None,
            sharded_boundary: frozenset[int] = frozenset()) -> Decision:
     """Price one segment on every candidate engine and decide.
 
-    A backend the cost model cannot price is *not* silently dropped: the
+    An engine the cost model cannot price is *not* silently dropped: the
     failure reason is recorded in ``Decision.rejected``.  ``preferred``
     (the min-cut assignment) wins when it is budget-feasible; otherwise the
     cheapest calibrated feasible candidate; if nothing fits the budget, the
@@ -104,13 +136,15 @@ def _price(roots: list[G.Node], boundary_ids: frozenset[int], stats,
     (``StatsStore.peak_scale``): candidate peak estimates are recalibrated
     by them before the budget check, the same way runtime scales calibrate
     work.  ``sharded_boundary`` marks handoff inputs arriving as
-    device-resident shards (only meaningful for the distributed candidate)."""
-    caps = _caps()
-    costs: dict[BackendEngines, CostEstimate] = {}
+    device-resident payloads (only meaningful for candidates whose
+    capability ``keeps_device_payloads``)."""
+    caps = _caps(cands)
+    costs: dict[str, CostEstimate] = {}
     rejected: dict[str, str] = {}
-    for kind in CANDIDATES:
+    cand_records: dict[str, dict] = {}
+    for kind in cands:
         try:
-            sb = (sharded_boundary if kind == BackendEngines.DISTRIBUTED
+            sb = (sharded_boundary if caps[kind].keeps_device_payloads
                   else frozenset())
             costs[kind] = plan_cost(roots, stats, kind, chunk_rows,
                                     boundary=boundary_ids,
@@ -120,11 +154,15 @@ def _price(roots: list[G.Node], boundary_ids: frozenset[int], stats,
             if ps is not None:
                 costs[kind].peak_bytes *= ps     # calibrated peak estimate
         except Exception as e:  # noqa: BLE001 — reason recorded, not dropped
-            rejected[caps[kind].name] = (
-                f"{caps[kind].name} pricing-failed: {type(e).__name__}: {e}")
+            reason = (f"{caps[kind].name} pricing-failed: "
+                      f"{type(e).__name__}: {e}")
+            rejected[caps[kind].name] = reason
+            cand_records[caps[kind].name] = {
+                "work": None, "peak_bytes": None, "over_budget": False,
+                "chosen": False, "reason": reason}
     if not costs:
         raise RuntimeError(
-            f"no backend could price this plan: {rejected}")
+            f"no engine could price this plan: {rejected}")
     feasible = {k: c for k, c in costs.items()
                 if budget is None or c.peak_bytes <= budget}
     ok = True
@@ -133,34 +171,39 @@ def _price(roots: list[G.Node], boundary_ids: frozenset[int], stats,
     elif feasible:
         best = min(feasible, key=lambda k: costs[k].total * scales[k])
     else:
-        # nothing fits: take the smallest-footprint engine (streaming's
-        # chunked model is the usual survivor) and let the meter arbitrate
+        # nothing fits: take the smallest-footprint engine (a chunked-model
+        # engine is the usual survivor) and let the meter arbitrate
         best = min(costs, key=lambda k: costs[k].peak_bytes)
         ok = False
     for k, c in costs.items():
+        over = budget is not None and c.peak_bytes > budget
+        cand_records[c.backend] = {
+            "work": c.total * scales[k], "peak_bytes": c.peak_bytes,
+            "over_budget": over, "chosen": k is best,
+            "reason": "" if k is best else (
+                f"{c.backend} {c.total * scales[k]:.3g}"
+                f"/{c.peak_bytes / 1e6:.1f}MB" + (" budget!" if over else ""))}
         if k is best:
             continue
-        over = budget is not None and c.peak_bytes > budget
-        rejected[c.backend] = (
-            f"{c.backend} {c.total * scales[k]:.3g}/{c.peak_bytes / 1e6:.1f}MB"
-            + (" budget!" if over else ""))
+        rejected[c.backend] = cand_records[c.backend]["reason"]
     return Decision(list(roots), best, costs[best], rejected,
-                    feasible=ok, scale=scales[best])
+                    feasible=ok, scale=scales[best],
+                    candidates=cand_records)
 
 
 # ---------------------------------------------------------------------------
 # Per-root placement (PR-1 behaviour, kept for regret comparison)
 
 
-def _per_root_placement(roots, stats, budget, chunk_rows, scales,
+def _per_root_placement(roots, stats, budget, chunk_rows, scales, cands,
                         peak_scales=None):
     per_root = [_price([r], frozenset(), stats, budget, chunk_rows, scales,
-                       peak_scales=peak_scales)
+                       cands, peak_scales=peak_scales)
                 for r in roots]
-    # group same-backend decisions (first-appearance order; safe — at most
+    # group same-engine decisions (first-appearance order; safe — at most
     # one root carries the ordered sink chain)
     merged: list[Decision] = []
-    by_backend: dict[BackendEngines, Decision] = {}
+    by_backend: dict[str, Decision] = {}
     for d in per_root:
         prev = by_backend.get(d.backend)
         if prev is not None:
@@ -191,7 +234,7 @@ def _per_root_placement(roots, stats, budget, chunk_rows, scales,
             # per-root placement would run the shared work once per group,
             # so fall back to a single whole-plan choice
             merged = [_price(roots, frozenset(), stats, budget, chunk_rows,
-                             scales, peak_scales=peak_scales)]
+                             scales, cands, peak_scales=peak_scales)]
     for d in merged:
         d.nodes = G.walk(d.roots)
     return merged
@@ -206,14 +249,14 @@ def _assign_operators(order, roots, stats, scales, caps):
     work plus transfer charges at engine-boundary edges.  Multi-parent
     nodes (and roots that are also consumed elsewhere) are fixed at their
     own subtree optimum so shared work is priced exactly once.  Returns
-    (assignment node-id -> backend, pricing-failure reasons)."""
+    (assignment node-id -> engine name, pricing-failure reasons)."""
     errors: dict[str, str] = {}
-    w: dict[int, dict[BackendEngines, float]] = {}
+    w: dict[int, dict[str, float]] = {}
     for n in order:
         w[n.id] = {}
         for kind, cap in caps.items():
             try:
-                # amortize the backend's fixed startup over the plan so the
+                # amortize the engine's fixed startup over the plan so the
                 # per-node DP sees the same constant plan_cost charges once
                 # per segment (extra segments pay it again via transfer)
                 w[n.id][kind] = (node_work(n, stats, cap)
@@ -222,7 +265,7 @@ def _assign_operators(order, roots, stats, scales, caps):
                 errors.setdefault(cap.name, (
                     f"{cap.name} pricing-failed: {type(e).__name__}: {e}"))
         if not w[n.id]:
-            raise RuntimeError(f"no backend can price node {n!r}: {errors}")
+            raise RuntimeError(f"no engine can price node {n!r}: {errors}")
 
     parents: dict[int, int] = {}
     for n in order:
@@ -236,15 +279,15 @@ def _assign_operators(order, roots, stats, scales, caps):
                              caps[b_from], caps[b_to])
         return work * 0.5 * (scales[b_from] + scales[b_to])
 
-    dp: dict[int, dict[BackendEngines, float]] = {}
-    choice: dict[int, dict[BackendEngines, dict[int, BackendEngines]]] = {}
-    fixed: dict[int, BackendEngines] = {}
+    dp: dict[int, dict[str, float]] = {}
+    choice: dict[int, dict[str, dict[int, str]]] = {}
+    fixed: dict[int, str] = {}
     for n in order:
         dp[n.id] = {}
         choice[n.id] = {}
         for b in w[n.id]:
             tot = w[n.id][b]
-            ch: dict[int, BackendEngines] = {}
+            ch: dict[int, str] = {}
             for i in n.inputs:
                 if i.id in fixed:
                     bi = fixed[i.id]
@@ -263,9 +306,9 @@ def _assign_operators(order, roots, stats, scales, caps):
         if parents.get(n.id, 0) > 1:
             fixed[n.id] = min(dp[n.id], key=dp[n.id].get)
 
-    assign: dict[int, BackendEngines] = dict(fixed)
+    assign: dict[int, str] = dict(fixed)
 
-    def backtrack(n: G.Node, b: BackendEngines):
+    def backtrack(n: G.Node, b: str):
         for i in n.inputs:
             bi = choice[n.id][b][i.id]
             if i.id not in assign:
@@ -286,12 +329,12 @@ def _assign_operators(order, roots, stats, scales, caps):
 
 
 def _form_segments(order, assign):
-    """Group same-backend connected operators into segments, keeping the
+    """Group same-engine connected operators into segments, keeping the
     segment graph acyclic: a node may join an input's segment only if no
     other input segment transitively depends on it."""
     seg_of: dict[int, int] = {}
     seg_nodes: list[list[G.Node]] = []
-    seg_backend: list[BackendEngines] = []
+    seg_backend: list[str] = []
     seg_deps: list[set[int]] = []        # direct segment dependencies
 
     def depends_on(s: int, t: int) -> bool:
@@ -351,16 +394,16 @@ def _topo_segments(seg_nodes, seg_deps):
     return out
 
 
-def _operator_placement(roots, stats, budget, chunk_rows, scales,
+def _operator_placement(roots, stats, budget, chunk_rows, scales, cands,
                         peak_scales=None):
     order = G.walk(roots)
-    caps = _caps()
+    caps = _caps(cands)
     try:
         assign, errors = _assign_operators(order, roots, stats, scales, caps)
     except RuntimeError:
-        # some operator priced on no backend: whole-plan choice decides
+        # some operator priced on no engine: whole-plan choice decides
         return [_price(roots, frozenset(), stats, budget, chunk_rows,
-                       scales, peak_scales=peak_scales)]
+                       scales, cands, peak_scales=peak_scales)]
     seg_of, seg_nodes, seg_backend, seg_deps = _form_segments(order, assign)
     root_ids = {r.id for r in roots}
     consumed_outside: dict[int, bool] = {}
@@ -370,14 +413,14 @@ def _operator_placement(roots, stats, budget, chunk_rows, scales,
             if seg_of[i.id] != seg_of[n.id]:
                 consumed_outside[i.id] = True
                 consumer_backends.setdefault(i.id, set()).add(assign[n.id])
-    # a cross-segment value stays device-resident iff a distributed segment
-    # produced it and *every* consumer (and no final root) is distributed —
-    # mirroring runtime.execute_segments' keep-sharded rule
+    # a cross-segment value stays device-resident iff its producing engine
+    # keeps device payloads and *every* consumer (and no final root) runs
+    # the same engine — mirroring runtime.execute_segments' keep rule
     device_resident = {
         nid for nid, bs in consumer_backends.items()
-        if assign[nid] == BackendEngines.DISTRIBUTED
+        if caps[assign[nid]].keeps_device_payloads
         and nid not in root_ids
-        and all(b == BackendEngines.DISTRIBUTED for b in bs)}
+        and all(b == assign[nid] for b in bs)}
     decisions: list[Decision] = []
     for s in _topo_segments(seg_nodes, seg_deps):
         nodes = seg_nodes[s]
@@ -392,17 +435,22 @@ def _operator_placement(roots, stats, budget, chunk_rows, scales,
                     seen_b.add(i.id)
                     boundary.append(i)
         sharded_b = (frozenset(seen_b & device_resident)
-                     if seg_backend[s] == BackendEngines.DISTRIBUTED
+                     if caps[seg_backend[s]].keeps_device_payloads
                      else frozenset())
         d = _price(outputs, frozenset(seen_b), stats, budget, chunk_rows,
-                   scales, preferred=seg_backend[s],
+                   scales, cands, preferred=seg_backend[s],
                    peak_scales=peak_scales, sharded_boundary=sharded_b)
         d.nodes = nodes
         d.boundary = boundary
-        # per-node pricing failures excluded a backend from the assignment
+        # per-node pricing failures excluded an engine from the assignment
         # DP — surface them over the generic segment-level rejection
         d.rejected.update({k: v for k, v in errors.items()
                            if k != d.cost.backend})
+        for k, v in errors.items():
+            if k != d.cost.backend and k not in d.candidates:
+                d.candidates[k] = {
+                    "work": None, "peak_bytes": None, "over_budget": False,
+                    "chosen": False, "reason": v}
         decisions.append(d)
     return decisions
 
@@ -415,21 +463,23 @@ def plan_placement(roots: list[G.Node], ctx) -> list[Decision]:
     """Partition the optimized plan into engine segments (topological
     order).  ``ctx.backend_options["placement"]`` picks the strategy:
     operator-granular segments (default) or the legacy per-root-subtree
-    hybrid."""
+    hybrid.  Candidates come from the engine registry, filtered by the
+    session allow-list."""
     stats = estimate_plan(roots, ctx)
     budget = ctx.memory_budget
     chunk_rows = ctx.backend_options.get("chunk_rows", 1 << 16)
-    scales = calibration_scales(ctx)
+    cands = candidate_engines(ctx)
+    scales = calibration_scales(ctx, cands)
     store = getattr(ctx, "stats_store", None)
     peak_scales = store.peak_calibration() if store is not None else {}
     mode = ctx.backend_options.get("placement", "operator")
     if mode == "per_root":
         decisions = _per_root_placement(roots, stats, budget, chunk_rows,
-                                        scales, peak_scales)
+                                        scales, cands, peak_scales)
     else:
         decisions = _operator_placement(roots, stats, budget, chunk_rows,
-                                        scales, peak_scales)
-    # only genuinely measured backends appear in the calibration line —
+                                        scales, cands, peak_scales)
+    # only genuinely measured engines appear in the calibration line —
     # unmeasured candidates are priced at the median of the known scales,
     # and printing that default as if profiled would mislead debugging
     measured = store.calibration() if store is not None else {}

@@ -1,5 +1,10 @@
-"""Execution orchestration: optimize → plan persists → dispatch to backend →
+"""Execution orchestration: optimize → plan persists → dispatch to engine →
 flush sinks in order (paper §2.6).
+
+Engines are addressed through the open registry (``repro.core.engines``) by
+string name; nothing here knows a concrete engine.  Every force point also
+appends a typed run record (segments + handoff payloads) consumed by
+``repro.core.explain`` / ``pd.explain()``.
 """
 from __future__ import annotations
 
@@ -7,6 +12,7 @@ from typing import Any
 
 from . import graph as G
 from .context import get_context
+from .engines import AUTO, create_engine
 from .liveness import apply_persist_marks, evict_dead_entries, plan_persists
 from .optimizer import optimize
 
@@ -78,6 +84,9 @@ def execute(roots: list[G.Node], live_df=None,
     # recalibrate future estimates for repeated plans
     from .planner.feedback import record_execution
     record_execution(opt_roots, results, ctx, backend_name)
+    # typed run record (segments + handoffs) for pd.explain()
+    from .explain import record_run
+    record_run(ctx, force_reason or "compute", backend_name, opt_roots)
     if getattr(ctx, "stats_path", None):
         ctx.stats_store.save(ctx.stats_path)
 
@@ -118,7 +127,7 @@ def _collect_vocab(node: G.Node):
 
 
 def _dispatch(opt_roots, ctx):
-    """Run the optimized plan: fixed backend, or cost-based AUTO placement
+    """Run the optimized plan: fixed engine, or cost-based AUTO placement
     (plan → select → chain engine segments through Handoff pipe breakers).
 
     Every execution records an (estimated work, wall seconds) sample into
@@ -126,12 +135,13 @@ def _dispatch(opt_roots, ctx):
     measured values (runtime calibration)."""
     import time
 
-    from .context import BackendEngines
-    if ctx.backend != BackendEngines.AUTO:
-        backend = _backend_with_options(ctx.backend, ctx.backend_options)
+    engine = ctx.backend
+    if engine != AUTO:
+        backend = create_engine(engine, ctx.backend_options)
+        ctx.planner_decisions = []
         t0 = time.perf_counter()
         results = backend.execute(opt_roots, ctx)
-        _record_runtime_sample(opt_roots, ctx, ctx.backend, backend.name,
+        _record_runtime_sample(opt_roots, ctx, engine, backend.name,
                                time.perf_counter() - t0)
         return results, backend.name
     from .planner.select import plan_placement
@@ -147,10 +157,12 @@ def execute_segments(decisions, ctx, final_root_ids=frozenset()):
 
     Boundary payloads are host-normalized (the transfer the cost model
     charges) — except when the producing segment *and every consumer* of a
-    value run on the distributed backend: then the ``ShardedTable`` stays
-    device-resident and the consuming segment uses it in place, so
-    distributed→distributed chains never re-shard from host.  Each kept
-    payload is recorded in ``ctx.planner_trace`` (``payload=ShardedTable``).
+    value run on the same engine and that engine keeps device-resident
+    payloads (``supports_device_handoff``): then the payload stays on
+    device and the consuming segment uses it in place, so same-engine
+    chains never re-materialize from host.  Each kept payload is recorded
+    in ``ctx.planner_trace`` (``payload=<type>``) and as a typed handoff
+    event for ``pd.explain()``.
 
     ``final_root_ids`` are plan roots the caller will unwrap: those are
     always gathered to host values."""
@@ -160,14 +172,15 @@ def execute_segments(decisions, ctx, final_root_ids=frozenset()):
     results: dict[int, object] = {}
     names: list[str] = []
     produced: dict[int, object] = {}     # original node id -> handoff payload
+    handoff_events: list[dict] = []
     store = getattr(ctx, "stats_store", None)
-    # who consumes each cross-segment value, by backend
+    # who consumes each cross-segment value, by engine
     consumers: dict[int, set] = {}
     for d in decisions:
         for b in d.boundary:
             consumers.setdefault(b.id, set()).add(d.backend)
     for si, d in enumerate(decisions):
-        backend = _backend_with_options(d.backend, ctx.backend_options)
+        backend = create_engine(d.backend, ctx.backend_options)
         seg_roots = _segment_subgraph(d, produced)
         device_resident: set[int] = set()
         if getattr(backend, "supports_device_handoff", False):
@@ -187,7 +200,8 @@ def execute_segments(decisions, ctx, final_root_ids=frozenset()):
         if store is not None:
             store.record_runtime(backend.name, d.cost.total, seconds)
             observed_peak = getattr(ctx, "last_run_peak_bytes", 0)
-            if backend.name == "streaming" and observed_peak:
+            if (observed_peak and getattr(ctx, "last_run_peak_engine", None)
+                    == backend.name):
                 raw_est = (d.cost.raw_peak_bytes
                            if d.cost.raw_peak_bytes is not None
                            else d.cost.peak_bytes)
@@ -197,31 +211,26 @@ def execute_segments(decisions, ctx, final_root_ids=frozenset()):
             v = vals[new.id]
             results[orig.id] = v
             if orig.id in device_resident:
-                produced[orig.id] = v        # ShardedTable, stays on device
+                produced[orig.id] = v        # device payload, stays resident
                 ctx.planner_trace.append(
                     f"auto: handoff #{orig.id} seg{si} "
                     f"payload={type(v).__name__} device-resident "
                     f"({d.cost.backend}->{d.cost.backend})")
             else:
                 produced[orig.id] = X.to_host_value(v)
+            if consumers.get(orig.id):
+                payload = produced[orig.id]
+                handoff_events.append({
+                    "node_id": orig.id, "segment": si,
+                    "payload_kind": ("table" if isinstance(payload, dict)
+                                     else type(payload).__name__),
+                    "device_resident": orig.id in device_resident,
+                    "producer": d.cost.backend,
+                    "consumers": tuple(sorted(consumers[orig.id]))})
         if backend.name not in names:
             names.append(backend.name)
-    return results, "+".join(names) or "auto"
-
-
-def _backend_with_options(kind, options: dict):
-    """Construct a backend passing only the options its constructor
-    accepts.  ``ctx.backend_options`` mixes per-engine knobs (chunk_rows,
-    device_arrays, …) with planner-level ones (placement) — a backend must
-    neither crash on foreign keys nor lose its own."""
-    import inspect
-
-    from .backends import backend_class
-    cls = backend_class(kind)
-    if not options:
-        return cls()
-    params = inspect.signature(cls.__init__).parameters
-    return cls(**{k: v for k, v in options.items() if k in params})
+    ctx._last_handoff_events = handoff_events
+    return results, "+".join(names) or AUTO
 
 
 def _segment_subgraph(d, produced: dict[int, object]) -> list[G.Node]:
@@ -258,15 +267,15 @@ def _segment_subgraph(d, produced: dict[int, object]) -> list[G.Node]:
 
 def _record_runtime_sample(opt_roots, ctx, kind, backend_name: str,
                            seconds: float) -> None:
-    """Calibration sample for a fixed-backend run: estimate the plan's work
+    """Calibration sample for a fixed-engine run: estimate the plan's work
     with the a-priori cost model and pair it with the measured wall time.
     Best-effort — estimation failures never affect execution."""
     store = getattr(ctx, "stats_store", None)
     if store is None:
         return
-    # once a backend is well-sampled, only refresh every 8th force point —
+    # once an engine is well-sampled, only refresh every 8th force point —
     # plan estimation is metadata arithmetic, but sessions with many tiny
-    # fixed-backend force points shouldn't pay it each time
+    # fixed-engine force points shouldn't pay it each time
     samples = store.runtime_samples.get(backend_name, ())
     if len(samples) >= 16 and ctx.exec_count % 8:
         return
@@ -278,7 +287,8 @@ def _record_runtime_sample(opt_roots, ctx, kind, backend_name: str,
                         ctx.backend_options.get("chunk_rows", 1 << 16))
         store.record_runtime(backend_name, est.total, seconds)
         observed_peak = getattr(ctx, "last_run_peak_bytes", 0)
-        if backend_name == "streaming" and observed_peak:
+        if (observed_peak and getattr(ctx, "last_run_peak_engine", None)
+                == backend_name):
             store.record_peak(backend_name, observed_peak,
                               est_peak=est.peak_bytes)
     except Exception:  # noqa: BLE001 — calibration is advisory

@@ -114,6 +114,38 @@ class InMemorySource(Source):
         self.schema = infer_schema(self._arrays, self.dicts, datetimes)
         self.name = name
         self._metas = None
+        self._token = None
+
+    def cache_token(self):
+        """Content fingerprint (dtype + shape + full-bytes hash) instead of
+        object identity, so structural plan keys — and therefore the
+        persisted stats store's cardinality/peak feedback — survive process
+        restarts for in-memory plans too: a fresh process ingesting the
+        same data produces the same token.
+
+        The hash covers the *complete* column bytes: the token feeds
+        correctness-bearing consumers (the persist cache serves results by
+        plan key), so a sampled digest that collides for tables differing
+        only in unsampled rows is not acceptable.  blake2b streams at
+        ~1 GB/s and the digest is computed once per source and cached; the
+        engine treats sources as immutable after ingest (as the identity
+        token did)."""
+        if self._token is None:
+            import hashlib
+            h = hashlib.blake2b(digest_size=16)
+            h.update(str(self._rows).encode())
+            for cname in sorted(self._arrays):
+                arr = self._arrays[cname]
+                h.update(cname.encode())
+                h.update(str(arr.dtype).encode())
+                h.update(str(arr.shape).encode())
+                if arr.size:
+                    h.update(np.ascontiguousarray(arr).tobytes())
+            for cname in sorted(self.dicts):
+                h.update(cname.encode())
+                h.update(repr(self.dicts[cname]).encode())
+            self._token = ("mem", self._rows, h.hexdigest())
+        return self._token
 
     @property
     def n_partitions(self):

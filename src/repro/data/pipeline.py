@@ -25,7 +25,7 @@ from typing import Iterator
 
 import numpy as np
 
-from ..core import BackendEngines, get_context
+from ..core import get_context
 from ..core.lazyframe import LazyFrame, read_source
 from ..core.source import InMemorySource, Source, write_npz_source
 
@@ -39,7 +39,7 @@ class PipelineConfig:
     shuffle: bool = True
     seed: int = 0
     prefetch: int = 2
-    backend: BackendEngines = BackendEngines.STREAMING
+    backend: str = "streaming"
     drop_remainder: bool = True
 
 

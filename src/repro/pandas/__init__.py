@@ -17,11 +17,18 @@ Ops the lazy layer lacks are served by the **measured fallback protocol**
 runs eagerly, the result re-wraps as a lazy source, and the event lands in
 ``get_context().fallback_trace``.
 
-The backend switch is a real module-level property (module-class swap):
+Engines are **string-named** and pluggable (``repro.core.engines``):
 
-    pd.BACKEND_ENGINE = pd.BackendEngines.STREAMING   # round-trips
-    with pd.session(backend=pd.BackendEngines.AUTO, memory_budget=2**28):
+    pd.BACKEND_ENGINE = "streaming"                   # round-trips
+    with pd.session(engine="auto", memory_budget=2**28,
+                    engines=("eager", "streaming")):  # AUTO allow-list
         ...isolated planner/persist/sink/stats state...
+    pd.register_engine("pool", PoolEngine, capability)  # out-of-tree engine
+    print(pd.explain())           # typed report: segments, candidates,
+                                  # handoffs, fallbacks, calibration
+
+``BackendEngines`` remains as a deprecated ``str``-mixin enum alias layer
+(members compare equal to the plain names).
 """
 from __future__ import annotations
 
@@ -31,6 +38,11 @@ import types
 from repro.core.context import (BackendEngines, LaFPContext, default_context,
                                 get_context, pop_session, push_session,
                                 session)
+from repro.core.engines import (BackendCapability, create_engine,
+                                engine_names, get_capability,
+                                normalize_engine, register_engine,
+                                unregister_engine)
+from repro.core.explain import ExplainReport, explain
 from repro.core.lazyframe import LazyColumn, LazyFrame, Result
 from repro.core.runtime import flush
 from repro.core.tracer import analyze
@@ -46,13 +58,19 @@ __all__ = [
     "read_csv", "read_npz", "read_source", "from_arrays",
     "concat", "merge", "to_datetime", "isna", "notna",
     "BackendEngines", "BACKEND_ENGINE", "set_backend",
+    "register_engine", "unregister_engine", "engine_names",
+    "get_capability", "create_engine", "BackendCapability",
+    "explain", "ExplainReport",
     "FallbackEvent", "record_fallback",
 ]
 
 
-def set_backend(engine: BackendEngines, **options):
+def set_backend(engine, **options):
+    """Switch the current session's engine by name (``"eager"``,
+    ``"streaming"``, ``"distributed"``, ``"auto"``, or any registered
+    plug-in engine); extra options flow into ``ctx.backend_options``."""
     ctx = get_context()
-    ctx.backend = engine
+    ctx.backend = normalize_engine(engine, warn_enum=True)
     ctx.backend_options.update(options)
 
 
@@ -61,18 +79,21 @@ class _FacadeModule(types.ModuleType):
     and writes go to the current session's context, so plain attribute
     assignment (the paper's §2.6 one-liner) actually switches the engine —
     fixing the seed bug where assignment shadowed the module ``__getattr__``
-    and silently did nothing."""
+    and silently did nothing.  Accepts string engine names (the redesigned
+    API) and, as a deprecated alias, ``BackendEngines`` members; unknown
+    names raise with the list of registered engines."""
 
     @property
-    def BACKEND_ENGINE(self) -> BackendEngines:
+    def BACKEND_ENGINE(self) -> str:
         return get_context().backend
 
     @BACKEND_ENGINE.setter
-    def BACKEND_ENGINE(self, value: BackendEngines):
-        if not isinstance(value, BackendEngines):
-            raise TypeError(
-                f"BACKEND_ENGINE must be a BackendEngines member, got {value!r}")
-        get_context().backend = value
+    def BACKEND_ENGINE(self, value):
+        # TypeError on non-str junk; DeprecationWarning on enum members
+        name = normalize_engine(value, warn_enum=True)
+        if name != "auto":
+            get_capability(name)                # ValueError on unknown names
+        get_context().backend = name
 
 
 sys.modules[__name__].__class__ = _FacadeModule

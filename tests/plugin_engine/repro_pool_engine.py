@@ -1,0 +1,343 @@
+"""Reference **out-of-tree** engine: chunk-parallel process-pool execution.
+
+This module is the pluggability proof for the open engine registry
+(`repro.core.engines`): it lives outside `src/repro`, is **never imported
+by core**, and registers itself at runtime —
+
+    import repro_pool_engine
+    repro_pool_engine.register()
+
+— or automatically via the ``repro.engines`` entry point when installed
+(``pip install ./tests/plugin_engine``).  Once registered it is a
+first-class engine: selectable by name (``pd.session(engine="pool")``,
+``pd.BACKEND_ENGINE = "pool"``), an AUTO candidate priced by its declared
+:class:`BackendCapability`, runtime-calibrated under its own stats-store
+namespace, and visible in ``pd.explain()`` candidate records.
+
+Execution model: host-numpy topological evaluation (pandas-conformant —
+it reuses the engine's public physical operators), with row-preserving
+pipeline ops split into fixed-size chunks and mapped across a
+``ProcessPoolExecutor`` when their payloads pickle; anything that doesn't
+pickle (closures, lambdas) silently runs inline, chunk by chunk.  Workers
+use the ``spawn`` start method so the parent's JAX state never leaks into
+children.  ``REPRO_POOL_WORKERS=0`` forces fully-inline chunk execution
+(useful on CI machines where process pools are slow to warm).
+
+Standard multiprocessing caveat: like any spawn/forkserver pool, scripts
+using this engine should guard their entry point with ``if __name__ ==
+"__main__":`` — an unguarded ``__main__`` is re-executed during worker
+start-up.  If workers cannot come up at all (interactive sessions), the
+startup ping times out and the engine permanently falls back to inline
+chunk execution — same results, one process."""
+from __future__ import annotations
+
+import os
+import pickle
+from typing import Any
+
+import numpy as np
+
+from repro.core import graph as G
+from repro.core.engines import ALL_OPS, BackendCapability
+
+CHUNK_ROWS = 1 << 14
+
+# deliberately dominated a-priori constants: an *uncalibrated* planner
+# never picks the pool engine over the built-ins, but once runtime
+# calibration shows it measured-fast (see test_engines.py) AUTO flips to
+# it — exactly the contract the registry promises plug-ins
+CAPABILITY = BackendCapability(
+    name="pool",
+    native_ops=ALL_OPS,
+    startup_cost=5e4,
+    scan_cost_per_byte=2.0,
+    row_cost=3.0,
+    parallelism=2.0,
+    transfer_cost_per_byte=1.0,
+    fallback_penalty=1.0,
+    peak_model="resident",
+)
+
+_ROWWISE = ("filter", "project", "assign", "rename", "astype", "fillna",
+            "map_rows")
+
+_EXECUTOR = None
+
+
+def _workers() -> int:
+    env = os.environ.get("REPRO_POOL_WORKERS")
+    if env is not None:
+        return max(0, int(env))
+    return min(2, os.cpu_count() or 1)
+
+
+def _worker_loop(tasks, results):
+    """Worker process main loop (module-level: importable under spawn)."""
+    while True:
+        i, args = tasks.get()
+        try:
+            out = "pong" if args == "ping" else _run_chunk(args)
+            results.put((i, True, out))
+        except Exception as e:  # noqa: BLE001 — report, keep serving
+            results.put((i, False, f"{type(e).__name__}: {e}"))
+
+
+class _MiniPool:
+    """Minimal process pool over **daemon** workers: daemons can never
+    block interpreter exit (the failure mode of a broken
+    ``ProcessPoolExecutor``), and a startup ping detects environments where
+    spawned children cannot come up (e.g. an interactive ``__main__``)
+    before any real work is routed to them."""
+
+    def __init__(self, workers: int):
+        import multiprocessing as mp
+        try:
+            ctx = mp.get_context("forkserver")   # never forks JAX state
+        except ValueError:
+            ctx = mp.get_context("spawn")
+        self._tasks = ctx.Queue()
+        self._results = ctx.Queue()
+        self._procs = [ctx.Process(target=_worker_loop,
+                                   args=(self._tasks, self._results),
+                                   daemon=True)
+                       for _ in range(workers)]
+        for p in self._procs:
+            p.start()
+        self.map([  # startup ping: one per worker, short timeout
+            "ping"] * workers, timeout=10)
+
+    def map(self, items, timeout: float = 120):
+        import queue as q
+        for i, it in enumerate(items):
+            self._tasks.put((i, it))
+        out = [None] * len(items)
+        for _ in range(len(items)):
+            try:
+                i, ok, payload = self._results.get(timeout=timeout)
+            except q.Empty:
+                raise TimeoutError("pool worker did not answer") from None
+            if not ok:
+                raise RuntimeError(payload)
+            out[i] = payload
+        return out
+
+
+def _executor():
+    """Lazy singleton pool; any failure permanently disables it
+    (``False``) and the engine runs its chunks inline instead."""
+    global _EXECUTOR
+    if _EXECUTOR is None:
+        if _workers() <= 0:
+            _EXECUTOR = False
+            return None
+        try:
+            _EXECUTOR = _MiniPool(_workers())
+        except Exception:  # noqa: BLE001 — no pool → inline chunks
+            _EXECUTOR = False
+    return _EXECUTOR or None
+
+
+def _disable_executor():
+    global _EXECUTOR
+    _EXECUTOR = False
+
+
+def _rowwise_chunk(op: str, spec, part: dict[str, np.ndarray]
+                   ) -> dict[str, np.ndarray]:
+    """Apply one row-preserving op to one chunk.  Pure numpy + the expr
+    tree's own ``evaluate`` — importable standalone in a spawned worker."""
+    if op == "filter":
+        mask = np.asarray(spec.evaluate(part), bool)
+        return {k: v[mask] for k, v in part.items()}
+    if op == "project":
+        return {c: part[c] for c in spec}
+    if op == "assign":
+        name, expr = spec
+        rows = len(next(iter(part.values()))) if part else 0
+        val = expr.evaluate(part)
+        if np.isscalar(val) or getattr(val, "ndim", 1) == 0:
+            val = np.full((rows,), val)
+        out = dict(part)
+        out[name] = np.asarray(val)
+        return out
+    if op == "rename":
+        return {spec.get(k, k): v for k, v in part.items()}
+    if op == "astype":
+        out = dict(part)
+        for c, dt in spec.items():
+            out[c] = out[c].astype(dt)
+        return out
+    if op == "fillna":
+        value, columns = spec
+        out = dict(part)
+        for c in (columns or list(out)):
+            arr = out[c]
+            if arr.dtype.kind == "f":
+                out[c] = np.where(np.isnan(arr), value, arr)
+        return out
+    if op == "map_rows":
+        return spec(dict(part))
+    raise NotImplementedError(op)
+
+
+def _run_chunk(args):
+    """Worker entry point (module-level: picklable under spawn)."""
+    op, spec, part = args
+    return _rowwise_chunk(op, spec, part)
+
+
+class PoolEngine:
+    """Chunk-parallel process-pool engine over host numpy tables."""
+
+    name = "pool"
+
+    def __init__(self, chunk_rows: int = CHUNK_ROWS,
+                 pool_workers: int | None = None):
+        self.chunk_rows = chunk_rows
+        self.pool_workers = pool_workers
+
+    # -- chunk-parallel rowwise pipeline ------------------------------------
+
+    @staticmethod
+    def _rowwise_spec(n: G.Node):
+        if isinstance(n, G.Filter):
+            return "filter", n.predicate
+        if isinstance(n, G.Project):
+            return "project", tuple(n.columns)
+        if isinstance(n, G.Assign):
+            return "assign", (n.name, n.expr)
+        if isinstance(n, G.Rename):
+            return "rename", dict(n.mapping)
+        if isinstance(n, G.AsType):
+            return "astype", dict(n.dtypes)
+        if isinstance(n, G.FillNa):
+            return "fillna", (n.value, n.columns)
+        if isinstance(n, G.MapRows):
+            return "map_rows", n.fn
+        raise NotImplementedError(n.op)
+
+    def _chunks(self, table: dict[str, np.ndarray]):
+        rows = len(next(iter(table.values()))) if table else 0
+        if rows == 0:
+            yield table
+            return
+        for lo in range(0, rows, self.chunk_rows):
+            yield {k: v[lo:lo + self.chunk_rows] for k, v in table.items()}
+
+    @staticmethod
+    def _concat(parts: list[dict[str, np.ndarray]]) -> dict[str, np.ndarray]:
+        if len(parts) == 1:
+            return parts[0]
+        return {k: np.concatenate([p[k] for p in parts]) for k in parts[0]}
+
+    def _rowwise(self, n: G.Node, table: dict[str, np.ndarray]):
+        op, spec = self._rowwise_spec(n)
+        chunks = list(self._chunks(table))
+        pool = _executor() if self.pool_workers is None else (
+            _executor() if self.pool_workers > 0 else None)
+        if pool is not None and len(chunks) > 1:
+            try:
+                pickle.dumps((op, spec))             # closures can't travel
+            except Exception:  # noqa: BLE001 — run inline instead
+                pool = None
+        if pool is not None and len(chunks) > 1:
+            try:
+                out = pool.map([(op, spec, c) for c in chunks], timeout=120)
+                return self._concat(out)
+            except Exception:  # noqa: BLE001 — broken/hung pool: disable it
+                _disable_executor()
+        return self._concat([_rowwise_chunk(op, spec, c) for c in chunks])
+
+    # -- node evaluation (host numpy; non-rowwise ops reuse the public
+    # physical-operator layer) ----------------------------------------------
+
+    def _load_scan(self, n: G.Scan) -> dict[str, np.ndarray]:
+        parts = []
+        for pi in range(n.source.n_partitions):
+            if pi in n.skip_partitions:
+                continue
+            part = n.source.load_partition(pi, n.columns)
+            part = {k: np.asarray(v) for k, v in part.items()}
+            for c, dt in n.dtype_overrides.items():
+                if c in part:
+                    part[c] = part[c].astype(dt)
+            parts.append(part)
+        if not parts:
+            cols = n.columns or n.source.schema.names
+            return {c: np.zeros(0, n.source.schema.col(c).np_dtype)
+                    for c in cols}
+        return self._concat(parts)
+
+    def eval_node(self, n: G.Node, vals: list[Any], ctx) -> Any:
+        from repro.core import physical as X
+        if isinstance(n, G.Handoff):
+            return X.handoff_value(n)
+        if isinstance(n, G.Materialized):
+            return {k: np.asarray(v) for k, v in n.table.items()}
+        if isinstance(n, G.Scan):
+            return self._load_scan(n)
+        if n.op in _ROWWISE:
+            return self._rowwise(n, vals[0])
+        if isinstance(n, G.Head):
+            return {k: v[: n.n] for k, v in vals[0].items()}
+        if isinstance(n, G.SortValues):
+            return X.apply_sort(vals[0], n.by, n.ascending)
+        if isinstance(n, G.DropDuplicates):
+            return X.apply_drop_duplicates(vals[0], n.subset)
+        if isinstance(n, G.GroupByAgg):
+            return X.apply_groupby_agg(vals[0], n.keys, n.aggs)
+        if isinstance(n, G.Join):
+            return X.apply_join(vals[0], vals[1], n.on, n.how, n.suffixes)
+        if isinstance(n, G.Concat):
+            return X.apply_concat(vals)
+        if isinstance(n, G.Reduce):
+            return X.apply_reduce(vals[0], n.column, n.fn)
+        if isinstance(n, G.Length):
+            return X.table_rows(vals[0])
+        if isinstance(n, G.SinkPrint):
+            from repro.core.sinks import render_sink
+            render_sink(n, vals[: n.n_data], ctx)
+            return None
+        raise NotImplementedError(f"pool: {n.op}")
+
+    # -- driver (refcounted topological walk, like the resident engines) ----
+
+    def execute(self, roots: list[G.Node], ctx) -> dict[int, Any]:
+        order = G.walk(roots)
+        refcount: dict[int, int] = {}
+        for n in order:
+            for i in n.inputs:
+                refcount[i.id] = refcount.get(i.id, 0) + 1
+        root_ids = {r.id for r in roots}
+        results: dict[int, Any] = {}
+        for n in order:
+            vals = [results[i.id] for i in n.inputs]
+            key = getattr(n, "cache_key", None)
+            if key is None:
+                try:
+                    key = n.key()
+                except Exception:  # noqa: BLE001 — side-effect nodes
+                    key = None
+            if (key is not None and not isinstance(n, G.SinkPrint)
+                    and key in ctx.persist_cache):
+                ctx.persist_stats["hits"] += 1
+                results[n.id] = ctx.persist_cache[key]
+            else:
+                results[n.id] = self.eval_node(n, vals, ctx)
+                if n.persist and not isinstance(
+                        n, (G.SinkPrint, G.Materialized)) and key is not None:
+                    ctx.persist_stats["misses"] += 1
+                    ctx.persist_cache[key] = results[n.id]
+            for i in n.inputs:
+                refcount[i.id] -= 1
+                if refcount[i.id] == 0 and i.id not in root_ids:
+                    if not i.persist:
+                        results[i.id] = None
+        return {rid: results.get(rid) for rid in root_ids}
+
+
+def register():
+    """Register the pool engine (idempotent).  This is both the manual
+    runtime-registration hook and the ``repro.engines`` entry-point target."""
+    import repro
+    repro.register_engine("pool", PoolEngine, CAPABILITY, replace=True)

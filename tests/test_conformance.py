@@ -13,6 +13,9 @@ compared at *kind* granularity (float/int/bool/object), not width.
 """
 from __future__ import annotations
 
+import os
+import sys
+
 import numpy as np
 import pytest
 
@@ -24,8 +27,17 @@ from repro.core.lazyframe import Result  # noqa: E402
 
 from benchmarks.api_corpus import CORPUS, _taxi  # noqa: E402
 
-ENGINES = (BackendEngines.EAGER, BackendEngines.STREAMING,
-           BackendEngines.AUTO)
+# the reference out-of-tree plug-in engine (tests/plugin_engine/): registered
+# at runtime — never imported by core — and held to the same differential
+# ground truth as the built-ins.  When pip-installed (CI plug-in job) it is
+# discovered through the ``repro.engines`` entry point instead; the path
+# append is a no-op then.
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "plugin_engine"))
+import repro_pool_engine  # noqa: E402
+
+repro_pool_engine.register()
+
+ENGINES = ("eager", "streaming", "auto", "pool")
 
 
 # ---------------------------------------------------------------------------
@@ -249,7 +261,7 @@ def test_every_corpus_program_has_a_reference():
     assert {name for name, _ in CORPUS} == set(_REFS)
 
 
-@pytest.mark.parametrize("engine", ENGINES, ids=lambda e: e.value)
+@pytest.mark.parametrize("engine", ENGINES)
 @pytest.mark.parametrize("name,prog", CORPUS, ids=[n for n, _ in CORPUS])
 def test_conformance(engine, name, prog):
     ctx = get_context()
@@ -311,20 +323,30 @@ def _dist_distinct(src, fee_src, pdf, fee_pdf, n):
     return out, pdf.drop_duplicates(["vendor", "zone"])
 
 
+def _dist_head(src, fee_src, pdf, fee_pdf, n):
+    # filter first so the head prefix spans valid-row gaps across shards —
+    # the native masked head must still reproduce pandas row order exactly
+    df = core.read_source(src)
+    out = df[df["tip"] > 4].head(37).compute()
+    return out, pdf[pdf["tip"] > 4].head(37)
+
+
 # join compares order-insensitively (pandas merge ordering is only loosely
-# specified); sort and distinct compare row order *exactly* — the native
-# range-partition sort and keep-first distinct must reproduce pandas order
+# specified); sort, distinct and head compare row order *exactly* — the
+# native range-partition sort, keep-first distinct, and leading-shard
+# masked head must reproduce pandas order
 _DIST_CASES = {
     "join": (_dist_join, {"sort_by": ["fare"]}),
     "sort": (_dist_sort, {}),
     "distinct": (_dist_distinct, {}),
+    "head": (_dist_head, {}),
 }
 
 
 @pytest.mark.parametrize("name", sorted(_DIST_CASES))
 def test_distributed_conformance(name):
     ctx = get_context()
-    ctx.backend = BackendEngines.DISTRIBUTED
+    ctx.backend = "distributed"
     ctx.print_fn = lambda *a: None
     rng = np.random.default_rng(7)
     n = 4_000

@@ -1,0 +1,477 @@
+"""Open engine-registry tests: registration, string-named engine API,
+planner integration of plug-in engines (candidates, calibration flip,
+explain records), stats-store persistence through registry namespaces,
+content-fingerprint cache tokens, metered peaks, and the native
+distributed head."""
+import os
+import sys
+
+import numpy as np
+import pytest
+
+import repro
+import repro.core as core
+import repro.pandas as pd
+from repro.core import get_context
+from repro.core import graph as G
+from repro.core.engines import (ALL_OPS, BackendCapability, UnknownEngineError,
+                                default_registry)
+from repro.core.planner.feedback import MIN_RUNTIME_SAMPLES
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "plugin_engine"))
+import repro_pool_engine  # noqa: E402
+
+repro_pool_engine.register()
+
+
+def _uniform_source(n=10_000, partition_rows=1024, seed=0):
+    rng = np.random.default_rng(seed)
+    return core.InMemorySource({
+        "fare": rng.uniform(0, 100, n),
+        "vendor": rng.integers(0, 4, n).astype(np.int64),
+        "miles": rng.uniform(0, 30, n),
+    }, partition_rows)
+
+
+def _dummy_cap(name, **kw):
+    base = dict(name=name, native_ops=ALL_OPS, startup_cost=1e9,
+                scan_cost_per_byte=9.0, row_cost=9.0, parallelism=1.0,
+                transfer_cost_per_byte=1.0, fallback_penalty=1.0)
+    base.update(kw)
+    return BackendCapability(**base)
+
+
+# ---------------------------------------------------------------------------
+# Registry mechanics
+
+
+def test_builtin_engines_registered_by_name():
+    names = repro.engine_names()
+    for n in ("eager", "streaming", "distributed"):
+        assert n in names
+    cap = repro.get_capability("streaming")
+    assert cap.peak_model == "chunked" and cap.streams_partitions
+
+
+def test_register_engine_rejects_reserved_and_duplicate_names():
+    with pytest.raises(ValueError):
+        repro.register_engine("auto", lambda: None, _dummy_cap("auto"))
+    repro.register_engine("dup-test", lambda: None, _dummy_cap("dup-test"))
+    try:
+        with pytest.raises(ValueError):
+            repro.register_engine("dup-test", lambda: None,
+                                  _dummy_cap("dup-test"))
+        repro.register_engine("dup-test", lambda: None,
+                              _dummy_cap("dup-test"), replace=True)
+    finally:
+        repro.unregister_engine("dup-test")
+    assert "dup-test" not in repro.engine_names()
+
+
+def test_unknown_engine_errors_list_registered_names():
+    with pytest.raises(UnknownEngineError) as ei:
+        repro.get_capability("warp-drive")
+    assert "eager" in str(ei.value)
+
+
+def test_create_engine_filters_foreign_options():
+    # streaming accepts chunk_rows but not placement — both arrive mixed in
+    # backend_options and the factory must get only its own
+    eng = repro.create_engine("streaming",
+                              {"chunk_rows": 512, "placement": "per_root"})
+    assert eng.chunk_rows == 512
+
+
+def test_capability_name_is_forced_to_registry_key():
+    repro.register_engine("renamed", lambda: None, _dummy_cap("other"))
+    try:
+        assert repro.get_capability("renamed").name == "renamed"
+    finally:
+        repro.unregister_engine("renamed")
+
+
+# ---------------------------------------------------------------------------
+# Plug-in engine: selectable by name, AUTO candidate, calibration flip
+
+
+def test_pool_engine_runs_fixed_by_name():
+    ctx = get_context()
+    ctx.print_fn = lambda *a: None
+    with pd.session(engine="pool") as sctx:
+        sctx.print_fn = lambda *a: None
+        df = pd.DataFrame({"x": np.arange(5000.0),
+                           "k": (np.arange(5000) % 5).astype(np.int64)})
+        out = df[df["x"] > 100].groupby("k")["x"].sum().compute()
+        assert out.rows() == 5
+        samples = sctx.stats_store.runtime_samples.get("pool")
+        assert samples, "pool run recorded no calibration sample"
+
+
+def test_pool_engine_appears_in_auto_candidate_records():
+    ctx = get_context()
+    ctx.backend = "auto"
+    src = _uniform_source(n=5000)
+    df = core.read_source(src)
+    df[df["fare"] > 10.0].compute()
+    d = ctx.planner_decisions[0]
+    assert "pool" in d.candidates
+    rep = pd.explain()
+    seg = rep.runs[-1].segments[0]
+    engines_seen = {c.engine for c in seg.candidates}
+    assert "pool" in engines_seen
+    # the chosen engine has an empty reason; rejected ones carry one
+    chosen = [c for c in seg.candidates if c.chosen]
+    assert len(chosen) == 1 and chosen[0].reason == ""
+    rejected = [c for c in seg.candidates if not c.chosen]
+    assert rejected and all(c.reason for c in rejected)
+
+
+def _calibrate_pool_fastest(store):
+    for _ in range(MIN_RUNTIME_SAMPLES):
+        store.record_runtime("pool", 1.0, 1e-9)
+        for other in ("eager", "streaming", "distributed"):
+            store.record_runtime(other, 1.0, 1000.0)
+
+
+def test_auto_selects_pool_engine_once_calibrated():
+    """The pluggability acceptance: a runtime-registered engine becomes the
+    AUTO choice when runtime calibration shows it measured-cheaper."""
+    ctx = get_context()
+    ctx.backend = "auto"
+    ctx.print_fn = lambda *a: None
+    src = _uniform_source(n=5000)
+
+    def run():
+        df = core.read_source(src)
+        return df[df["fare"] > 10.0].compute()
+
+    run()
+    assert ctx.planner_decisions[0].backend != "pool"   # dominated a priori
+    _calibrate_pool_fastest(ctx.stats_store)
+    out = run()
+    assert ctx.planner_decisions[0].backend == "pool"
+    assert out.rows() > 0
+    assert any("-> pool" in line for line in ctx.planner_trace)
+
+
+def test_engine_allowlist_excludes_plugin_from_auto():
+    with pd.session(engine="auto", engines=("eager", "streaming")) as ctx:
+        ctx.print_fn = lambda *a: None
+        _calibrate_pool_fastest(ctx.stats_store)
+        src = _uniform_source(n=5000)
+        df = core.read_source(src)
+        df[df["fare"] > 10.0].compute()
+        d = ctx.planner_decisions[0]
+        assert d.backend in ("eager", "streaming")
+        assert "pool" not in d.candidates and "distributed" not in d.candidates
+
+
+# ---------------------------------------------------------------------------
+# Stats-store persistence round-trips through registry namespaces (incl. a
+# runtime-registered engine)
+
+
+def test_stats_persistence_round_trip_flips_auto_in_second_session(tmp_path):
+    import json
+    path = str(tmp_path / "stats.json")
+    src = _uniform_source(n=5000)
+
+    with pd.session(engine="auto", stats_path=path) as ctx:
+        ctx.print_fn = lambda *a: None
+        _calibrate_pool_fastest(ctx.stats_store)
+        df = core.read_source(src)
+        df[df["fare"] > 10.0].compute()      # executes → saves the store
+        assert ctx.planner_decisions[0].backend == "pool"
+
+    with open(path) as f:
+        data = json.load(f)
+    assert "pool" in data["runtime_samples"], (
+        "registry namespace missing from persisted store")
+
+    # "restart": a fresh session reloads the store; AUTO decisions reflect
+    # the first session's calibration — including the plug-in engine's
+    with pd.session(engine="auto", stats_path=path) as ctx2:
+        ctx2.print_fn = lambda *a: None
+        assert ctx2.stats_store.cost_scale("pool") is not None
+        df = core.read_source(src)
+        df[df["fare"] > 10.0].compute()
+        assert ctx2.planner_decisions[0].backend == "pool"
+
+
+# ---------------------------------------------------------------------------
+# InMemorySource content-fingerprint cache tokens (ROADMAP open item)
+
+
+def test_inmemory_cache_token_is_content_fingerprint():
+    arrays = {"x": np.arange(1000.0), "k": np.arange(1000) % 5}
+    a = core.InMemorySource({k: v.copy() for k, v in arrays.items()})
+    b = core.InMemorySource({k: v.copy() for k, v in arrays.items()})
+    assert a.cache_token() == b.cache_token()          # same content
+    changed = {k: v.copy() for k, v in arrays.items()}
+    changed["x"][0] = -1.0
+    c = core.InMemorySource(changed)
+    assert a.cache_token() != c.cache_token()          # different bytes
+    d = core.InMemorySource({"x": arrays["x"].astype(np.float32),
+                             "k": arrays["k"].copy()})
+    assert a.cache_token() != d.cache_token()          # different dtype
+
+
+def test_inmemory_cardinality_feedback_survives_restart(tmp_path):
+    """Persisted observed cardinalities key on the content fingerprint, so
+    a fresh process (fresh source *object*) over the same data reuses
+    them — previously only disk-backed sources did."""
+    from repro.core.optimizer import optimize
+    from repro.core.planner.stats import estimate_plan
+    path = str(tmp_path / "stats.json")
+    arrays = {"fare": np.concatenate([np.zeros(9800),
+                                      np.linspace(1, 100, 200)])}
+
+    with pd.session(engine="eager", stats_path=path) as ctx:
+        ctx.print_fn = lambda *a: None
+        src = core.InMemorySource({k: v.copy() for k, v in arrays.items()},
+                                  partition_rows=1024)
+        df = core.read_source(src)
+        df[df["fare"] > 50.0].compute()
+        assert len(ctx.stats_store) >= 1
+
+    with pd.session(engine="auto", stats_path=path) as ctx2:
+        ctx2.print_fn = lambda *a: None
+        src2 = core.InMemorySource({k: v.copy() for k, v in arrays.items()},
+                                   partition_rows=1024)
+        df2 = core.read_source(src2)
+        node = df2[df2["fare"] > 50.0]._node
+        roots, _ = optimize([node], ctx2)
+        est = estimate_plan(roots, ctx2)
+        assert est[roots[0].id].exact, (
+            "restart-simulating session did not reuse in-memory feedback")
+        actual = int((arrays["fare"] > 50.0).sum())
+        assert est[roots[0].id].rows == pytest.approx(actual)
+
+
+# ---------------------------------------------------------------------------
+# Metered peaks beyond the streaming meter (ROADMAP open item)
+
+
+def test_eager_runs_meter_peak_and_feed_calibration():
+    ctx = get_context()
+    ctx.backend = "eager"
+    src = _uniform_source(n=20_000, partition_rows=1024)
+    df = core.read_source(src)
+    df[df["fare"] > 10.0].compute()
+    assert ctx.last_run_peak_engine == "eager"
+    assert ctx.last_run_peak_bytes > 0
+    samples = ctx.stats_store.peak_samples.get("eager")
+    assert samples, "eager run recorded no (est, observed) peak sample"
+    est, obs = samples[-1]
+    assert est > 0 and obs > 0
+
+
+def test_auto_segment_on_eager_records_peak_sample():
+    ctx = get_context()
+    ctx.backend = "auto"
+    src = _uniform_source(n=5000)
+    df = core.read_source(src)
+    df[df["fare"] > 10.0].compute()
+    chosen = ctx.planner_decisions[0].backend
+    assert ctx.stats_store.peak_samples.get(chosen)
+
+
+# ---------------------------------------------------------------------------
+# Native distributed head (ROADMAP open item)
+
+
+def test_distributed_head_no_gather_no_reshard(monkeypatch):
+    import repro.core.physical as X
+    from repro.core.backends import get_backend
+    from repro.core.physical import sharded as S
+    src = core.InMemorySource({"x": np.arange(5000, dtype=np.int64)},
+                              partition_rows=512)
+    scan = G.Scan(src)
+    head = G.Head(scan, 40)
+    gathers = {"n": 0}
+    shards = {"n": 0}
+    orig_gather = S.ShardedTable.gather
+
+    def counting_gather(self):
+        gathers["n"] += 1
+        return orig_gather(self)
+
+    orig_shard = S.shard_host_table
+
+    def counting_shard(*a, **k):
+        shards["n"] += 1
+        return orig_shard(*a, **k)
+
+    monkeypatch.setattr(S.ShardedTable, "gather", counting_gather)
+    monkeypatch.setattr(S, "shard_host_table", counting_shard)
+    monkeypatch.setattr(X, "shard_host_table", counting_shard)
+    be = get_backend("distributed")
+    res = be.execute([head], get_context())[head.id]
+    np.testing.assert_array_equal(np.asarray(res["x"]), np.arange(40))
+    assert shards["n"] == 1, "head re-sharded the table"
+    assert gathers["n"] == 1, "head gathered beyond final materialization"
+
+
+def test_distributed_head_negative_n_falls_back_to_pandas_semantics():
+    """pandas ``head(-n)`` means all-but-last-n; the native masked head
+    only serves n >= 0 and negative n must take the host fallback."""
+    from repro.core.backends import get_backend
+    src = core.InMemorySource({"x": np.arange(10, dtype=np.int64)},
+                              partition_rows=4)
+    head = G.Head(G.Scan(src), -2)
+    res = get_backend("distributed").execute([head], get_context())[head.id]
+    np.testing.assert_array_equal(np.asarray(res["x"]), np.arange(8))
+
+
+def test_allowlist_matching_no_engine_raises():
+    """A typo'd allow-list must error, not silently fall back to the full
+    candidate set (which would dispatch to the excluded engines)."""
+    from repro.core.planner.select import candidate_engines
+    with pd.session(engine="auto", engines=("streamin",)) as ctx:
+        with pytest.raises(UnknownEngineError):
+            candidate_engines(ctx)
+
+
+def test_enum_members_warn_at_public_entry_points():
+    with pytest.warns(DeprecationWarning):
+        pd.BACKEND_ENGINE = pd.BackendEngines.STREAMING
+    assert get_context().backend == "streaming"
+    with pytest.warns(DeprecationWarning):
+        pd.set_backend(pd.BackendEngines.EAGER)
+    with pytest.warns(DeprecationWarning):
+        with pd.session(engine=pd.BackendEngines.EAGER):
+            pass
+
+
+def test_record_execution_peak_is_per_run_not_session_max():
+    """A big metered run must not leak its peak into a later engine's
+    namespace: record_execution keys on *this run's* peak."""
+    ctx = get_context()
+    ctx.backend = "streaming"
+    big = _uniform_source(n=50_000, partition_rows=2048)
+    core.read_source(big).compute()
+    streaming_peak = ctx.stats_store.backend_peaks["streaming"]
+    assert streaming_peak > 0
+    ctx.backend = "eager"
+    tiny = core.InMemorySource({"x": np.arange(8, dtype=np.int64)})
+    core.read_source(tiny).compute()
+    eager_peak = ctx.stats_store.backend_peaks.get("eager", 0)
+    assert 0 < eager_peak == ctx.last_run_peak_bytes
+    assert eager_peak < streaming_peak
+
+
+def test_sharded_head_masks_across_shard_gaps():
+    """head(n) after a filter: the valid prefix spans shards with gaps; the
+    masked head must keep exactly the first n valid rows in row order."""
+    jax = pytest.importorskip("jax")
+    from repro.core.physical import ShardedTable, sharded_head
+    import jax.numpy as jnp
+    S = max(1, len(jax.devices()))
+    per = 16
+    x = jnp.arange(S * per).reshape(S, per)
+    valid = (x % 3 == 0)
+    t = ShardedTable({"x": x}, valid)
+    out = sharded_head(t, 5)
+    got = out.gather()["x"]
+    expected = np.arange(S * per)[np.asarray(valid).reshape(-1)][:5]
+    np.testing.assert_array_equal(np.asarray(got), expected)
+    assert out.rows() == min(5, int(np.asarray(valid).sum()))
+
+
+# ---------------------------------------------------------------------------
+# pd.explain(): typed records + stable text plan
+
+
+def test_explain_covers_every_segment_handoff_fallback_and_scale(monkeypatch):
+    import dataclasses as dc
+
+    from repro.core import backends as B
+    orig = dict(B.CAPABILITIES)
+    # force a two-segment split (cheap chunked scan/filter, group-by only
+    # native elsewhere) so the report must contain a handoff
+    monkeypatch.setitem(
+        B.CAPABILITIES, "streaming",
+        dc.replace(orig["streaming"],
+                   native_ops=frozenset(orig["streaming"].native_ops
+                                        - {"groupby_agg"}),
+                   scan_cost_per_byte=0.001, row_cost=0.001,
+                   fallback_penalty=1e7))
+    monkeypatch.setitem(
+        B.CAPABILITIES, "eager",
+        dc.replace(orig["eager"], scan_cost_per_byte=1e4))
+    monkeypatch.setitem(
+        B.CAPABILITIES, "distributed",
+        dc.replace(orig["distributed"], startup_cost=1e14))
+    monkeypatch.setitem(
+        B.CAPABILITIES, "pool",
+        dc.replace(B.CAPABILITIES["pool"], startup_cost=1e14))
+    ctx = get_context()
+    ctx.backend = "auto"
+    ctx.print_fn = lambda *a: None
+    src = _uniform_source(n=20_000, partition_rows=1024)
+    df = core.read_source(src)
+    df[df["fare"] > 10.0].groupby("vendor")["miles"].sum().compute()
+    # a facade fallback event too
+    pd.Series(np.arange(10.0), name="v").median()
+
+    rep = ctx.report()
+    auto_runs = [r for r in rep.runs if r.engine == "auto"]
+    assert auto_runs, rep.runs
+    run = auto_runs[0]
+    assert len(run.segments) == 2
+    assert [s.engine for s in run.segments] == ["streaming", "eager"]
+    # every segment priced every candidate or recorded why not
+    for seg in run.segments:
+        assert seg.candidates, "segment without candidate records"
+        assert sum(c.chosen for c in seg.candidates) == 1
+    # the cross-segment value shows up as a typed handoff with payload kind
+    assert run.handoffs, "no handoff records for a two-segment run"
+    h = run.handoffs[0]
+    assert h.payload_kind == "table" and not h.device_resident
+    assert h.producer == "streaming" and "eager" in h.consumers
+    # fallback events covered
+    assert any(f.op == "Series.median" for f in rep.fallbacks)
+    # calibration scales covered once enough samples exist
+    _calibrate_pool_fastest(ctx.stats_store)
+    rep2 = ctx.report()
+    cal = {c.engine: c for c in rep2.calibration}
+    assert cal["pool"].cost_scale == pytest.approx(1e-9)
+    # stable text plan renders every piece
+    text = rep2.render()
+    assert "seg0 -> streaming" in text and "seg1 -> eager" in text
+    assert "handoff" in text and "fallback" in text and "calibration:" in text
+
+
+def test_explain_plan_only_does_not_execute():
+    ctx = get_context()
+    ctx.backend = "auto"
+    src = _uniform_source(n=5000)
+    df = core.read_source(src)
+    before = ctx.exec_count
+    rep = pd.explain(df[df["fare"] > 10.0])
+    assert ctx.exec_count == before          # nothing ran
+    assert len(rep.runs) == 1
+    run = rep.runs[0]
+    assert run.force_reason == "explain" and run.executed == ()
+    assert run.segments and run.segments[0].ops
+    assert {c.engine for c in run.segments[0].candidates} >= {
+        "eager", "streaming", "distributed"}
+    assert isinstance(rep.to_dict(), dict)
+
+
+def test_explain_report_is_json_serializable():
+    import json
+    ctx = get_context()
+    ctx.backend = "auto"
+    src = _uniform_source(n=2000)
+    core.read_source(src).compute()
+    rep = pd.explain()
+    json.dumps(rep.to_dict(), default=str)
+
+
+def test_metadata_choose_backend_returns_engine_names():
+    from repro.core.metadata import choose_backend
+    src = _uniform_source(n=1000)
+    assert choose_backend(src, available_bytes=1 << 34) == "eager"
+    small = choose_backend(src, available_bytes=1 << 10)
+    assert small == "streaming"

@@ -303,13 +303,13 @@ def test_session_stats_path_persists_calibration_across_sessions(tmp_path):
     from repro.core.planner.feedback import MIN_RUNTIME_SAMPLES
     path = str(tmp_path / "cal.json")
     src_arrays = {"x": np.arange(500, dtype=np.int64)}
-    with session(backend=BackendEngines.EAGER, stats_path=path) as ctx:
+    with session(engine="eager", stats_path=path) as ctx:
         for _ in range(MIN_RUNTIME_SAMPLES):
             ctx.stats_store.record_runtime("streaming", 1e4, 0.05)
         df = core.from_arrays(dict(src_arrays), partition_rows=128)
         df[df["x"] > 100].compute()      # any execute saves the store
     assert os.path.exists(path)
-    with session(backend=BackendEngines.EAGER, stats_path=path) as ctx2:
+    with session(engine="eager", stats_path=path) as ctx2:
         # reloaded on startup: calibration survives the "restart"
         assert ctx2.stats_store.cost_scale("streaming") == pytest.approx(5e-6)
         assert len(ctx2.stats_store) >= 1   # cardinalities reloaded too

@@ -20,14 +20,33 @@ def test_get_context_returns_stack_top():
 
 
 def test_nested_sessions_isolate_backend_and_budget():
-    with pd.session(backend=BackendEngines.STREAMING, memory_budget=123):
-        assert get_context().backend is BackendEngines.STREAMING
+    with pd.session(engine="streaming", memory_budget=123):
+        assert get_context().backend == "streaming"
         assert get_context().memory_budget == 123
-        with pd.session(backend=BackendEngines.DISTRIBUTED):
-            assert get_context().backend is BackendEngines.DISTRIBUTED
+        with pd.session(engine="distributed"):
+            assert get_context().backend == "distributed"
             assert get_context().memory_budget is None
-        assert get_context().backend is BackendEngines.STREAMING
-    assert get_context().backend is BackendEngines.EAGER
+        assert get_context().backend == "streaming"
+    assert get_context().backend == "eager"
+
+
+def test_session_backend_kwarg_is_deprecated_but_works():
+    with pytest.warns(DeprecationWarning):
+        with pd.session(backend=BackendEngines.STREAMING):
+            assert get_context().backend == "streaming"
+    with pytest.raises(TypeError):
+        with pd.session(engine="eager", backend="streaming"):
+            pass
+
+
+def test_session_engine_allowlist_restricts_auto_candidates():
+    from repro.core.planner.select import candidate_engines
+    with pd.session(engine="auto", engines=("eager", "streaming")) as ctx:
+        assert candidate_engines(ctx) == ("eager", "streaming")
+    with pd.session(engine="auto") as ctx:
+        cands = candidate_engines(ctx)
+        assert "eager" in cands and "streaming" in cands \
+            and "distributed" in cands
 
 
 def test_nested_sessions_do_not_share_persist_or_sinks_or_stats(rng):
@@ -103,9 +122,9 @@ def test_thread_safety_smoke(rng):
     def worker(backend, n):
         try:
             for _ in range(n):
-                with pd.session(backend=backend) as ctx:
+                with pd.session(engine=backend) as ctx:
                     assert get_context() is ctx
-                    assert get_context().backend is backend
+                    assert get_context().backend == backend
                     df = pd.from_arrays({"x": np.arange(50.0)})
                     res = df[df["x"] > 10].compute()
                     assert res.rows() == 39
@@ -114,7 +133,7 @@ def test_thread_safety_smoke(rng):
             errors.append(e)
 
     threads = [threading.Thread(target=worker, args=(b, 5))
-               for b in (BackendEngines.EAGER, BackendEngines.STREAMING)
+               for b in ("eager", "streaming")
                for _ in range(3)]
     for t in threads:
         t.start()
