@@ -1,6 +1,6 @@
 # The paper's primary contribution: the Lazy Fat Pandas engine in JAX —
 # lazy task-graph construction (graph, lazyframe), JIT static analysis
-# (tracer, source_analysis), DAG optimization (optimizer, liveness), lazy
+# (jit_analyze, source_analysis), DAG optimization (optimizer, liveness), lazy
 # sinks (sinks, func), metadata (metadata), and pluggable string-named
 # engines (engines registry + backends.eager/streaming/distributed,
 # extensible via repro.register_engine / the repro.engines entry-point
@@ -13,7 +13,7 @@ from .explain import ExplainReport, explain
 from .lazyframe import LazyFrame, Result, from_arrays, read_npz, read_source
 from .runtime import execute, flush
 from .source import InMemorySource, NpzDirectorySource, encode_strings, write_npz_source
-from .tracer import analyze
+from .jit_analyze import analyze
 
 __all__ = [
     "BackendEngines", "get_context", "default_context", "session",

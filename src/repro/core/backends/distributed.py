@@ -125,9 +125,14 @@ class DistributedBackend:
                     # exprs that cannot be jit-traced: gather and delegate
                     # like any other unsupported op — but never silently
                     # (a genuine native-kernel bug must stay visible)
-                    self._ctx.planner_trace.append(
+                    from ...obs.events import PlannerEvent
+                    from ...obs.spans import metric_inc
+                    self._ctx.planner_trace.append(PlannerEvent(
                         f"distributed: {n.op}#{n.id} native path failed, "
-                        f"falling back ({type(e).__name__}: {e})")
+                        f"falling back ({type(e).__name__}: {e})",
+                        kind="native-fallback", op=n.op, node_id=n.id,
+                        error=type(e).__name__))
+                    metric_inc("distributed.native_fallbacks")
                     return self._fallback_node(n, [child])
             return self._fallback_node(n, [child])
         if isinstance(n, G.Reduce):

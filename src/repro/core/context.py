@@ -24,6 +24,9 @@ from typing import Any
 
 from . import graph
 from .engines import normalize_engine
+from ..obs.events import DEFAULT_TRACE_LIMIT, TraceLog
+from ..obs.metrics import MetricsRegistry
+from ..obs.spans import Tracer
 
 
 class BackendEngines(str, enum.Enum):
@@ -41,8 +44,16 @@ class BackendEngines(str, enum.Enum):
 
 
 class LaFPContext:
-    def __init__(self, name: str = "default"):
+    def __init__(self, name: str = "default",
+                 trace_limit: int | None = DEFAULT_TRACE_LIMIT):
         self.session_name = name
+        # telemetry (repro.obs): per-session span tracer (no-op until a
+        # profile attaches) + counters/gauges registry.  trace_limit bounds
+        # the string/event trace logs below so long-lived serving sessions
+        # can't grow without limit.
+        self.trace_limit = trace_limit
+        self.tracer = Tracer(session=name)
+        self.metrics = MetricsRegistry()
         self._backend: str = "eager"
         self.backend_options: dict[str, Any] = {}
         # AUTO candidate allow-list (None → every registered engine)
@@ -60,7 +71,7 @@ class LaFPContext:
         # registry for f-string escapes (§3.3): uid -> node
         self.scalar_registry: dict[int, graph.Node] = {}
         # live frame tracking: var name -> LazyFrame (filled by analyze())
-        self.optimizer_trace: list[str] = []
+        self.optimizer_trace: list[str] = TraceLog(trace_limit)
         self.memory_budget: int | None = None   # bytes; chunked engines enforce
         self.last_peak_bytes: int = 0           # metered peak accounting
         self.last_run_peak_bytes: int = 0       # peak of the latest single run
@@ -73,7 +84,7 @@ class LaFPContext:
         # placement strategy is per-session via backend_options:
         #   backend_options["placement"] = "operator" (segments, default)
         #                                | "per_root" (PR-1 behaviour)
-        self.planner_trace: list[str] = []
+        self.planner_trace: list[str] = TraceLog(trace_limit)
         from .planner.feedback import StatsStore
         self.stats_store = StatsStore()
         # stats-store persistence: when REPRO_STATS_CACHE_DIR is set (or a
@@ -96,10 +107,10 @@ class LaFPContext:
         # facade fallback protocol (repro.pandas): every op the lazy layer
         # serves by eager materialization (or fails to serve at all) is
         # recorded here — coverage gaps are measured, not guessed.
-        self.fallback_trace: list[Any] = []     # FallbackEvent records
+        self.fallback_trace: list[Any] = TraceLog(trace_limit)  # FallbackEvents
         # force-point log: why each execute() was triggered (user compute,
         # fallback materialization, repr, flush, …)
-        self.force_log: list[str] = []
+        self.force_log: list[str] = TraceLog(trace_limit)
         # metrics
         self.exec_count = 0
 
@@ -114,7 +125,7 @@ class LaFPContext:
         self._backend = normalize_engine(value)
 
     def reset(self):
-        self.__init__(self.session_name)
+        self.__init__(self.session_name, trace_limit=self.trace_limit)
 
     def sink_chain_add(self, sink: graph.SinkPrint):
         self.last_sink = sink
@@ -183,6 +194,7 @@ def session(engine: str | BackendEngines | None = None,
             stats_path: str | None = None,
             engines: tuple | list | None = None,
             backend: str | BackendEngines | None = None,
+            trace_limit: int | None = DEFAULT_TRACE_LIMIT,
             **backend_options):
     """Isolated execution session: fresh engine choice, persist cache,
     sink chain, stats store (planner feedback + runtime calibration), and
@@ -208,6 +220,11 @@ def session(engine: str | BackendEngines | None = None,
     restarts.  ``REPRO_STATS_CACHE_DIR`` enables the same per-context
     persistence globally.
 
+    ``trace_limit`` bounds the session's trace logs (``planner_trace``,
+    ``fallback_trace``, ``force_log``, ``optimizer_trace``): the newest
+    entries are kept, evictions counted on each log's ``.dropped``.  Pass
+    ``None`` (or 0) for unbounded legacy behaviour.
+
     Pending lazy sinks are flushed on clean exit (so deferred prints inside
     the block don't silently vanish); on exception the session is popped
     unflushed."""
@@ -218,7 +235,7 @@ def session(engine: str | BackendEngines | None = None,
             "session(backend=...) is deprecated; use session(engine=...) "
             "with a string engine name", DeprecationWarning, stacklevel=3)
         engine = backend
-    ctx = LaFPContext(name=name)
+    ctx = LaFPContext(name=name, trace_limit=trace_limit)
     if engine is not None:
         ctx.backend = normalize_engine(engine, warn_enum=True)
     ctx.memory_budget = memory_budget

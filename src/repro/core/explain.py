@@ -60,6 +60,9 @@ class SegmentRecord:
     feasible: bool
     candidates: tuple[CandidateRecord, ...]
     handoff_in: tuple[int, ...]         # boundary node ids feeding this segment
+    # telemetry linkage: id of the span that timed this segment's execution
+    # (repro.obs) — None for plan-only reports (explain(frame))
+    span_id: int | None = None
 
 
 @dataclasses.dataclass(frozen=True)
@@ -126,11 +129,13 @@ class ExplainReport:
                 work = "-" if seg.work is None else f"{seg.work:.3g}"
                 peak = ("-" if seg.peak_bytes is None
                         else f"{seg.peak_bytes / 1e6:.1f}MB")
+                span = (f" span=#{seg.span_id}"
+                        if seg.span_id is not None else "")
                 lines.append(
                     f"  seg{seg.index} -> {seg.engine} ops={len(seg.ops)} "
                     f"[{','.join(seg.ops)}] work={work} peak={peak} "
                     f"cal=x{seg.scale:.3g}"
-                    f"{'' if seg.feasible else ' infeasible!'}{hand}")
+                    f"{'' if seg.feasible else ' infeasible!'}{hand}{span}")
                 for c in seg.candidates:
                     if c.chosen:
                         continue
@@ -192,8 +197,11 @@ def _candidate_records(candidates: dict[str, dict]
     return tuple(out)
 
 
-def segment_records(decisions) -> tuple[SegmentRecord, ...]:
-    """Typed segments from planner ``Decision`` objects."""
+def segment_records(decisions, span_ids: dict[int, int] | None = None
+                    ) -> tuple[SegmentRecord, ...]:
+    """Typed segments from planner ``Decision`` objects; ``span_ids`` maps
+    segment index → telemetry span id for executed (not plan-only) runs."""
+    span_ids = span_ids or {}
     segs = []
     for si, d in enumerate(decisions):
         segs.append(SegmentRecord(
@@ -206,7 +214,8 @@ def segment_records(decisions) -> tuple[SegmentRecord, ...]:
             scale=d.scale,
             feasible=d.feasible,
             candidates=_candidate_records(getattr(d, "candidates", {}) or {}),
-            handoff_in=tuple(b.id for b in d.boundary)))
+            handoff_in=tuple(b.id for b in d.boundary),
+            span_id=span_ids.get(si)))
     return tuple(segs)
 
 
@@ -216,8 +225,10 @@ def record_run(ctx, force_reason: str, backend_name: str, opt_roots) -> None:
     decisions = getattr(ctx, "planner_decisions", None) or []
     handoff_dicts = getattr(ctx, "_last_handoff_events", None) or []
     ctx._last_handoff_events = []
+    span_ids = getattr(ctx, "_last_segment_spans", None) or {}
+    ctx._last_segment_spans = {}
     if decisions:
-        segments = segment_records(decisions)
+        segments = segment_records(decisions, span_ids)
     else:
         # fixed-engine run: one synthetic segment listing the plan's ops
         from . import graph as G
@@ -226,7 +237,7 @@ def record_run(ctx, force_reason: str, backend_name: str, opt_roots) -> None:
             root_ids=tuple(r.id for r in opt_roots),
             ops=tuple(n.op for n in G.walk(opt_roots)),
             work=None, peak_bytes=None, scale=1.0, feasible=True,
-            candidates=(), handoff_in=()),)
+            candidates=(), handoff_in=(), span_id=span_ids.get(0)),)
     handoffs = tuple(HandoffRecord(**h) for h in handoff_dicts)
     records = getattr(ctx, "run_records", None)
     if records is None:

@@ -14,6 +14,7 @@ import jax
 import jax.numpy as jnp
 
 from .table import Table, is_jax
+from ...obs.spans import traced_op
 
 
 def _factorize(arr):
@@ -54,6 +55,7 @@ def _factorize_multi(table: Table, cols: Sequence[str]):
     return combined, decode
 
 
+@traced_op("groupby_agg")
 def apply_groupby_agg(table: Table, keys: Sequence[str],
                       aggs: Mapping[str, tuple[str, str]]) -> Table:
     """Dense aggregation: factorize keys → segment reductions.
@@ -144,6 +146,7 @@ def partial_aggs(aggs: Mapping[str, tuple[str, str]]):
     return partial
 
 
+@traced_op("combine_partials")
 def combine_partials(keys, parts: list[Table],
                      aggs: Mapping[str, tuple[str, str]]) -> Table:
     """Re-aggregate concatenated per-partition partials, then finalize."""

@@ -13,8 +13,10 @@ import numpy as np
 import jax.numpy as jnp
 
 from .table import Table, to_jax, to_numpy, xp_of
+from ...obs.spans import traced_op
 
 
+@traced_op("join")
 def apply_join(left: Table, right: Table, on: Sequence[str], how="inner",
                suffixes=("_x", "_y")) -> Table:
     lj, rj = to_numpy(left), to_numpy(right)

@@ -7,8 +7,10 @@ import numpy as np
 import jax.numpy as jnp
 
 from .table import Table, table_rows, xp_of
+from ...obs.spans import traced_op
 
 
+@traced_op("reduce")
 def apply_reduce(table: Table, column: str | None, fn: str):
     xp = xp_of(table)
     if fn == "count":

@@ -9,18 +9,22 @@ from typing import Mapping, Sequence
 import numpy as np
 
 from .table import Table, table_rows, xp_of
+from ...obs.spans import traced_op
 
 
+@traced_op("filter")
 def apply_filter(table: Table, predicate) -> Table:
     mask = predicate.evaluate(table)
     # boolean advanced indexing works eagerly for both np and jnp
     return {k: v[mask] for k, v in table.items()}
 
 
+@traced_op("project")
 def apply_project(table: Table, columns: Sequence[str]) -> Table:
     return {c: table[c] for c in columns}
 
 
+@traced_op("assign")
 def apply_assign(table: Table, name: str, expr) -> Table:
     out = dict(table)
     val = expr.evaluate(table)
@@ -31,10 +35,12 @@ def apply_assign(table: Table, name: str, expr) -> Table:
     return out
 
 
+@traced_op("rename")
 def apply_rename(table: Table, mapping: Mapping[str, str]) -> Table:
     return {mapping.get(k, k): v for k, v in table.items()}
 
 
+@traced_op("astype")
 def apply_astype(table: Table, dtypes: Mapping[str, str]) -> Table:
     out = dict(table)
     for c, dt in dtypes.items():
@@ -42,6 +48,7 @@ def apply_astype(table: Table, dtypes: Mapping[str, str]) -> Table:
     return out
 
 
+@traced_op("fillna")
 def apply_fillna(table: Table, value, columns=None) -> Table:
     xp = xp_of(table)
     out = dict(table)
@@ -52,9 +59,11 @@ def apply_fillna(table: Table, value, columns=None) -> Table:
     return out
 
 
+@traced_op("head")
 def apply_head(table: Table, n: int) -> Table:
     return {k: v[:n] for k, v in table.items()}
 
 
+@traced_op("map_rows")
 def apply_map_rows(table: Table, fn) -> Table:
     return fn(dict(table))

@@ -38,6 +38,7 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 
 from .join import apply_join
 from .sort import apply_drop_duplicates
+from ...obs.spans import metric_inc, traced_op
 
 # build sides at or below this many bytes replicate to every shard
 # (broadcast-hash join); larger builds go through the shuffle exchange
@@ -69,6 +70,7 @@ class ShardedTable:
         return {k: np.asarray(v).reshape(-1)[mask] for k, v in self.cols.items()}
 
 
+@traced_op("sharded_head")
 def sharded_head(t: ShardedTable, n: int) -> ShardedTable:
     """Native distributed ``head(n)``: keep the first ``n`` valid rows in
     partition-major order by masking — no gather, no re-shard.
@@ -87,6 +89,7 @@ def sharded_head(t: ShardedTable, n: int) -> ShardedTable:
 # Host <-> shard layout
 
 
+@traced_op("shard_host_table")
 def shard_host_table(full: dict[str, np.ndarray], mesh, axis: str
                      ) -> ShardedTable:
     """Pad a host table to a fixed per-shard row count and device-shard it."""
@@ -224,6 +227,7 @@ def _device_code(t: ShardedTable, on: Sequence[str],
 # Native distributed join
 
 
+@traced_op("sharded_join")
 def sharded_join(probe: ShardedTable, build: dict, on: Sequence[str],
                  how: str, suffixes, mesh, axis: str) -> ShardedTable | None:
     """Join with the probe side device-resident.  ``build`` is a host table
@@ -299,6 +303,8 @@ def _shuffle_join(probe: ShardedTable, build: dict, bcode: np.ndarray,
     hash-join kernel per shard, then restore probe-row order by a second
     exchange on the carried global row id."""
     S = mesh.shape[axis]
+    metric_inc("exchange.shuffles")
+    metric_inc("exchange.shards", S)
     parts, rowids, total = _host_shards(probe)
     # exchange 1: co-locate by key code (shard-major iteration keeps rows in
     # global order inside every destination bucket)
@@ -365,6 +371,7 @@ def _shuffle_join(probe: ShardedTable, build: dict, bcode: np.ndarray,
 # Native distributed sort
 
 
+@traced_op("sharded_sort")
 def sharded_sort(t: ShardedTable, by: Sequence[str], ascending: bool,
                  mesh, axis: str) -> ShardedTable | None:
     """Range-partition by sampled splitters on the primary key, then a local
@@ -388,6 +395,8 @@ def sharded_sort(t: ShardedTable, by: Sequence[str], ascending: bool,
     merged = np.sort(np.concatenate(samples))
     cut = [merged[(i * merged.size) // S] for i in range(1, S)]
     splitters = np.asarray(cut, dtype=merged.dtype)
+    metric_inc("exchange.shuffles")
+    metric_inc("exchange.shards", S)
     buckets: list[list[dict]] = [[] for _ in range(S)]
     for p in parts:
         key = np.asarray(p[by[0]])
@@ -420,6 +429,7 @@ def sharded_sort(t: ShardedTable, by: Sequence[str], ascending: bool,
 # Native distributed distinct
 
 
+@traced_op("sharded_distinct")
 def sharded_distinct(t: ShardedTable, subset, mesh, axis: str
                      ) -> ShardedTable | None:
     """Shuffle by key code so duplicate keys co-locate, keep the first
@@ -439,6 +449,8 @@ def sharded_distinct(t: ShardedTable, subset, mesh, axis: str
     spec = _combined_radix(ranges, cols)
     if spec is None:
         return None
+    metric_inc("exchange.shuffles")
+    metric_inc("exchange.shards", S)
     buckets: list[list[dict]] = [[] for _ in range(S)]
     for part, rid in zip(parts, rowids):
         if not len(rid):

@@ -14,8 +14,10 @@ import jax.numpy as jnp
 
 from .groupby import _factorize_multi
 from .table import Table, xp_of
+from ...obs.spans import traced_op
 
 
+@traced_op("sort")
 def apply_sort(table: Table, by: Sequence[str], ascending: bool = True) -> Table:
     xp = xp_of(table)
     # lexsort: last key is primary in np.lexsort; jnp has lexsort too.
@@ -26,6 +28,7 @@ def apply_sort(table: Table, by: Sequence[str], ascending: bool = True) -> Table
     return {k: v[idx] for k, v in table.items()}
 
 
+@traced_op("drop_duplicates")
 def apply_drop_duplicates(table: Table, subset=None) -> Table:
     cols = list(subset) if subset else list(table.keys())
     codes, _ = _factorize_multi(table, cols)

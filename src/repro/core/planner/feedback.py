@@ -219,6 +219,10 @@ def record_execution(roots: list[G.Node], results: dict[int, Any],
             continue
         store.record(n.key(), rn[0], rn[1])
         recorded += 1
+    if recorded:
+        metrics = getattr(ctx, "metrics", None)
+        if metrics is not None:
+            metrics.inc("stats.cardinalities", recorded)
     # engines that meter their own peak (MemoryMeter, device-buffer
     # accounting) announce it via ctx.last_run_peak_engine — record *this
     # run's* peak under that engine's namespace (the session-cumulative

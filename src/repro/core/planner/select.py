@@ -482,15 +482,18 @@ def plan_placement(roots: list[G.Node], ctx) -> list[Decision]:
     # only genuinely measured engines appear in the calibration line —
     # unmeasured candidates are priced at the median of the known scales,
     # and printing that default as if profiled would mislead debugging
+    from ...obs.events import PlannerEvent
     measured = store.calibration() if store is not None else {}
     if measured:
-        ctx.planner_trace.append(
+        ctx.planner_trace.append(PlannerEvent(
             "auto: calibration " + " ".join(
-                f"{name}={v:.3g}s/w" for name, v in sorted(measured.items())))
+                f"{name}={v:.3g}s/w" for name, v in sorted(measured.items())),
+            kind="calibration", scales=dict(measured)))
     if peak_scales:
-        ctx.planner_trace.append(
+        ctx.planner_trace.append(PlannerEvent(
             "auto: peak-calibration " + " ".join(
-                f"{name}=x{v:.3g}" for name, v in sorted(peak_scales.items())))
+                f"{name}=x{v:.3g}" for name, v in sorted(peak_scales.items())),
+            kind="peak-calibration", scales=dict(peak_scales)))
     for si, d in enumerate(decisions):
         ids = ",".join(f"#{r.id}" for r in d.roots)
         alts = ", ".join(d.rejected.values()) or "-"
@@ -499,9 +502,13 @@ def plan_placement(roots: list[G.Node], ctx) -> list[Decision]:
         cal = f"cal=x{d.scale:.3g}"
         if measured and d.cost.backend not in measured:
             cal += "(default)"
-        ctx.planner_trace.append(
+        ctx.planner_trace.append(PlannerEvent(
             f"auto: seg{si} root{ids} ops={len(d.nodes)} -> {d.cost.backend} "
             f"cost={d.cost.total * d.scale:.3g} "
             f"peak={d.cost.peak_bytes / 1e6:.1f}MB {cal}"
-            f"{hand} | {alts}")
+            f"{hand} | {alts}",
+            kind="segment", segment=si, engine=str(d.cost.backend),
+            cost=d.cost.total * d.scale, peak_bytes=d.cost.peak_bytes,
+            root_ids=tuple(r.id for r in d.roots),
+            boundary=tuple(b.id for b in d.boundary)))
     return decisions

@@ -41,54 +41,59 @@ def execute(roots: list[G.Node], live_df=None,
     ctx.force_log.append(force_reason or "compute")
     live_nodes = _live_nodes_from(live_df)
 
-    all_roots = list(roots)
-    sink_roots: list[G.Node] = []
-    if ctx.last_sink is not None:
-        sink_roots = [ctx.last_sink]
-        all_roots = sink_roots + all_roots
+    # "execute" is the root telemetry span of one force point; a no-op
+    # unless a profile is attached to this session's tracer (pd.profile()).
+    with ctx.tracer.span("execute", force_reason=force_reason or "compute",
+                         engine=ctx.backend) as exec_span:
+        all_roots = list(roots)
+        sink_roots: list[G.Node] = []
+        if ctx.last_sink is not None:
+            sink_roots = [ctx.last_sink]
+            all_roots = sink_roots + all_roots
 
-    # §3.5 reuse: substitute cached subexpressions BEFORE optimization so
-    # physical rewrites (column narrowing, dead-assign elimination) can't
-    # change the lookup key.
-    if ctx.persist_cache:
-        from .optimizer import _rebuild
-        replace = {}
-        for n in G.walk(all_roots):
-            if isinstance(n, G.Materialized) or isinstance(n, G.SinkPrint):
-                continue
-            hit = ctx.persist_cache.get(n.key())
-            if hit is not None and isinstance(hit, dict):
-                ctx.persist_stats["hits"] += 1
-                replace[n.id] = G.Materialized(hit, n.key())
-        if replace:
-            all_roots, sub_map = _rebuild(all_roots, replace)
-            live_nodes = [sub_map.get(n.id, n) for n in live_nodes]
-            roots = [sub_map.get(n.id, n) for n in roots]
-            if sink_roots:
-                sink_roots = [all_roots[0]]
+        # §3.5 reuse: substitute cached subexpressions BEFORE optimization so
+        # physical rewrites (column narrowing, dead-assign elimination) can't
+        # change the lookup key.
+        if ctx.persist_cache:
+            from .optimizer import _rebuild
+            replace = {}
+            for n in G.walk(all_roots):
+                if isinstance(n, G.Materialized) or isinstance(n, G.SinkPrint):
+                    continue
+                hit = ctx.persist_cache.get(n.key())
+                if hit is not None and isinstance(hit, dict):
+                    ctx.persist_stats["hits"] += 1
+                    replace[n.id] = G.Materialized(hit, n.key())
+            if replace:
+                all_roots, sub_map = _rebuild(all_roots, replace)
+                live_nodes = [sub_map.get(n.id, n) for n in live_nodes]
+                roots = [sub_map.get(n.id, n) for n in roots]
+                if sink_roots:
+                    sink_roots = [all_roots[0]]
 
-    persist_ids = plan_persists(all_roots, live_nodes)
-    apply_persist_marks(all_roots, persist_ids)
-    logical_keys = {n.id: n.key() for n in G.walk(all_roots)}
+        persist_ids = plan_persists(all_roots, live_nodes)
+        apply_persist_marks(all_roots, persist_ids)
+        logical_keys = {n.id: n.key() for n in G.walk(all_roots)}
 
-    opt_roots, idmap = optimize(all_roots, ctx)
-    # re-mark persists on the rewritten nodes; store under the LOGICAL key
-    for old_id in persist_ids:
-        if old_id in idmap:
-            idmap[old_id].persist = True
-            idmap[old_id].cache_key = logical_keys[old_id]
+        opt_roots, idmap = optimize(all_roots, ctx)
+        # re-mark persists on the rewritten nodes; store under the LOGICAL key
+        for old_id in persist_ids:
+            if old_id in idmap:
+                idmap[old_id].persist = True
+                idmap[old_id].cache_key = logical_keys[old_id]
 
-    results, backend_name = _dispatch(opt_roots, ctx)
+        results, backend_name = _dispatch(opt_roots, ctx)
+        exec_span.set(executed=backend_name)
 
-    # planner feedback (§ runtime optimization): observed cardinalities
-    # recalibrate future estimates for repeated plans
-    from .planner.feedback import record_execution
-    record_execution(opt_roots, results, ctx, backend_name)
-    # typed run record (segments + handoffs) for pd.explain()
-    from .explain import record_run
-    record_run(ctx, force_reason or "compute", backend_name, opt_roots)
-    if getattr(ctx, "stats_path", None):
-        ctx.stats_store.save(ctx.stats_path)
+        # planner feedback (§ runtime optimization): observed cardinalities
+        # recalibrate future estimates for repeated plans
+        from .planner.feedback import record_execution
+        record_execution(opt_roots, results, ctx, backend_name)
+        # typed run record (segments + handoffs) for pd.explain()
+        from .explain import record_run
+        record_run(ctx, force_reason or "compute", backend_name, opt_roots)
+        if getattr(ctx, "stats_path", None):
+            ctx.stats_store.save(ctx.stats_path)
 
     if sink_roots:
         ctx.sinks_flushed()
@@ -130,22 +135,24 @@ def _dispatch(opt_roots, ctx):
     """Run the optimized plan: fixed engine, or cost-based AUTO placement
     (plan → select → chain engine segments through Handoff pipe breakers).
 
-    Every execution records an (estimated work, wall seconds) sample into
-    ``ctx.stats_store`` so the planner's cost constants converge to
-    measured values (runtime calibration)."""
-    import time
-
+    Spans are the single timing instrumentation point: every engine run
+    executes inside a ``timed_span`` whose duration feeds the planner's
+    cost calibration (``StatsStore.record_runtime``) — and, when a profile
+    is attached, lands in the profile's span tree."""
     engine = ctx.backend
     if engine != AUTO:
         backend = create_engine(engine, ctx.backend_options)
         ctx.planner_decisions = []
-        t0 = time.perf_counter()
-        results = backend.execute(opt_roots, ctx)
-        _record_runtime_sample(opt_roots, ctx, engine, backend.name,
-                               time.perf_counter() - t0)
+        with ctx.tracer.timed_span("segment", engine=backend.name,
+                                   segment=0) as sp:
+            results = backend.execute(opt_roots, ctx)
+        ctx._last_segment_spans = {0: sp.id}
+        _record_runtime_sample(opt_roots, ctx, engine, backend.name, sp)
         return results, backend.name
     from .planner.select import plan_placement
-    decisions = plan_placement(opt_roots, ctx)
+    with ctx.tracer.span("plan", engine=AUTO) as psp:
+        decisions = plan_placement(opt_roots, ctx)
+        psp.set(segments=len(decisions))
     ctx.planner_decisions = decisions
     return execute_segments(decisions, ctx,
                             final_root_ids={r.id for r in opt_roots})
@@ -166,14 +173,15 @@ def execute_segments(decisions, ctx, final_root_ids=frozenset()):
 
     ``final_root_ids`` are plan roots the caller will unwrap: those are
     always gathered to host values."""
-    import time
-
     from . import physical as X
+    from ..obs.events import PlannerEvent
+    from ..obs.spans import bytes_of
     results: dict[int, object] = {}
     names: list[str] = []
     produced: dict[int, object] = {}     # original node id -> handoff payload
     handoff_events: list[dict] = []
-    store = getattr(ctx, "stats_store", None)
+    segment_spans: dict[int, int] = {}   # segment index -> span id
+    tracer = ctx.tracer
     # who consumes each cross-segment value, by engine
     consumers: dict[int, set] = {}
     for d in decisions:
@@ -191,34 +199,45 @@ def execute_segments(decisions, ctx, final_root_ids=frozenset()):
                 and all(c == d.backend for c in consumers[orig.id])}
         keep = frozenset(new.id for orig, new in zip(d.roots, seg_roots)
                          if orig.id in device_resident)
-        t0 = time.perf_counter()
-        if keep:
-            vals = backend.execute(seg_roots, ctx, keep_sharded=keep)
-        else:
-            vals = backend.execute(seg_roots, ctx)
-        seconds = time.perf_counter() - t0
-        if store is not None:
-            store.record_runtime(backend.name, d.cost.total, seconds)
-            observed_peak = getattr(ctx, "last_run_peak_bytes", 0)
-            if (observed_peak and getattr(ctx, "last_run_peak_engine", None)
-                    == backend.name):
-                raw_est = (d.cost.raw_peak_bytes
-                           if d.cost.raw_peak_bytes is not None
-                           else d.cost.peak_bytes)
-                store.record_peak(backend.name, observed_peak,
-                                  est_peak=raw_est)
+        with tracer.timed_span("segment", engine=backend.name, segment=si,
+                               est_work=d.cost.total) as sp:
+            if keep:
+                vals = backend.execute(seg_roots, ctx, keep_sharded=keep)
+            else:
+                vals = backend.execute(seg_roots, ctx)
+        segment_spans[si] = sp.id
+        raw_est_peak = (d.cost.raw_peak_bytes
+                        if d.cost.raw_peak_bytes is not None
+                        else d.cost.peak_bytes)
+        _record_calibration(ctx, backend.name, d.cost.total,
+                            raw_est_peak, sp)
         for orig, new in zip(d.roots, seg_roots):
             v = vals[new.id]
             results[orig.id] = v
+            is_boundary = bool(consumers.get(orig.id))
             if orig.id in device_resident:
                 produced[orig.id] = v        # device payload, stays resident
-                ctx.planner_trace.append(
+                ctx.planner_trace.append(PlannerEvent(
                     f"auto: handoff #{orig.id} seg{si} "
                     f"payload={type(v).__name__} device-resident "
-                    f"({d.cost.backend}->{d.cost.backend})")
+                    f"({d.cost.backend}->{d.cost.backend})",
+                    kind="handoff", node_id=orig.id, segment=si,
+                    payload=type(v).__name__, device_resident=True,
+                    producer=str(d.cost.backend)))
+                tracer.event("handoff", node_id=orig.id, segment=si,
+                             device_resident=True, bytes_moved=0,
+                             payload=type(v).__name__)
+            elif is_boundary:
+                with tracer.span("handoff", node_id=orig.id, segment=si,
+                                 device_resident=False) as hsp:
+                    produced[orig.id] = X.to_host_value(v)
+                    if hsp:
+                        hsp.set(
+                            bytes_moved=bytes_of(produced[orig.id]),
+                            payload=type(produced[orig.id]).__name__)
             else:
                 produced[orig.id] = X.to_host_value(v)
-            if consumers.get(orig.id):
+            if is_boundary:
                 payload = produced[orig.id]
                 handoff_events.append({
                     "node_id": orig.id, "segment": si,
@@ -230,6 +249,7 @@ def execute_segments(decisions, ctx, final_root_ids=frozenset()):
         if backend.name not in names:
             names.append(backend.name)
     ctx._last_handoff_events = handoff_events
+    ctx._last_segment_spans = segment_spans
     return results, "+".join(names) or AUTO
 
 
@@ -265,10 +285,32 @@ def _segment_subgraph(d, produced: dict[int, object]) -> list[G.Node]:
     return [rec(r) for r in d.roots]
 
 
+def _record_calibration(ctx, backend_name: str, est_total, raw_est_peak,
+                        span) -> None:
+    """THE single feed into ``StatsStore``: pair a finished engine span's
+    wall time with the plan's estimated work (runtime calibration), and —
+    when the engine metered its own peak — the observed peak with the
+    estimated one (peak calibration)."""
+    store = getattr(ctx, "stats_store", None)
+    if store is None:
+        return
+    metrics = getattr(ctx, "metrics", None)
+    store.record_runtime(backend_name, est_total, span.duration)
+    if metrics is not None:
+        metrics.inc("calibration.runtime_samples")
+    observed_peak = getattr(ctx, "last_run_peak_bytes", 0)
+    if (observed_peak and getattr(ctx, "last_run_peak_engine", None)
+            == backend_name):
+        span.set(peak_bytes=observed_peak)
+        store.record_peak(backend_name, observed_peak, est_peak=raw_est_peak)
+        if metrics is not None:
+            metrics.inc("calibration.peak_samples")
+
+
 def _record_runtime_sample(opt_roots, ctx, kind, backend_name: str,
-                           seconds: float) -> None:
+                           span) -> None:
     """Calibration sample for a fixed-engine run: estimate the plan's work
-    with the a-priori cost model and pair it with the measured wall time.
+    with the a-priori cost model and pair it with the span's wall time.
     Best-effort — estimation failures never affect execution."""
     store = getattr(ctx, "stats_store", None)
     if store is None:
@@ -285,11 +327,8 @@ def _record_runtime_sample(opt_roots, ctx, kind, backend_name: str,
         stats = estimate_plan(opt_roots, ctx)
         est = plan_cost(opt_roots, stats, kind,
                         ctx.backend_options.get("chunk_rows", 1 << 16))
-        store.record_runtime(backend_name, est.total, seconds)
-        observed_peak = getattr(ctx, "last_run_peak_bytes", 0)
-        if (observed_peak and getattr(ctx, "last_run_peak_engine", None)
-                == backend_name):
-            store.record_peak(backend_name, observed_peak,
-                              est_peak=est.peak_bytes)
+        span.set(est_work=est.total)
+        _record_calibration(ctx, backend_name, est.total, est.peak_bytes,
+                            span)
     except Exception:  # noqa: BLE001 — calibration is advisory
         pass

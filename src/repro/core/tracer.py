@@ -1,138 +1,23 @@
-"""`analyze()` — Just-in-Time static analysis entry point (paper §2.4).
+"""DEPRECATED shim — this module never was a tracer.
 
-Two forms, both using reflection to find the program source (paper Fig. 5):
-
-* ``pd.analyze()`` as the first statement of a script — inspects the calling
-  module's source, runs the `ast` analyses, and installs the results in the
-  context.  Because our API is already lazy, no textual rewrite is needed:
-  the "rewritten program" is the original program executing against hints
-  (usecols at read sites, live_df at force sites) looked up by call-site
-  line number — semantically identical to the paper's injected arguments.
-
-* ``@analyze`` on a function — analyzes the function body and installs hints
-  before invoking it.
+``repro.core.tracer`` held the JIT *static-analysis* entry point
+(``analyze()``), a name collision waiting to happen once the repo grew a
+real tracing subsystem (``repro.obs``).  The implementation now lives in
+``repro.core.jit_analyze``; import from there.  This shim re-exports the
+full public surface and warns on import.
 """
 from __future__ import annotations
 
-import functools
-import inspect
-import sys
-import time
+import warnings
 
-from .context import get_context
-from .source_analysis import analyze_source
+warnings.warn(
+    "repro.core.tracer is deprecated (it is the JIT static-analysis entry "
+    "point, not a tracer); import repro.core.jit_analyze instead — the "
+    "tracing subsystem lives in repro.obs",
+    DeprecationWarning, stacklevel=2)
 
-# Frames from any engine-internal package are skipped when reflecting on the
-# user program: the core layers and the repro.pandas facade both re-export
-# analyze()/read_* entry points.
-_INTERNAL_PREFIXES = ("repro.core", "repro.pandas")
+from .jit_analyze import (analyze, live_frames_hint, usecols_hint,  # noqa: E402,F401
+                          user_call_lineno, user_frame_locals)
 
-
-def _is_internal(module_name: str) -> bool:
-    return module_name.startswith(_INTERNAL_PREFIXES)
-
-
-def _install_lazy_builtins(globs: dict):
-    """The paper's program rewriter substitutes print/len with their lazy
-    sink-building versions.  For a script (``__main__``) we do the same at
-    analyze() time by rebinding the caller module's globals — this is what
-    makes the facade a true two-line change (no third import for lazy
-    print)."""
-    from . import func as lazy_func
-    if "print" not in globs:
-        globs["print"] = lazy_func.print
-    if "len" not in globs:
-        globs["len"] = lazy_func.len
-
-
-def analyze(fn=None):
-    if fn is None:
-        # script mode: reflect on the caller; analysis is installed in the
-        # *current session's* context (session-scoped, not process-global)
-        ctx = get_context()
-        frame = sys._getframe(1)
-        # skip facade/shim frames if called via repro.pandas / repro.core.lazy
-        while frame and _is_internal(frame.f_globals.get("__name__", "")):
-            frame = frame.f_back
-        if frame.f_globals.get("__name__") == "__main__":
-            _install_lazy_builtins(frame.f_globals)
-        try:
-            source = inspect.getsource(sys.modules[frame.f_globals["__name__"]])
-        except Exception:
-            try:
-                with open(frame.f_code.co_filename) as f:
-                    source = f.read()
-            except Exception:
-                ctx.analysis = {}
-                return None
-        t0 = time.perf_counter()
-        res = analyze_source(source)
-        ctx.analysis = res.as_context_dict()
-        ctx.analysis["jit_seconds"] = time.perf_counter() - t0
-        return res
-
-    @functools.wraps(fn)
-    def wrapped(*args, **kwargs):
-        # look up the context at call time: the function may run inside a
-        # session() block created after decoration
-        ctx = get_context()
-        t0 = time.perf_counter()
-        try:
-            source = inspect.getsource(fn)
-            res = analyze_source(source)
-            ctx.analysis = res.as_context_dict()
-        except (OSError, TypeError):
-            ctx.analysis = {}
-        ctx.analysis["jit_seconds"] = time.perf_counter() - t0
-        return fn(*args, **kwargs)
-
-    return wrapped
-
-
-def user_call_lineno() -> int | None:
-    """Line number of the nearest stack frame outside repro.core — the
-    call-site key for static-analysis hints."""
-    frame = sys._getframe(1)
-    while frame is not None:
-        mod = frame.f_globals.get("__name__", "")
-        if not _is_internal(mod):
-            return frame.f_lineno
-        frame = frame.f_back
-    return None
-
-
-def user_frame_locals() -> dict:
-    frame = sys._getframe(1)
-    while frame is not None:
-        mod = frame.f_globals.get("__name__", "")
-        if not _is_internal(mod):
-            return frame.f_locals
-        frame = frame.f_back
-    return {}
-
-
-def usecols_hint() -> list[str] | None:
-    """usecols for the read_* call currently executing, if analysis has one."""
-    ctx = get_context()
-    usecols = ctx.analysis.get("usecols") if ctx.analysis else None
-    if not usecols:
-        return None
-    lineno = user_call_lineno()
-    return usecols.get(lineno) if lineno is not None else None
-
-
-def live_frames_hint() -> list | None:
-    """live_df for the force point currently executing (paper §3.5)."""
-    from .lazyframe import LazyFrame
-    ctx = get_context()
-    live_at = ctx.analysis.get("live_at") if ctx.analysis else None
-    if not live_at:
-        return None
-    lineno = user_call_lineno()
-    if lineno is None or lineno not in live_at:
-        return None
-    names = live_at[lineno]
-    local = user_frame_locals()
-    frames = [local[n] for n in names
-              if isinstance(local.get(n), LazyFrame)]
-    return frames or None
+__all__ = ["analyze", "usecols_hint", "live_frames_hint",
+           "user_call_lineno", "user_frame_locals"]

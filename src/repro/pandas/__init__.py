@@ -44,8 +44,9 @@ from repro.core.engines import (BackendCapability, create_engine,
                                 unregister_engine)
 from repro.core.explain import ExplainReport, explain
 from repro.core.lazyframe import LazyColumn, LazyFrame, Result
+from repro.core.jit_analyze import analyze
 from repro.core.runtime import flush
-from repro.core.tracer import analyze
+from repro.obs import Profile, profile
 
 from .api import DataFrame, Series, concat, isna, merge, notna, to_datetime
 from .fallback import FallbackEvent, record_fallback
@@ -62,6 +63,7 @@ __all__ = [
     "get_capability", "create_engine", "BackendCapability",
     "explain", "ExplainReport",
     "FallbackEvent", "record_fallback",
+    "profile", "Profile",
 ]
 
 

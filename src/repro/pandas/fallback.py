@@ -43,7 +43,18 @@ class FallbackEvent:
 def record_fallback(op: str, shape: tuple | None, reason: str,
                     status: str = "fallback") -> FallbackEvent:
     ev = FallbackEvent(op, shape, reason, status)
-    get_context().fallback_trace.append(ev)
+    ctx = get_context()
+    ctx.fallback_trace.append(ev)
+    # telemetry (repro.obs): count served/failed fallbacks, and — when a
+    # profile is attached — record an instant "fallback" event span
+    metrics = getattr(ctx, "metrics", None)
+    if metrics is not None:
+        metrics.inc("fallback.failed" if status == "failed"
+                    else "fallback.served")
+    tracer = getattr(ctx, "tracer", None)
+    if tracer is not None and tracer.enabled:
+        tracer.event("fallback", op=op, status=status, reason=reason,
+                     **({"shape": shape} if shape else {}))
     return ev
 
 

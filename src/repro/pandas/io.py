@@ -13,7 +13,7 @@ from repro.core import graph as G
 from repro.core.context import get_context
 from repro.core.lazyframe import LazyFrame, read_source as _read_source
 from repro.core.source import InMemorySource, encode_strings
-from repro.core.tracer import usecols_hint
+from repro.core.jit_analyze import usecols_hint
 
 # Tokens treated as missing values during inference (case-insensitive).
 _NA_TOKENS = frozenset({"", "na", "n/a", "nan", "null", "none"})

@@ -148,3 +148,55 @@ def test_default_session_still_works_for_module_scripts():
     assert base.session_name == "default"
     # the test fixture pushed a session, so the default is shadowed
     assert get_context() is not base
+
+
+def test_concurrent_sessions_profile_isolation(rng):
+    """Telemetry is session-scoped: two threads profiling their own
+    sessions each collect only their own spans and counters — no
+    cross-talk through the module-global tracing gate."""
+    from repro.obs import profile
+
+    results = {}
+    errors = []
+    barrier = threading.Barrier(2)
+
+    def worker(name, n_rows):
+        try:
+            with pd.session(engine="auto", name=name) as ctx:
+                barrier.wait(timeout=10)
+                with profile() as prof:
+                    for _ in range(3):
+                        df = pd.from_arrays(
+                            {"x": np.arange(float(n_rows)),
+                             "tag": np.full(n_rows, hash(name) % 97)})
+                        res = df[df["x"] > 1].compute()
+                        assert res.rows() == n_rows - 2
+                results[name] = (prof, ctx)
+        except Exception as e:  # noqa: BLE001
+            errors.append(e)
+
+    threads = [threading.Thread(target=worker, args=("prof-a", 64)),
+               threading.Thread(target=worker, args=("prof-b", 128))]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    assert not errors, errors
+
+    for name, n_rows in (("prof-a", 64), ("prof-b", 128)):
+        prof, ctx = results[name]
+        # every span was produced on this session's own thread
+        assert prof.session == name
+        execs = prof.find("execute")
+        assert len(execs) == 3
+        tids = {s.thread_id for s in prof.spans}
+        assert len(tids) == 1
+        # operator row counts reflect THIS session's data, not the other's
+        for s in prof.find("operator", op="filter"):
+            assert s.attrs.get("rows_in") == n_rows
+        # counters are per-session: each profiled block recorded its own
+        # calibration samples, not the union of both threads' work
+        assert prof.counters.get("calibration.runtime_samples", 0) >= 1
+    a_spans = {s.id for s in results["prof-a"][0].spans}
+    b_spans = {s.id for s in results["prof-b"][0].spans}
+    assert not a_spans & b_spans
