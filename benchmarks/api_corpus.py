@@ -33,13 +33,13 @@ def feature_engineering(pd, rng):
     df = _taxi(pd, rng)
     df["day"] = df["pickup"].dt.dayofweek
     df["quarter"] = df["pickup"].dt.quarter        # fallback: wrapped UDF
-    df["fare_clipped"] = df["fare"].clip(0, 50)    # fallback: wrapped UDF
+    df["fare_clipped"] = df["fare"].clip(0, 50)    # native: rowwise expr
     return df.groupby("quarter")["fare_clipped"].sum().compute()
 
 
 def order_statistics(pd, rng):
     df = _taxi(pd, rng)
-    top = df.nlargest(10, "fare")                  # fallback: materialize
+    top = df.nlargest(10, "fare")                  # native: TopK(select)
     return top["fare"].median()                    # fallback: materialize
 
 

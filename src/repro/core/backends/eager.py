@@ -66,6 +66,8 @@ class EagerBackend:
             return X.apply_drop_duplicates(vals[0], n.subset)
         if isinstance(n, G.Head):
             return X.apply_head(vals[0], n.n)
+        if isinstance(n, G.TopK):
+            return X.apply_top_k(vals[0], n.by, n.n, n.ascending, n.mode)
         if isinstance(n, G.MapRows):
             return X.apply_map_rows(vals[0], n.fn)
         if isinstance(n, G.GroupByAgg):

@@ -286,9 +286,41 @@ class StreamingBackend:
             out = X.apply_sort(table, n.by, n.ascending)
             self._maybe_persist(n, out)
             return out
+        if isinstance(n, G.TopK):
+            return self._topk_streaming(n)
         # generic: materialize the stream
         table = self._materialize(n)
         return table
+
+    def _topk_streaming(self, n: G.TopK) -> Table:
+        """Bounded top-k: hold at most ~n rows plus one chunk, never the
+        whole input.  An explicit global row position is appended as the
+        least-significant sort key so cross-chunk tie order is exactly the
+        whole-table kernel's (stable = position order); for the pandas
+        ``nlargest`` mode the position is negated so descending keys still
+        keep first occurrences."""
+        meter = self._meter
+        pos_col = "__topk_pos__"
+        sign = -1 if (n.mode == "select" and not n.ascending) else 1
+        best: Table | None = None
+        offset = 0
+        for part in self.stream(n.inputs[0]):
+            rows = X.table_rows(part)
+            part = dict(part)
+            part[pos_col] = sign * np.arange(offset, offset + rows,
+                                             dtype=np.int64)
+            offset += rows
+            merged = part if best is None else {
+                k: np.concatenate([best[k], part[k]]) for k in best}
+            prev = X.table_nbytes(best) if best is not None else 0
+            best = X.apply_top_k(merged, tuple(n.by) + (pos_col,), n.n,
+                                 n.ascending, n.mode)
+            meter.alloc(max(0, X.table_nbytes(best) - prev), f"topk#{n.id}")
+        if best is None:
+            return {}
+        best.pop(pos_col, None)
+        self._maybe_persist(n, best)
+        return best
 
     def _materialize_for_breaker(self, child: G.Node, where: str) -> Table:
         parts = list(self.stream(child))

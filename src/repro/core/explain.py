@@ -94,6 +94,32 @@ class CalibrationRecord:
 
 
 @dataclasses.dataclass(frozen=True)
+class RewriteRecord:
+    """One fired plan rewrite (repro.core.rewrite): which rule replaced
+    which node, and the estimated whole-plan work delta (negative =
+    cheaper; None when pricing was unavailable)."""
+    rule: str
+    before_id: int
+    before_op: str
+    after_id: int
+    after_op: str
+    detail: str = ""
+    cost_delta: float | None = None
+
+
+@dataclasses.dataclass(frozen=True)
+class DiagnosticRecord:
+    """One pre-execution linter diagnostic (repro.lint), keyed to the user
+    program's source line."""
+    line: int
+    col: int
+    kind: str                           # e.g. "fallback.materialize"
+    message: str
+    symbol: str = ""
+    level: str = "info"                 # "info" | "warn"
+
+
+@dataclasses.dataclass(frozen=True)
 class RunRecord:
     """One force point (``execute()`` call)."""
     index: int
@@ -102,6 +128,7 @@ class RunRecord:
     executed: tuple[str, ...]           # engines that actually ran
     segments: tuple[SegmentRecord, ...]
     handoffs: tuple[HandoffRecord, ...]
+    rewrites: tuple[RewriteRecord, ...] = ()
 
 
 @dataclasses.dataclass(frozen=True)
@@ -111,6 +138,7 @@ class ExplainReport:
     runs: tuple[RunRecord, ...]
     fallbacks: tuple[FallbackRecord, ...]
     calibration: tuple[CalibrationRecord, ...]
+    diagnostics: tuple[DiagnosticRecord, ...] = ()
 
     # -- rendering ----------------------------------------------------------
 
@@ -123,6 +151,13 @@ class ExplainReport:
             lines.append(
                 f"run {run.index} ({run.force_reason}): {run.engine}"
                 f" -> {'+'.join(run.executed) or '-'}")
+            for rw in run.rewrites:
+                delta = ("" if rw.cost_delta is None
+                         else f" Δwork={rw.cost_delta:+.3g}")
+                det = f" ({rw.detail})" if rw.detail else ""
+                lines.append(
+                    f"  rewrite {rw.rule}: {rw.before_op}#{rw.before_id}"
+                    f" -> {rw.after_op}#{rw.after_id}{det}{delta}")
             for seg in run.segments:
                 hand = ("".join(f" handoff<-#{b}" for b in seg.handoff_in)
                         if seg.handoff_in else "")
@@ -158,6 +193,10 @@ class ExplainReport:
             for f in self.fallbacks:
                 shape = "x".join(map(str, f.shape)) if f.shape else "?"
                 lines.append(f"  {f.status}: {f.op} [{shape}] {f.reason}")
+        if self.diagnostics:
+            lines.append(f"diagnostics: {len(self.diagnostics)}")
+            for d in self.diagnostics:
+                lines.append(f"  {d.level} L{d.line}: [{d.kind}] {d.message}")
         if self.calibration:
             parts = []
             for c in self.calibration:
@@ -219,6 +258,20 @@ def segment_records(decisions, span_ids: dict[int, int] | None = None
     return tuple(segs)
 
 
+def _drain_rewrites(ctx) -> tuple[RewriteRecord, ...]:
+    """Consume the rewrite events the optimizer queued for this force
+    point (``ctx._pending_rewrites``, filled by ``rewrite.apply_rewrites``)."""
+    pending = getattr(ctx, "_pending_rewrites", None)
+    if not pending:
+        return ()
+    out = tuple(RewriteRecord(
+        rule=ev.rule, before_id=ev.before_id, before_op=ev.before_op,
+        after_id=ev.after_id, after_op=ev.after_op, detail=ev.detail,
+        cost_delta=ev.cost_delta) for ev in pending)
+    pending.clear()
+    return out
+
+
 def record_run(ctx, force_reason: str, backend_name: str, opt_roots) -> None:
     """Append one typed RunRecord to ``ctx.run_records`` (called by
     ``runtime.execute`` after every force point)."""
@@ -248,7 +301,8 @@ def record_run(ctx, force_reason: str, backend_name: str, opt_roots) -> None:
         engine=str(ctx.backend),
         executed=tuple(str(backend_name).split("+")),
         segments=segments,
-        handoffs=handoffs))
+        handoffs=handoffs,
+        rewrites=_drain_rewrites(ctx)))
     if len(records) > 1024:              # bound long-lived sessions
         del records[: len(records) - 1024]
 
@@ -280,6 +334,19 @@ def _calibration_records(ctx) -> tuple[CalibrationRecord, ...]:
     return tuple(out)
 
 
+def _diagnostic_records(ctx) -> tuple[DiagnosticRecord, ...]:
+    """Linter diagnostics ``pd.analyze()`` attached to ``ctx.analysis``."""
+    diags = (getattr(ctx, "analysis", None) or {}).get("diagnostics") or ()
+    out = []
+    for d in diags:
+        out.append(DiagnosticRecord(
+            line=getattr(d, "line", 0), col=getattr(d, "col", 0),
+            kind=getattr(d, "kind", "?"), message=getattr(d, "message", ""),
+            symbol=getattr(d, "symbol", ""),
+            level=getattr(d, "level", "info")))
+    return tuple(out)
+
+
 def build_report(ctx) -> ExplainReport:
     """Typed report of everything ``ctx`` ran so far."""
     return ExplainReport(
@@ -287,7 +354,8 @@ def build_report(ctx) -> ExplainReport:
         engine=str(ctx.backend),
         runs=tuple(getattr(ctx, "run_records", ()) or ()),
         fallbacks=_fallback_records(ctx),
-        calibration=_calibration_records(ctx))
+        calibration=_calibration_records(ctx),
+        diagnostics=_diagnostic_records(ctx))
 
 
 def explain(obj=None, ctx=None) -> ExplainReport:
@@ -320,10 +388,12 @@ def explain(obj=None, ctx=None) -> ExplainReport:
         ctx.planner_trace = saved_trace
     run = RunRecord(
         index=0, force_reason="explain", engine=str(ctx.backend),
-        executed=(), segments=segment_records(decisions), handoffs=())
+        executed=(), segments=segment_records(decisions), handoffs=(),
+        rewrites=_drain_rewrites(ctx))
     return ExplainReport(
         session=getattr(ctx, "session_name", "?"),
         engine=str(ctx.backend),
         runs=(run,),
         fallbacks=(),
-        calibration=_calibration_records(ctx))
+        calibration=_calibration_records(ctx),
+        diagnostics=_diagnostic_records(ctx))

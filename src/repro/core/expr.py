@@ -238,6 +238,59 @@ class Cast(Expr):
 
 
 @dataclasses.dataclass(frozen=True, eq=False)
+class Clip(Expr):
+    """``Series.clip(lower, upper)`` — array-method based so it traces
+    through jit on both numpy and jnp columns."""
+    child: Expr
+    lower: Any = None
+    upper: Any = None
+
+    def used_cols(self):
+        return self.child.used_cols()
+
+    def evaluate(self, cols):
+        return self.child.evaluate(cols).clip(self.lower, self.upper)
+
+    def key(self):
+        return ("clip", repr(self.lower), repr(self.upper), self.child.key())
+
+    def bounds(self, zonemaps):
+        b = self.child.bounds(zonemaps)
+        if b is None:
+            return None
+        lo, hi = b
+        if self.lower is not None:
+            lo, hi = max(lo, self.lower), max(hi, self.lower)
+        if self.upper is not None:
+            lo, hi = min(lo, self.upper), min(hi, self.upper)
+        return (lo, hi)
+
+
+@dataclasses.dataclass(frozen=True, eq=False)
+class Round(Expr):
+    """``Series.round(decimals)`` — banker's rounding, matching numpy and
+    pandas ``round`` semantics."""
+    child: Expr
+    decimals: int = 0
+
+    def used_cols(self):
+        return self.child.used_cols()
+
+    def evaluate(self, cols):
+        return self.child.evaluate(cols).round(self.decimals)
+
+    def key(self):
+        return ("round", self.decimals, self.child.key())
+
+    def bounds(self, zonemaps):
+        b = self.child.bounds(zonemaps)
+        if b is None:
+            return None
+        pad = 0.5 * 10.0 ** (-self.decimals)
+        return (b[0] - pad, b[1] + pad)
+
+
+@dataclasses.dataclass(frozen=True, eq=False)
 class IsIn(Expr):
     child: Expr
     values: tuple

@@ -357,6 +357,46 @@ class Head(Node):
         return Head(inputs[0], self.n)
 
 
+class TopK(Node):
+    """First ``n`` rows of the stable sort by ``by`` — a partial sort that
+    never materializes the full permutation.  Produced by the rewrite pass
+    (``sort_values(by).head(n)``) and by native ``nlargest``/``nsmallest``
+    lowering; the planner prices it ≪ a full sort.
+
+    ``mode`` pins the tie/NaN semantics: ``"sort"`` is exactly
+    ``SortValues(by, ascending) → Head(n)`` (NaN keys travel with the sort,
+    descending reverses tie order); ``"select"`` is pandas
+    ``nlargest``/``nsmallest`` (NaN keys dropped, ties keep first
+    occurrence)."""
+    op = "top_k"
+
+    def __init__(self, child: Node, by: Sequence[str], n: int,
+                 ascending: bool = True, mode: str = "sort"):
+        super().__init__([child])
+        self.by = tuple(by)
+        self.n = int(n)
+        self.ascending = ascending
+        self.mode = mode
+
+    def used_attrs(self):
+        return frozenset(self.by)
+
+    def preserves_rows(self):
+        return False
+
+    def required_cols(self, live):
+        if live is None:
+            return [None]
+        return [live | frozenset(self.by)]
+
+    def key(self):
+        return ("topk", self.by, self.n, self.ascending, self.mode,
+                self.inputs[0].key())
+
+    def with_inputs(self, inputs):
+        return TopK(inputs[0], self.by, self.n, self.ascending, self.mode)
+
+
 class MapRows(Node):
     """Opaque row-wise UDF over the whole frame (pushdown barrier: unknown
     mod/used attrs, paper §3.2 'operators whose semantics are not known')."""

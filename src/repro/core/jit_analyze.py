@@ -21,6 +21,7 @@ from __future__ import annotations
 import functools
 import inspect
 import sys
+import textwrap
 import time
 
 from .context import get_context
@@ -73,6 +74,7 @@ def analyze(fn=None):
             t0 = time.perf_counter()
             res = analyze_source(source)
             ctx.analysis = res.as_context_dict()
+            _attach_diagnostics(ctx, source)
             jit = time.perf_counter() - t0
             ctx.analysis["jit_seconds"] = jit
             sp.set(jit_seconds=jit)
@@ -86,10 +88,25 @@ def analyze(fn=None):
         with ctx.tracer.span("analyze", mode="function") as sp:
             t0 = time.perf_counter()
             try:
-                source = inspect.getsource(fn)
+                # getsourcelines (not getsource): the hints are keyed by the
+                # *file* line numbers the call-site reflection reports, so a
+                # function defined mid-file must have its analysis shifted by
+                # its starting line; dedent handles nested/indented defs
+                # (whose raw source is a SyntaxError to ast.parse).
+                lines, start = inspect.getsourcelines(fn)
+                source = textwrap.dedent("".join(lines))
                 res = analyze_source(source)
                 ctx.analysis = res.as_context_dict()
-            except (OSError, TypeError):
+                offset = start - 1
+                if offset:
+                    ctx.analysis["usecols"] = {
+                        ln + offset: v
+                        for ln, v in ctx.analysis["usecols"].items()}
+                    ctx.analysis["live_at"] = {
+                        ln + offset: v
+                        for ln, v in ctx.analysis["live_at"].items()}
+                _attach_diagnostics(ctx, source, offset)
+            except (OSError, TypeError, SyntaxError):
                 ctx.analysis = {}
             jit = time.perf_counter() - t0
             ctx.analysis["jit_seconds"] = jit
@@ -97,6 +114,18 @@ def analyze(fn=None):
         return fn(*args, **kwargs)
 
     return wrapped
+
+
+def _attach_diagnostics(ctx, source: str, offset: int = 0) -> None:
+    """Run the pre-execution linter (repro.lint) over the analyzed program
+    and attach the findings — surfaced by ``pd.explain()`` and, when the
+    session is verbose, printed eagerly.  Linting is advisory: any failure
+    leaves the analysis usable."""
+    try:
+        from ..lint import lint_source
+        ctx.analysis["diagnostics"] = lint_source(source, offset=offset)
+    except Exception:  # noqa: BLE001 — the linter must never break analyze()
+        ctx.analysis["diagnostics"] = []
 
 
 def user_call_lineno() -> int | None:

@@ -75,6 +75,14 @@ class LazyColumn:
     def isin(self, values):
         return LazyColumn(self.frame, E.IsIn(self.expr, tuple(values)))
 
+    def clip(self, lower=None, upper=None):
+        if lower is None and upper is None:
+            return LazyColumn(self.frame, self.expr)
+        return LazyColumn(self.frame, E.Clip(self.expr, lower, upper))
+
+    def round(self, decimals=0):
+        return LazyColumn(self.frame, E.Round(self.expr, int(decimals)))
+
     def astype(self, dtype):
         return LazyColumn(self.frame, E.Cast(self.expr, str(np.dtype(dtype))))
 
@@ -408,6 +416,16 @@ class LazyFrame:
 
     def head(self, n=5):
         return LazyFrame(G.Head(self._node, n), source_vocab=self._vocab)
+
+    def nlargest(self, n, columns):
+        by = [columns] if isinstance(columns, str) else list(columns)
+        return LazyFrame(G.TopK(self._node, by, n, ascending=False,
+                                mode="select"), source_vocab=self._vocab)
+
+    def nsmallest(self, n, columns):
+        by = [columns] if isinstance(columns, str) else list(columns)
+        return LazyFrame(G.TopK(self._node, by, n, ascending=True,
+                                mode="select"), source_vocab=self._vocab)
 
     def groupby(self, keys):
         return GroupBy(self, keys)

@@ -469,8 +469,9 @@ def dtype_narrowing(roots: list[G.Node], ctx: LaFPContext | None,
 
 
 def optimize(roots: list[G.Node], ctx: LaFPContext | None = None,
-             enable: Iterable[str] = ("cse", "pushdown", "selectivity",
-                                      "columns", "zonemap", "dtypes")
+             enable: Iterable[str] = ("cse", "rewrite", "pushdown",
+                                      "selectivity", "columns", "zonemap",
+                                      "dtypes")
              ) -> tuple[list[G.Node], dict[int, G.Node]]:
     """Run the rule pipeline; returns (new_roots, combined id map)."""
     enable = set(enable)
@@ -486,6 +487,13 @@ def optimize(roots: list[G.Node], ctx: LaFPContext | None = None,
 
     if "cse" in enable:
         roots, m = cse(roots)
+        absorb(m)
+    if "rewrite" in enable and (ctx is None
+                                or ctx.backend_options.get("rewrites", True)):
+        # pattern rewrites run before pushdown: filter-through-concat and
+        # vectorized MapRows expose structure the later passes exploit
+        from .rewrite import apply_rewrites
+        roots, m, _ = apply_rewrites(roots, ctx, trace=trace)
         absorb(m)
     if "pushdown" in enable:
         roots, m = push_filters(roots, trace)

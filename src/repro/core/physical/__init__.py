@@ -32,7 +32,7 @@ from .rowwise import (apply_assign, apply_astype, apply_fillna, apply_filter,
 from .groupby import (_factorize, _factorize_multi, apply_groupby_agg,
                       combine_partials, partial_aggs)
 from .join import _factorize_multi_np_pair, apply_join
-from .sort import apply_drop_duplicates, apply_sort
+from .sort import apply_drop_duplicates, apply_sort, apply_top_k
 from .reduce import REDUCE_PARTIAL, apply_reduce
 from .sharded import (BROADCAST_BUILD_BYTES, ShardedTable, shard_host_table,
                       sharded_distinct, sharded_head, sharded_join,
@@ -45,7 +45,8 @@ __all__ = [
     "apply_astype", "apply_fillna", "apply_head", "apply_map_rows",
     "_factorize", "_factorize_multi", "apply_groupby_agg", "partial_aggs",
     "combine_partials", "apply_join", "_factorize_multi_np_pair",
-    "apply_sort", "apply_drop_duplicates", "apply_reduce", "REDUCE_PARTIAL",
+    "apply_sort", "apply_top_k", "apply_drop_duplicates", "apply_reduce",
+    "REDUCE_PARTIAL",
     "ShardedTable", "shard_host_table", "sharded_join", "sharded_sort",
     "sharded_distinct", "sharded_head", "BROADCAST_BUILD_BYTES",
 ]

@@ -32,7 +32,8 @@ from ..engines import default_registry
 from .stats import TableStats
 
 _LOG_OPS = ("sort_values", "drop_duplicates")  # n log n ops
-_BREAKERS = ("sort_values", "groupby_agg", "join", "drop_duplicates")
+_BREAKERS = ("sort_values", "groupby_agg", "join", "drop_duplicates",
+             "top_k")
 
 
 @dataclasses.dataclass
@@ -65,7 +66,11 @@ def node_work(n: G.Node, stats: dict[int, TableStats], cap) -> float:
         return _join_work(n, stats, cap)
     rows = max(in_rows, st.rows, 1.0)
     work = rows * cap.row_cost
-    if n.op in _LOG_OPS:
+    if isinstance(n, G.TopK):
+        # heap/partial-sort: linear selection over the input, log factor
+        # only in the kept k rows — ≪ a full sort's log2(rows)
+        work *= max(1.0, math.log2(min(float(n.n), rows) + 2.0))
+    elif n.op in _LOG_OPS:
         work *= max(1.0, math.log2(rows + 1))
     native = n.op in cap.native_ops
     if native:
@@ -201,6 +206,8 @@ def _chunked_peak(order, roots, stats, chunk_rows: int,
             state += stats[n.inputs[0].id].total_bytes   # materializes input
         elif isinstance(n, (G.GroupByAgg, G.DropDuplicates)):
             state += st.total_bytes                      # partials ≈ output
+        elif isinstance(n, G.TopK):
+            state += st.total_bytes                      # best-k accumulator
         elif n.id in root_ids and st.rows:
             state += st.total_bytes                      # root materialized
     return state + max_flow

@@ -240,7 +240,7 @@ def estimate_node(n: G.Node, child_stats: list[TableStats]) -> TableStats:
         return TableStats(rows=min(c.rows, distinct),
                           col_bytes=dict(c.col_bytes), ndv=dict(c.ndv),
                           zonemap=dict(c.zonemap))
-    if isinstance(n, G.Head):
+    if isinstance(n, (G.Head, G.TopK)):
         return TableStats(rows=min(float(n.n), c.rows),
                           col_bytes=dict(c.col_bytes), ndv=dict(c.ndv),
                           zonemap=dict(c.zonemap))

@@ -282,6 +282,8 @@ class PoolEngine:
             return {k: v[: n.n] for k, v in vals[0].items()}
         if isinstance(n, G.SortValues):
             return X.apply_sort(vals[0], n.by, n.ascending)
+        if isinstance(n, G.TopK):
+            return X.apply_top_k(vals[0], n.by, n.n, n.ascending, n.mode)
         if isinstance(n, G.DropDuplicates):
             return X.apply_drop_duplicates(vals[0], n.subset)
         if isinstance(n, G.GroupByAgg):

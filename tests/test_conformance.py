@@ -261,11 +261,18 @@ def test_every_corpus_program_has_a_reference():
     assert {name for name, _ in CORPUS} == set(_REFS)
 
 
+@pytest.mark.parametrize("rewrites", (True, False),
+                         ids=("rewrites", "no-rewrites"))
 @pytest.mark.parametrize("engine", ENGINES)
 @pytest.mark.parametrize("name,prog", CORPUS, ids=[n for n, _ in CORPUS])
-def test_conformance(engine, name, prog):
+def test_conformance(engine, name, prog, rewrites):
+    # every corpus program must be invariant under the plan-rewrite pass:
+    # session(rewrites=False) is the escape hatch users get, and running
+    # the whole corpus both ways is the differential proof the rules are
+    # semantics-preserving (not merely pandas-plausible)
     ctx = get_context()
     ctx.backend = engine
+    ctx.backend_options["rewrites"] = rewrites
     ctx.print_fn = lambda *a: None
     rng = np.random.default_rng(0)
     actual = prog(rpd, rng)

@@ -127,17 +127,15 @@ def test_backend_engine_is_session_scoped():
 # fallback protocol: round-trip correctness vs pure numpy
 
 
-def test_fallback_nlargest_matches_numpy(rng):
+def test_nlargest_native_matches_numpy(rng):
+    # nlargest lowers to the native TopK node — correct values, no fallback
     df, _ = _taxi_frame(rng)
     fares = np.asarray(df.compute()["fare"])
     top = np.asarray(df.nlargest(5, "fare").compute()["fare"])
     expect = np.sort(fares)[::-1][:5]
     np.testing.assert_allclose(top, expect)
-    ev = [e for e in get_context().fallback_trace
-          if e.op == "DataFrame.nlargest"]
-    assert ev and ev[0].status == "fallback"
-    assert ev[0].shape == (len(fares), 4)
-    assert ev[0].reason == "materialize-input"
+    assert not [e for e in get_context().fallback_trace
+                if e.op == "DataFrame.nlargest"]
 
 
 def test_fallback_series_stats_match_numpy(rng):
@@ -165,13 +163,26 @@ def test_fallback_value_counts_keeps_vocab():
 def test_fallback_elementwise_stays_lazy(rng):
     df, _ = _taxi_frame(rng)
     before = get_context().exec_count
-    clipped = df["fare"].clip(0, 50)       # wrapped UDF — must not force
+    rooted = df["fare"].sqrt()             # wrapped UDF — must not force
     assert get_context().exec_count == before
     ev = get_context().fallback_trace[-1]
-    assert ev.op == "Series.clip" and ev.reason == "wrapped-udf"
-    vals = np.asarray(clipped.compute())
-    ref = np.clip(np.asarray(df.compute()["fare"]), 0, 50)
+    assert ev.op == "Series.sqrt" and ev.reason == "wrapped-udf"
+    vals = np.asarray(rooted.compute())
+    ref = np.sqrt(np.asarray(df.compute()["fare"]))
     np.testing.assert_allclose(vals, ref)
+
+
+def test_clip_round_native_no_fallback(rng):
+    # clip/round are native rowwise exprs now — lazy, exact, no fallback
+    df, _ = _taxi_frame(rng)
+    before = get_context().exec_count
+    expr = df["fare"].clip(5, 40).round(1)
+    assert get_context().exec_count == before
+    vals = np.asarray(expr.compute())
+    ref = np.round(np.clip(np.asarray(df.compute()["fare"]), 5, 40), 1)
+    np.testing.assert_allclose(vals, ref, rtol=1e-6)  # float32 round
+    assert not [e for e in get_context().fallback_trace
+                if e.op in ("Series.clip", "Series.round")]
 
 
 def test_fallback_cumsum_is_whole_column_correct(rng):
@@ -223,11 +234,11 @@ def test_unsupported_program_completes_via_fallback(rng):
     completes with the op recorded rather than raising."""
     df, _ = _taxi_frame(rng)
     df = df[df["fare"] > 0]
-    top = df.nlargest(50, "fare")          # not native — fallback
+    top = df.nlargest(50, "fare")          # native TopK since the rewrite PR
     result = top.groupby("vendor").median()  # not native — fallback
     assert result.compute().rows() >= 1
     ops = {e.op for e in get_context().fallback_trace}
-    assert "DataFrame.nlargest" in ops and "GroupBy.median" in ops
+    assert "GroupBy.median" in ops and "DataFrame.nlargest" not in ops
 
 
 def test_shape_and_columns(rng):

@@ -93,6 +93,60 @@ def test_optimizer_soundness_random_pipelines(table, ops):
                                    rtol=1e-5, atol=1e-8)
 
 
+@st.composite
+def rewrite_idiom_ops(draw):
+    """Pipelines dense in the idioms the rewrite engine targets: sorted
+    heads, sort+dedup, vectorizable row-UDFs, filtered self-concats."""
+    ops = []
+    for _ in range(draw(st.integers(1, 4))):
+        kind = draw(st.sampled_from(
+            ["sort_head", "sort_head_desc", "sort_dedup", "udf",
+             "concat_filter", "filter_gt"]))
+        col = draw(st.sampled_from(COLS))
+        val = draw(st.integers(-5, 5))
+        ops.append((kind, col, val))
+    return ops
+
+
+def _apply_idioms(pd_mod, df, ops):
+    for kind, col, val in ops:
+        if kind == "sort_head":
+            df = df.sort_values(col).head(max(1, abs(val)) * 4)
+        elif kind == "sort_head_desc":
+            df = df.sort_values(col, ascending=False).head(max(1, abs(val)) * 4)
+        elif kind == "sort_dedup":
+            df = df.sort_values(col).drop_duplicates()
+        elif kind == "udf":
+            df = df.apply_rows(
+                lambda t, c=col, v=val: dict(t, **{f"u_{c}": t[c] * 2 + v}))
+        elif kind == "concat_filter":
+            cat = pd_mod.concat([df, df.head(20)])
+            df = cat[cat[col] > val]
+        elif kind == "filter_gt":
+            df = df[df[col] > val]
+    return df
+
+
+@settings(max_examples=25, deadline=None)
+@given(table=small_table(), ops=rewrite_idiom_ops())
+def test_rewritten_plans_equal_unrewritten(table, ops):
+    """Plan-rewrite soundness: for idiom-dense random pipelines, the
+    rewritten plan's result equals the plan with the rewrite pass disabled
+    (the ``session(rewrites=False)`` escape hatch), row order included."""
+    import repro.pandas as rpd
+    res = {}
+    for flag in (True, False):
+        with rpd.session(engine="eager", rewrites=flag) as ctx:
+            ctx.print_fn = lambda *a: None
+            df = rpd.from_arrays(table, partition_rows=32)
+            res[flag] = _values(_apply_idioms(rpd, df, ops).compute())
+    assert set(res[True]) == set(res[False])
+    for k in res[True]:
+        np.testing.assert_array_equal(np.asarray(res[True][k]),
+                                      np.asarray(res[False][k]),
+                                      err_msg=f"column {k!r}")
+
+
 @settings(max_examples=15, deadline=None)
 @given(table=small_table(), ops=pipeline_ops(),
        part=st.sampled_from([7, 32, 1000]))
