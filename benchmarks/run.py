@@ -14,6 +14,9 @@ Prints ``name,us_per_call,derived`` CSV rows.
                         native nlargest vs the old fallback path
 * observability       — telemetry overhead: uninstrumented vs disabled vs
                         profiled, plus the trace_golden Chrome trace
+* serving             — concurrent sessions over repeated plan shapes:
+                        p50/p99 latency and planning seconds, plan cache
+                        cold vs warm (serving.json)
 * roofline            — summary of dryrun_baseline.json when present
 
 Scale: REPRO_BENCH_SCALE rows for the taxi table (default 200k ≈ laptop
@@ -651,6 +654,138 @@ def observability():
     emit("observability_json", 0.0, path)
 
 
+def serving():
+    """Concurrent-serving figure: many sessions across threads running a
+    mixed workload of repeated plan shapes.  Reports p50/p99 request
+    latency and mean planning seconds cold (plan cache off) vs warm
+    (cache on, after warmup), plus the cache hit rate — the warm/cold
+    planning ratio is the headline number (CI asserts < 0.1)."""
+    import statistics
+    from concurrent.futures import ThreadPoolExecutor
+
+    import repro.core as core
+    from repro.core.context import session
+    from repro.core.planner.plancache import default_plan_cache
+
+    t_fig = time.perf_counter()
+    n = max(20_000, SCALE // 10)
+    rng = np.random.default_rng(42)
+    src = core.InMemorySource({
+        "fare": rng.uniform(0, 100, n),
+        "vendor": rng.integers(0, 4, n).astype(np.int64),
+        "tip": rng.uniform(0, 20, n),
+    }, partition_rows=max(1024, n // 16))
+
+    def p_groupby():
+        df = core.read_source(src)
+        return (df[df["fare"] > 50.0]
+                .groupby("vendor").agg({"total": ("tip", "sum")}).compute())
+
+    def p_topk():
+        df = core.read_source(src)
+        return df.sort_values("fare", ascending=False).head(25).compute()
+
+    def p_filter_sort():
+        df = core.read_source(src)
+        return df[df["tip"] > 15.0].sort_values("tip").compute()
+
+    programs = (p_groupby, p_topk, p_filter_sort)
+    threads, sessions_per_thread, rounds = 4, 2, 2
+    cache = default_plan_cache()
+
+    def serve_session(enable_cache, latencies, plan_secs):
+        with session(engine="auto", engines=("eager", "streaming"),
+                     plan_cache=enable_cache, name="serving") as ctx:
+            ctx.print_fn = lambda *a: None
+            for _ in range(rounds):
+                for prog in programs:
+                    t0 = time.perf_counter()
+                    prog()
+                    latencies.append(time.perf_counter() - t0)
+                    plan_secs.append(ctx.last_plan_seconds)
+
+    def run_tier(enable_cache):
+        """threads × sessions_per_thread concurrent sessions; returns the
+        pooled per-request latencies and planning seconds."""
+        def worker(_):
+            lat, plan = [], []
+            for _ in range(sessions_per_thread):
+                serve_session(enable_cache, lat, plan)
+            return lat, plan
+
+        all_lat, all_plan = [], []
+        with ThreadPoolExecutor(max_workers=threads) as pool:
+            for lat, plan in pool.map(worker, range(threads)):
+                all_lat.extend(lat)
+                all_plan.extend(plan)
+        return all_lat, all_plan
+
+    # cold tier: the plan-cache-off escape hatch — every request pays
+    # optimize + segment DP (same concurrency as the warm tier so the
+    # latency percentiles are comparable)
+    cold_lat, cold_plan = run_tier(False)
+
+    # warm tier: cache on, one serial warmup session, then concurrent load
+    cache.clear()
+    serve_session(True, [], [])
+    before = cache.stats()
+    warm_lat, warm_plan = run_tier(True)
+    after = cache.stats()
+
+    hits = after["hits"] - before["hits"]
+    misses = after["misses"] - before["misses"]
+    hit_rate = hits / max(1, hits + misses)
+    cold_plan_mean = statistics.fmean(cold_plan)
+    # planning cost on the warm tier measured on the hits themselves
+    # (bind time); falls back to the tier mean if nothing hit
+    warm_hit_mean = (
+        (after["mean_hit_plan_seconds"] * after["hits"]
+         - before["mean_hit_plan_seconds"] * before["hits"]) / hits
+        if hits else statistics.fmean(warm_plan))
+    ratio = warm_hit_mean / cold_plan_mean if cold_plan_mean else 0.0
+
+    def pct(xs, q):
+        xs = sorted(xs)
+        return xs[min(len(xs) - 1, int(q * len(xs)))]
+
+    out = {
+        "workload": {
+            "threads": threads,
+            "sessions_per_thread": sessions_per_thread,
+            "requests_per_session": rounds * len(programs),
+            "programs": [p.__name__ for p in programs],
+            "rows": n,
+        },
+        "cold": {
+            "requests": len(cold_lat),
+            "p50_seconds": pct(cold_lat, 0.50),
+            "p99_seconds": pct(cold_lat, 0.99),
+            "mean_plan_seconds": cold_plan_mean,
+        },
+        "warm": {
+            "requests": len(warm_lat),
+            "p50_seconds": pct(warm_lat, 0.50),
+            "p99_seconds": pct(warm_lat, 0.99),
+            "mean_plan_seconds": statistics.fmean(warm_plan),
+            "mean_hit_plan_seconds": warm_hit_mean,
+            "hits": hits,
+            "misses": misses,
+            "hit_rate": hit_rate,
+        },
+        "warm_cold_plan_ratio": ratio,
+        "meta": _bench_meta(t_fig),
+    }
+    path = os.environ.get("REPRO_SERVING_OUT", "serving.json")
+    with open(path, "w") as f:
+        json.dump(out, f, indent=2)
+    emit("serving_cold_p50", out["cold"]["p50_seconds"] * 1e6,
+         f"plan={cold_plan_mean * 1e6:.0f}us")
+    emit("serving_warm_p50", out["warm"]["p50_seconds"] * 1e6,
+         f"plan={warm_hit_mean * 1e6:.0f}us hit_rate={hit_rate:.2f}")
+    emit("serving_plan_ratio", ratio * 1e6,
+         f"warm/cold={ratio:.4f} json={path}")
+
+
 def roofline():
     path = os.path.join(os.path.dirname(__file__), "..",
                         "dryrun_baseline.json")
@@ -671,7 +806,7 @@ def roofline():
 ALL_FIGURES = (fig12_applicability, fig13_exec_time, fig14_speedup,
                fig15_memory, backend_selection, api_coverage, rewrites,
                analysis_overhead, ablation_persist, kernels, observability,
-               roofline)
+               serving, roofline)
 
 
 def main(argv: list[str] | None = None) -> None:

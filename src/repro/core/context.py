@@ -13,7 +13,25 @@ Engines are addressed by **string name** (``"eager"``, ``"streaming"``,
 ``repro.register_engine`` / the ``repro.engines`` entry-point group).
 ``BackendEngines`` survives as a deprecated ``str``-mixin enum alias layer:
 its members compare and hash equal to the plain names, so legacy code
-keeps working while new code writes ``session(engine="streaming")``."""
+keeps working while new code writes ``session(engine="streaming")``.
+
+Concurrency invariants (the contract the serving tests in
+``tests/test_serving.py`` pin down):
+
+* The session stack is **thread-local**: ``get_context()`` in one thread
+  never sees another thread's pushed sessions.  A serving worker must push
+  its own session (``with session(...)``) — the process-wide default
+  context is shared by every thread that never pushed one and is *not*
+  synchronized; concurrent work must not run against it.
+* Everything hanging off one ``LaFPContext`` (persist cache, stats store,
+  traces, run records) is owned by that session; two sessions share no
+  mutable state.  Sharing one context across threads is not supported.
+* Cross-session shared state is individually synchronized: the engine
+  registry (``RLock``), ``MetricsRegistry`` (lock per registry),
+  ``TraceLog`` (lock per log), the process-global plan cache
+  (``planner.plancache.PlanCache``, lock + immutable entries, fresh node
+  clones per hit), and the stats persistence files (``StatsStore.save`` /
+  ``load`` append to a log under an ``fcntl`` file lock)."""
 from __future__ import annotations
 
 import contextlib
@@ -99,6 +117,11 @@ class LaFPContext:
         if self.stats_path:
             self.stats_store.load(self.stats_path)
         self.planner_decisions: list[Any] = []  # last force point's Decisions
+        # plan cache (planner/plancache.py): repeated plan shapes skip
+        # optimize/rewrite/segment-DP.  Per-session opt-out via
+        # session(plan_cache=False); the cache itself is process-global.
+        self.plan_cache_enabled = True
+        self.last_plan_seconds: float = 0.0     # planning wall of last force point
         # structured per-force-point records (segments, handoffs) consumed
         # by ``repro.core.explain`` — the typed counterpart of the string
         # traces above
@@ -195,6 +218,7 @@ def session(engine: str | BackendEngines | None = None,
             engines: tuple | list | None = None,
             backend: str | BackendEngines | None = None,
             trace_limit: int | None = DEFAULT_TRACE_LIMIT,
+            plan_cache: bool = True,
             **backend_options):
     """Isolated execution session: fresh engine choice, persist cache,
     sink chain, stats store (planner feedback + runtime calibration), and
@@ -219,6 +243,11 @@ def session(engine: str | BackendEngines | None = None,
     re-saved after every execute — AUTO calibration survives process
     restarts.  ``REPRO_STATS_CACHE_DIR`` enables the same per-context
     persistence globally.
+
+    ``plan_cache=False`` opts the session out of the process-global plan
+    cache (``repro.core.planner.plancache``): every force point re-plans
+    from scratch — the escape hatch the conformance suite uses to prove
+    warm-hit results bit-identical to cold plans.
 
     ``trace_limit`` bounds the session's trace logs (``planner_trace``,
     ``fallback_trace``, ``force_log``, ``optimizer_trace``): the newest
@@ -245,6 +274,7 @@ def session(engine: str | BackendEngines | None = None,
     if stats_path is not None:
         ctx.stats_path = stats_path
         ctx.stats_store.load(stats_path)
+    ctx.plan_cache_enabled = bool(plan_cache)
     ctx.backend_options.update(backend_options)
     push_session(ctx)
     try:

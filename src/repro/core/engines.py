@@ -149,6 +149,7 @@ class EngineRegistry:
         self.capabilities: dict[str, BackendCapability] = {}
         self._lock = threading.RLock()
         self._bootstrapped = False
+        self._bootstrapping = False
         self._entry_points_loaded = False
         self._loading_entry_points = False
 
@@ -185,11 +186,20 @@ class EngineRegistry:
         if self._bootstrapped:
             return
         with self._lock:
-            if self._bootstrapped:
+            # flag flips only AFTER the import completes: a second thread
+            # must block on the lock until the built-ins exist, not sail
+            # through the fast path into an empty registry.  The separate
+            # in-progress flag breaks same-thread re-entrancy (the backends
+            # import can call back into the registry under this RLock).
+            if self._bootstrapped or self._bootstrapping:
                 return
+            self._bootstrapping = True
+            try:
+                import repro.core.backends  # noqa: F401 — registers built-ins
+                self.load_entry_points()
+            finally:
+                self._bootstrapping = False
             self._bootstrapped = True
-            import repro.core.backends  # noqa: F401 — registers built-ins
-            self.load_entry_points()
 
     def load_entry_points(self) -> None:
         """Discover installed plug-in engines (``repro.engines`` group).

@@ -129,6 +129,7 @@ class RunRecord:
     segments: tuple[SegmentRecord, ...]
     handoffs: tuple[HandoffRecord, ...]
     rewrites: tuple[RewriteRecord, ...] = ()
+    cached: bool = False                # plan served from the plan cache
 
 
 @dataclasses.dataclass(frozen=True)
@@ -150,7 +151,8 @@ class ExplainReport:
         for run in self.runs:
             lines.append(
                 f"run {run.index} ({run.force_reason}): {run.engine}"
-                f" -> {'+'.join(run.executed) or '-'}")
+                f" -> {'+'.join(run.executed) or '-'}"
+                f"{' cached=hit' if run.cached else ''}")
             for rw in run.rewrites:
                 delta = ("" if rw.cost_delta is None
                          else f" Δwork={rw.cost_delta:+.3g}")
@@ -302,7 +304,8 @@ def record_run(ctx, force_reason: str, backend_name: str, opt_roots) -> None:
         executed=tuple(str(backend_name).split("+")),
         segments=segments,
         handoffs=handoffs,
-        rewrites=_drain_rewrites(ctx)))
+        rewrites=_drain_rewrites(ctx),
+        cached=bool(getattr(ctx, "_last_plan_cached", False))))
     if len(records) > 1024:              # bound long-lived sessions
         del records[: len(records) - 1024]
 

@@ -72,12 +72,22 @@ Four layers, each usable on its own:
     seconds-per-work-unit and the selector compares *calibrated* costs, so
     cost constants converge to measured values on this machine.
 
+``plancache``
+    Serving-path amortization: the optimized plan (and its segment
+    decisions) cached under a structural fingerprint + stats epoch, so a
+    repeated plan shape skips optimize/rewrite/segment-DP entirely and
+    rebinds cached segments to fresh sources.  Source ``cache_token``s are
+    deliberately excluded from the key — the same program over new data
+    hits.
+
 The planner never changes results — only where they are computed.  It
 reads the optimized DAG (after pushdown/pruning), so its stats reflect
 what will actually run.
 """
 from .cost import CostEstimate, node_work, plan_cost, transfer_cost
 from .feedback import MIN_RUNTIME_SAMPLES, StatsStore, record_execution
+from .plancache import (PlanCache, Uncacheable, cache_key,
+                        default_plan_cache, plan_fingerprint, stats_epoch)
 from .select import (Decision, calibration_scales, candidate_engines,
                      plan_placement)
 from .stats import TableStats, estimate_plan, predicate_selectivity, source_stats
@@ -87,4 +97,6 @@ __all__ = [
     "StatsStore", "record_execution", "MIN_RUNTIME_SAMPLES",
     "Decision", "plan_placement", "calibration_scales", "candidate_engines",
     "TableStats", "estimate_plan", "predicate_selectivity", "source_stats",
+    "PlanCache", "Uncacheable", "cache_key", "default_plan_cache",
+    "plan_fingerprint", "stats_epoch",
 ]

@@ -8,6 +8,7 @@ appends a typed run record (segments + handoff payloads) consumed by
 """
 from __future__ import annotations
 
+from time import perf_counter
 from typing import Any
 
 from . import graph as G
@@ -73,9 +74,49 @@ def execute(roots: list[G.Node], live_df=None,
 
         persist_ids = plan_persists(all_roots, live_nodes)
         apply_persist_marks(all_roots, persist_ids)
-        logical_keys = {n.id: n.key() for n in G.walk(all_roots)}
+        walk_nodes = G.walk(all_roots)
+        logical_keys = {n.id: n.key() for n in walk_nodes}
 
-        opt_roots, idmap = optimize(all_roots, ctx)
+        # -- plan cache: a repeated plan shape skips optimize/rewrite and
+        # (under AUTO) the segment DP entirely, rebinding the cached
+        # optimized plan to this run's sources (planner/plancache.py)
+        from .planner import plancache as PC
+        cache = (PC.default_plan_cache()
+                 if getattr(ctx, "plan_cache_enabled", True) else None)
+        ckey = None
+        bound = None
+        t_plan0 = perf_counter()
+        if cache is not None:
+            ckey = PC.cache_key(all_roots, ctx, walk=walk_nodes)
+            if ckey is None:
+                cache.record_uncacheable()
+                ctx.metrics.inc("plan_cache.uncacheable")
+            else:
+                entry = cache.lookup(ckey)
+                if entry is not None:
+                    bound = entry.bind(walk_nodes)
+
+        ctx._cached_decisions = None
+        ctx._place_seconds = 0.0
+        plan_cached = bound is not None
+        if plan_cached:
+            opt_roots, idmap, ctx._cached_decisions = bound
+            bind_seconds = perf_counter() - t_plan0
+            cache.record_hit(bind_seconds)
+            ctx.metrics.inc("plan_cache.hits")
+            ctx.last_plan_seconds = bind_seconds
+            from ..obs.events import PlannerEvent
+            ctx.planner_trace.append(PlannerEvent(
+                f"plan-cache: hit fp={ckey[0][:12]} epoch={ckey[1][:8]} "
+                f"bind={bind_seconds * 1e3:.2f}ms",
+                kind="plan_cache", status="hit",
+                fingerprint=ckey[0], epoch=ckey[1],
+                bind_seconds=bind_seconds))
+        else:
+            t_opt0 = perf_counter()
+            opt_roots, idmap = optimize(all_roots, ctx)
+            ctx._opt_seconds = perf_counter() - t_opt0
+        ctx._last_plan_cached = plan_cached
         # re-mark persists on the rewritten nodes; store under the LOGICAL key
         for old_id in persist_ids:
             if old_id in idmap:
@@ -84,6 +125,24 @@ def execute(roots: list[G.Node], live_df=None,
 
         results, backend_name = _dispatch(opt_roots, ctx)
         exec_span.set(executed=backend_name)
+
+        if not plan_cached:
+            ctx.last_plan_seconds = ctx._opt_seconds + ctx._place_seconds
+        if cache is not None and ckey is not None and not plan_cached:
+            plan_seconds = ctx.last_plan_seconds
+            decisions = (list(ctx.planner_decisions)
+                         if ctx.backend == AUTO else None)
+            cache.store(PC.CachedPlan.build(
+                ckey, walk_nodes, opt_roots, idmap, decisions, plan_seconds))
+            cache.record_miss(plan_seconds)
+            ctx.metrics.inc("plan_cache.misses")
+            from ..obs.events import PlannerEvent
+            ctx.planner_trace.append(PlannerEvent(
+                f"plan-cache: miss fp={ckey[0][:12]} epoch={ckey[1][:8]} "
+                f"plan={plan_seconds * 1e3:.2f}ms",
+                kind="plan_cache", status="miss",
+                fingerprint=ckey[0], epoch=ckey[1],
+                plan_seconds=plan_seconds))
 
         # planner feedback (§ runtime optimization): observed cardinalities
         # recalibrate future estimates for repeated plans
@@ -149,10 +208,14 @@ def _dispatch(opt_roots, ctx):
         ctx._last_segment_spans = {0: sp.id}
         _record_runtime_sample(opt_roots, ctx, engine, backend.name, sp)
         return results, backend.name
-    from .planner.select import plan_placement
-    with ctx.tracer.span("plan", engine=AUTO) as psp:
-        decisions = plan_placement(opt_roots, ctx)
-        psp.set(segments=len(decisions))
+    decisions = getattr(ctx, "_cached_decisions", None)
+    if decisions is None:
+        from .planner.select import plan_placement
+        t_place0 = perf_counter()
+        with ctx.tracer.span("plan", engine=AUTO) as psp:
+            decisions = plan_placement(opt_roots, ctx)
+            psp.set(segments=len(decisions))
+        ctx._place_seconds = perf_counter() - t_place0
     ctx.planner_decisions = decisions
     return execute_segments(decisions, ctx,
                             final_root_ids={r.id for r in opt_roots})

@@ -13,24 +13,34 @@ legacy rendering — ``"device-resident" in line`` keeps working) carrying a
 """
 from __future__ import annotations
 
+import threading
+
 DEFAULT_TRACE_LIMIT = 10_000
 
 
 class TraceLog(list):
     """Bounded append-log: keeps the newest ``limit`` entries, counts
-    evictions in ``dropped``.  ``limit=None`` (or 0) disables bounding."""
+    evictions in ``dropped``.  ``limit=None`` (or 0) disables bounding.
+
+    Appends are lock-guarded: the eviction step is a read-modify-write
+    (append, then trim) that two racing appenders could interleave into a
+    lost ``dropped`` count or an over-limit log.  Sessions are single-owner
+    by contract, but facade fallbacks and engine callbacks may append from
+    worker threads, so the log itself stays safe."""
 
     def __init__(self, limit: int | None = DEFAULT_TRACE_LIMIT):
         super().__init__()
         self.limit = limit
         self.dropped = 0
+        self._lock = threading.Lock()
 
     def append(self, item) -> None:
-        super().append(item)
-        if self.limit and len(self) > self.limit:
-            excess = len(self) - self.limit
-            del self[:excess]
-            self.dropped += excess
+        with self._lock:
+            super().append(item)
+            if self.limit and len(self) > self.limit:
+                excess = len(self) - self.limit
+                del self[:excess]
+                self.dropped += excess
 
     def extend(self, items) -> None:
         for item in items:

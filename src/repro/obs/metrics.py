@@ -9,6 +9,11 @@ Counter glossary (what the built-in layers emit):
 
 ==============================  =============================================
 ``persist.hits``/``.misses``    §3.5 reuse-cache lookups (from persist_stats)
+``plan_cache.hits``             force points served by the plan cache (warm
+                                bind, optimize/rewrite/segment-DP skipped)
+``plan_cache.misses``           cacheable plans planned cold and stored
+``plan_cache.uncacheable``      plans the fingerprint refuses (UDF/MapRows,
+                                sinks, materialized/handoff payloads)
 ``fallback.served``             facade ops served by the fallback protocol
 ``fallback.failed``             facade ops with no registered kernel
 ``calibration.runtime_samples`` (work, seconds) samples fed to StatsStore

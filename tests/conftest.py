@@ -7,7 +7,12 @@ from repro.core.context import LaFPContext, pop_session, push_session
 @pytest.fixture(autouse=True)
 def fresh_context():
     """Each test runs inside its own pushed session — the one place test
-    isolation happens (no scattered get_context().reset() calls)."""
+    isolation happens (no scattered get_context().reset() calls).  The
+    process-global plan cache is cleared for the same reason: a warm hit
+    from another test's same-shaped plan would skip the optimization a
+    test means to observe."""
+    from repro.core.planner.plancache import default_plan_cache
+    default_plan_cache().clear()
     ctx = push_session(LaFPContext(name="test"))
     yield ctx
     pop_session()

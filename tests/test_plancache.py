@@ -1,0 +1,265 @@
+"""Plan cache (planner/plancache.py): fingerprint discrimination and
+process stability, warm-hit semantics (skip optimize + segment DP, rebind
+to fresh sources), data-derived plan state never leaking across sources,
+and the session escape hatch."""
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+
+import repro.core as core
+import repro.pandas as rpd
+from repro.core import expr as E
+from repro.core import graph as G
+from repro.core.context import LaFPContext, get_context, session
+from repro.core.planner.plancache import (CachedPlan, PlanCache, Uncacheable,
+                                          cache_key, default_plan_cache,
+                                          plan_fingerprint, stats_epoch)
+
+
+def _source(n=4_000, seed=0, partition_rows=1024, dtype=np.float64):
+    rng = np.random.default_rng(seed)
+    return core.InMemorySource({
+        "fare": rng.uniform(0, 100, n).astype(dtype),
+        "vendor": rng.integers(0, 4, n).astype(np.int64),
+    }, partition_rows)
+
+
+def _plan(src):
+    scan = G.Scan(src)
+    filt = G.Filter(scan, E.BinOp("gt", E.Col("fare"), E.Lit(10.0)))
+    return [G.GroupByAgg(filt, ("vendor",), {"total": ("fare", "sum")})]
+
+
+# ---------------------------------------------------------------------------
+# Fingerprint discrimination
+
+
+def test_identical_shapes_collide_across_sources_and_rebuilds():
+    ctx = get_context()
+    # fresh graphs over different data (different cache_token, same schema)
+    fp1 = plan_fingerprint(_plan(_source(seed=0)), ctx)
+    fp2 = plan_fingerprint(_plan(_source(seed=1)), ctx)
+    fp3 = plan_fingerprint(_plan(_source(seed=0, n=9_000)), ctx)
+    assert fp1 == fp2 == fp3
+
+
+def test_op_kind_and_params_separate():
+    ctx = get_context()
+    src = _source()
+    base = plan_fingerprint(_plan(src), ctx)
+    # different predicate constant
+    scan = G.Scan(src)
+    other = [G.GroupByAgg(
+        G.Filter(scan, E.BinOp("gt", E.Col("fare"), E.Lit(20.0))),
+        ("vendor",), {"total": ("fare", "sum")})]
+    assert plan_fingerprint(other, ctx) != base
+    # different op kind in the same slot
+    head = [G.GroupByAgg(G.Head(G.Scan(src), 100),
+                         ("vendor",), {"total": ("fare", "sum")})]
+    assert plan_fingerprint(head, ctx) != base
+    # different agg fn
+    agg = [G.GroupByAgg(
+        G.Filter(G.Scan(src), E.BinOp("gt", E.Col("fare"), E.Lit(10.0))),
+        ("vendor",), {"total": ("fare", "mean")})]
+    assert plan_fingerprint(agg, ctx) != base
+
+
+def test_schema_separates():
+    ctx = get_context()
+    fp64 = plan_fingerprint(_plan(_source(dtype=np.float64)), ctx)
+    fp32 = plan_fingerprint(_plan(_source(dtype=np.float32)), ctx)
+    assert fp64 != fp32
+
+
+def test_engine_environment_separates():
+    src = _source()
+    a = LaFPContext(name="a")
+    b = LaFPContext(name="b")
+    a.backend = "auto"
+    b.backend = "auto"
+    b.engine_allowlist = ("eager",)
+    assert plan_fingerprint(_plan(src), a) != plan_fingerprint(_plan(src), b)
+    c = LaFPContext(name="c")
+    c.backend = "streaming"
+    assert plan_fingerprint(_plan(src), a) != plan_fingerprint(_plan(src), c)
+    # backend options that steer planning separate too
+    d = LaFPContext(name="d")
+    d.backend = "auto"
+    d.backend_options["placement"] = "per_root"
+    assert plan_fingerprint(_plan(src), a) != plan_fingerprint(_plan(src), d)
+
+
+def test_stats_epoch_separates():
+    ctx = get_context()
+    roots = _plan(_source())
+    key0 = cache_key(roots, ctx)
+    assert key0 is not None
+    # observed cardinality for a node of THIS plan moves the epoch
+    ctx.stats_store.record(roots[0].key(), rows=123, nbytes=1968)
+    key1 = cache_key(roots, ctx)
+    assert key1[0] == key0[0]          # same structural fingerprint
+    assert key1[1] != key0[1]          # different stats epoch
+    # trusted calibration moves it again
+    for _ in range(3):
+        ctx.stats_store.record_runtime("eager", 1e6, 0.01)
+    key2 = cache_key(roots, ctx)
+    assert key2[1] not in (key0[1], key1[1])
+
+
+def test_fingerprint_stable_across_processes():
+    ctx = get_context()
+    prog = (
+        "import sys, numpy as np\n"
+        "sys.path.insert(0, 'src')\n"
+        "import repro.core as core\n"
+        "from repro.core import expr as E, graph as G\n"
+        "from repro.core.context import LaFPContext\n"
+        "from repro.core.planner.plancache import plan_fingerprint\n"
+        "rng = np.random.default_rng(0)\n"
+        "src = core.InMemorySource({'fare': rng.uniform(0, 100, 4000),"
+        " 'vendor': rng.integers(0, 4, 4000).astype(np.int64)}, 1024)\n"
+        "f = G.Filter(G.Scan(src), E.BinOp('gt', E.Col('fare'),"
+        " E.Lit(10.0)))\n"
+        "roots = [G.GroupByAgg(f, ('vendor',), {'total': ('fare',"
+        " 'sum')})]\n"
+        "print(plan_fingerprint(roots, LaFPContext(name='test')))\n")
+    out = subprocess.run([sys.executable, "-c", prog], capture_output=True,
+                         text=True, check=True, cwd=".")
+    here = plan_fingerprint(_plan(_source()), LaFPContext(name="test"))
+    assert out.stdout.strip() == here
+
+
+def test_uncacheable_plans():
+    ctx = get_context()
+    src = _source()
+    # opaque row-wise UDF node
+    mr = [G.MapRows(G.Scan(src), lambda t: t)]
+    with pytest.raises(Uncacheable):
+        plan_fingerprint(mr, ctx)
+    assert cache_key(mr, ctx) is None
+    # UDF hiding inside an expression
+    udf = [G.Assign(G.Scan(src), "x",
+                    E.UDF(np.sqrt, (E.Col("fare"),)))]
+    assert cache_key(udf, ctx) is None
+    # side-effecting sink
+    sink = [G.SinkPrint(["x"], [G.Length(G.Scan(src))], None)]
+    assert cache_key(sink, ctx) is None
+
+
+# ---------------------------------------------------------------------------
+# Warm-hit semantics
+
+
+def _compute(src, engine="auto"):
+    df = core.read_source(src)
+    return (df[df["fare"] > 10.0]
+            .groupby("vendor").agg({"total": ("fare", "sum")})
+            .compute())
+
+
+def test_warm_hit_skips_planning_and_matches_cold():
+    cache = default_plan_cache()
+    with session(engine="auto", engines=("eager", "streaming")) as ctx:
+        src = _source()
+        cold = _compute(src)
+        assert ctx.metrics.counter("plan_cache.misses") == 1
+        warm = _compute(src)
+        assert ctx.metrics.counter("plan_cache.hits") == 1
+        for col in cold.columns:
+            np.testing.assert_array_equal(cold[col], warm[col])
+            assert cold[col].dtype == warm[col].dtype
+        # trace + explain surfacing
+        kinds = [getattr(e, "kind", None) for e in ctx.planner_trace]
+        assert "plan_cache" in kinds
+        report = rpd.explain()
+        assert report.runs[0].cached is False
+        assert report.runs[1].cached is True
+        assert "cached=hit" in report.render()
+    assert cache.stats()["hits"] >= 1
+
+
+def test_new_data_same_shape_hits_and_stays_correct():
+    """The headline property: a new source with the same schema hits the
+    cached shape, and data-derived plan state (zone-map partition skips)
+    from the old data never leaks into the new run."""
+    with session(engine="eager") as ctx:
+        # source A: fare all below 10 → the filter >50 prunes every
+        # partition via zone maps in the cached optimized template
+        low = core.InMemorySource(
+            {"fare": np.linspace(0.0, 9.0, 4000),
+             "vendor": np.arange(4000, dtype=np.int64) % 4}, 1024)
+        df = core.read_source(low)
+        empty = df[df["fare"] > 50.0].compute()
+        assert len(empty["fare"]) == 0
+        assert ctx.metrics.counter("plan_cache.misses") == 1
+        # source B: same shape, fare up to 100 → must NOT reuse A's skips
+        high = core.InMemorySource(
+            {"fare": np.linspace(0.0, 100.0, 4000),
+             "vendor": np.arange(4000, dtype=np.int64) % 4}, 1024)
+        df2 = core.read_source(high)
+        out = df2[df2["fare"] > 50.0].compute()
+        assert ctx.metrics.counter("plan_cache.hits") == 1
+        expected = np.linspace(0.0, 100.0, 4000)
+        expected = expected[expected > 50.0]
+        np.testing.assert_allclose(np.sort(out["fare"]),
+                                   np.sort(expected))
+
+
+def test_same_data_warm_hit_keeps_pruning():
+    with session(engine="eager") as ctx:
+        low = core.InMemorySource(
+            {"fare": np.linspace(0.0, 9.0, 4000),
+             "vendor": np.arange(4000, dtype=np.int64) % 4}, 1024)
+        for _ in range(2):
+            df = core.read_source(low)
+            out = df[df["fare"] > 50.0].compute()
+            assert len(out["fare"]) == 0
+        assert ctx.metrics.counter("plan_cache.hits") == 1
+
+
+def test_plan_cache_disabled_escape_hatch():
+    with session(engine="eager", plan_cache=False) as ctx:
+        src = _source()
+        _compute(src)
+        _compute(src)
+        assert ctx.metrics.counter("plan_cache.hits") == 0
+        assert ctx.metrics.counter("plan_cache.misses") == 0
+        assert all(getattr(e, "kind", None) != "plan_cache"
+                   for e in ctx.planner_trace)
+
+
+def test_auto_warm_hit_reuses_decisions():
+    with session(engine="auto", engines=("eager", "streaming")) as ctx:
+        src = _source()
+        _compute(src)
+        cold_decisions = ctx.planner_decisions
+        assert cold_decisions
+        _compute(src)
+        assert ctx.metrics.counter("plan_cache.hits") == 1
+        warm_decisions = ctx.planner_decisions
+        assert [d.backend for d in warm_decisions] == \
+            [d.backend for d in cold_decisions]
+        # decisions are fresh clones, never the cached template's objects
+        cold_ids = {n.id for d in cold_decisions for n in d.nodes}
+        warm_ids = {n.id for d in warm_decisions for n in d.nodes}
+        assert not (cold_ids & warm_ids)
+
+
+def test_cache_lru_bounded_and_clear():
+    cache = PlanCache(max_entries=2)
+    ctx = get_context()
+    entries = []
+    for n in (1000, 2000, 3000):
+        roots = _plan(_source(n=n))
+        walk = G.walk(roots)
+        key = (plan_fingerprint(roots, ctx), f"epoch{n}")
+        entries.append(CachedPlan.build(key, walk, roots,
+                                        {x.id: x for x in walk}, None, 0.0))
+        cache.store(entries[-1])
+    assert len(cache) == 2
+    assert cache.lookup(entries[0].key) is None      # evicted oldest
+    assert cache.lookup(entries[2].key) is not None
+    cache.clear()
+    assert len(cache) == 0

@@ -332,3 +332,108 @@ def test_native_distributed_join_equals_eager_join(case):
         np.testing.assert_array_equal(np.asarray(got[c], np.int64),
                                       np.asarray(ref[c], np.int64),
                                       err_msg=f"{how}:{c}")
+
+
+# ---------------------------------------------------------------------------
+# 5. plan-cache fingerprint laws (planner/plancache.py): structural identity
+#    collides, any op/param/schema mutation separates, and the stats epoch
+#    reacts to exactly the feedback a plan can see.
+
+
+@st.composite
+def fp_pipeline(draw):
+    ops = []
+    for _ in range(draw(st.integers(1, 6))):
+        kind = draw(st.sampled_from(
+            ["filter_gt", "filter_lt", "assign", "sort", "head", "project"]))
+        col = draw(st.sampled_from(COLS))
+        val = draw(st.integers(-5, 5))
+        ops.append((kind, col, val))
+    return ops
+
+
+def _fp_source(seed=0, n=500):
+    rng = np.random.default_rng(seed)
+    return core.InMemorySource({
+        "a": rng.integers(-10, 10, n).astype(np.int64),
+        "b": rng.normal(size=n),
+        "c": rng.integers(0, 5, n).astype(np.int64),
+    }, 128)
+
+
+def _fp_build(src, ops):
+    from repro.core import expr as E
+    from repro.core import graph as G
+    node = G.Scan(src)
+    for kind, col, val in ops:
+        if kind == "filter_gt":
+            node = G.Filter(node, E.BinOp("gt", E.Col(col), E.Lit(val)))
+        elif kind == "filter_lt":
+            node = G.Filter(node, E.BinOp("lt", E.Col(col), E.Lit(val)))
+        elif kind == "assign":
+            node = G.Assign(node, f"x_{col}", E.BinOp(
+                "add", E.BinOp("mul", E.Col(col), E.Lit(2)), E.Lit(val)))
+        elif kind == "sort":
+            node = G.SortValues(node, [col])
+        elif kind == "head":
+            node = G.Head(node, max(1, abs(val)) * 5)
+        elif kind == "project":
+            node = G.Project(node, COLS)
+    return [node]
+
+
+@settings(max_examples=60, deadline=None)
+@given(ops=fp_pipeline(), seed_a=st.integers(0, 99), seed_b=st.integers(0, 99))
+def test_fingerprint_structural_identity_collides(ops, seed_a, seed_b):
+    """Identical shapes collide — including over *different* data (the
+    source cache_token is deliberately not part of the fingerprint)."""
+    from repro.core.context import LaFPContext
+    from repro.core.planner.plancache import plan_fingerprint
+    ctx = LaFPContext(name="prop")
+    fp_a = plan_fingerprint(_fp_build(_fp_source(seed_a), ops), ctx)
+    fp_b = plan_fingerprint(_fp_build(_fp_source(seed_b), ops), ctx)
+    assert fp_a == fp_b
+
+
+@settings(max_examples=60, deadline=None)
+@given(ops=fp_pipeline(),
+       extra=st.sampled_from(["filter_gt", "assign", "head"]),
+       col=st.sampled_from(COLS))
+def test_fingerprint_shape_mutation_separates(ops, extra, col):
+    from repro.core.context import LaFPContext
+    from repro.core.planner.plancache import plan_fingerprint
+    ctx = LaFPContext(name="prop")
+    src = _fp_source()
+    base = plan_fingerprint(_fp_build(src, ops), ctx)
+    longer = plan_fingerprint(_fp_build(src, ops + [(extra, col, 7)]), ctx)
+    assert base != longer
+
+
+@settings(max_examples=30, deadline=None)
+@given(ops=fp_pipeline(), val=st.integers(6, 20))
+def test_fingerprint_param_mutation_separates(ops, val):
+    """Changing one op parameter (a filter constant) separates."""
+    from repro.core.context import LaFPContext
+    from repro.core.planner.plancache import plan_fingerprint
+    ctx = LaFPContext(name="prop")
+    src = _fp_source()
+    probe = [("filter_gt", "a", 0)] + ops
+    mutated = [("filter_gt", "a", val)] + ops
+    assert (plan_fingerprint(_fp_build(src, probe), ctx)
+            != plan_fingerprint(_fp_build(src, mutated), ctx))
+
+
+@settings(max_examples=30, deadline=None)
+@given(ops=fp_pipeline(), rows=st.integers(1, 10 ** 6))
+def test_stats_epoch_sees_own_plan_only(ops, rows):
+    """Recording a cardinality for a node of THIS plan moves the epoch;
+    feedback about unrelated plans leaves it alone."""
+    from repro.core.context import LaFPContext
+    from repro.core.planner.plancache import stats_epoch
+    ctx = LaFPContext(name="prop")
+    roots = _fp_build(_fp_source(), ops)
+    e0 = stats_epoch(roots, ctx)
+    ctx.stats_store.record(("unrelated", "key"), rows=rows, nbytes=8 * rows)
+    assert stats_epoch(roots, ctx) == e0
+    ctx.stats_store.record(roots[0].key(), rows=rows, nbytes=8 * rows)
+    assert stats_epoch(roots, ctx) != e0

@@ -1,0 +1,262 @@
+"""Concurrent-serving battery: N threads × M sessions over mixed programs
+(session isolation, metric integrity, plan-cache hits after warmup),
+multi-process StatsStore append/compaction without loss, torn-read safety,
+and TraceLog append races."""
+import os
+import subprocess
+import sys
+import threading
+from concurrent.futures import ThreadPoolExecutor
+
+import numpy as np
+
+import repro.core as core
+from repro.core.context import get_context, session
+from repro.core.planner.feedback import StatsStore
+from repro.core.planner.plancache import default_plan_cache
+from repro.obs.events import TraceLog
+
+# ---------------------------------------------------------------------------
+# Shared workload: three program shapes over immutable shared sources
+# (sources are read-only after ingest — sharing them across sessions is part
+# of the documented concurrency contract).
+
+_N = 8_000
+_RNG = np.random.default_rng(42)
+_FARE = _RNG.uniform(0, 100, _N)
+_VENDOR = _RNG.integers(0, 4, _N).astype(np.int64)
+_TIP = _RNG.uniform(0, 20, _N)
+_SRC = core.InMemorySource(
+    {"fare": _FARE, "vendor": _VENDOR, "tip": _TIP}, partition_rows=1024)
+
+
+def _prog_filter_groupby():
+    df = core.read_source(_SRC)
+    out = (df[df["fare"] > 50.0]
+           .groupby("vendor").agg({"total": ("tip", "sum")}).compute())
+    return np.sort(np.asarray(out["total"], dtype=np.float64))
+
+
+def _prog_topk():
+    df = core.read_source(_SRC)
+    out = df.sort_values("fare", ascending=False).head(25).compute()
+    return np.asarray(out["fare"], dtype=np.float64)
+
+
+def _prog_filter_sort():
+    df = core.read_source(_SRC)
+    out = df[df["tip"] > 15.0].sort_values("tip").compute()
+    return np.asarray(out["tip"], dtype=np.float64)
+
+
+_PROGRAMS = (_prog_filter_groupby, _prog_topk, _prog_filter_sort)
+
+
+def _expected():
+    mask = _FARE > 50.0
+    gb = np.sort(np.asarray(
+        [_TIP[mask & (_VENDOR == v)].sum() for v in np.unique(_VENDOR[mask])],
+        dtype=np.float64))
+    order = np.argsort(-_FARE, kind="stable")
+    topk = _FARE[order][:25]
+    tips = np.sort(_TIP[_TIP > 15.0])
+    return gb, topk, tips
+
+
+_EXPECTED = _expected()
+
+
+def _run_session(worker_id: int, session_idx: int):
+    """One serving session: runs every program once, returns everything the
+    assertions need (results + the session's own counters)."""
+    with session(engine="auto", engines=("eager", "streaming"),
+                 name=f"w{worker_id}s{session_idx}") as ctx:
+        assert get_context() is ctx      # thread-local stack isolation
+        results = [p() for p in _PROGRAMS]
+        snap = ctx.metrics.snapshot()
+        return {
+            "results": results,
+            "exec_count": ctx.exec_count,
+            "runs": len(ctx.run_records),
+            "forces": len(ctx.force_log),
+            "hits": snap.get("plan_cache.hits", 0),
+            "misses": snap.get("plan_cache.misses", 0),
+            "uncacheable": snap.get("plan_cache.uncacheable", 0),
+        }
+
+
+def test_concurrent_sessions_stress():
+    """N threads × M sessions running the mixed workload concurrently:
+    every result correct, every session's metrics internally consistent,
+    and the process-global plan cache hot after a serial warmup."""
+    threads, sessions_per_thread = 4, 3
+    cache = default_plan_cache()
+    cache.clear()
+    # serial warmup: one session populates the cache for each program shape
+    _run_session(-1, 0)
+    before = cache.stats()
+
+    def worker(worker_id):
+        return [_run_session(worker_id, s)
+                for s in range(sessions_per_thread)]
+
+    with ThreadPoolExecutor(max_workers=threads) as pool:
+        per_thread = list(pool.map(worker, range(threads)))
+
+    total_requests = 0
+    for thread_sessions in per_thread:
+        assert len(thread_sessions) == sessions_per_thread
+        for sess in thread_sessions:
+            # correctness: concurrent execution never corrupts results
+            for got, want in zip(sess["results"], _EXPECTED):
+                np.testing.assert_allclose(got, want, rtol=1e-5)
+            # isolation: each session saw exactly its own three requests
+            assert sess["exec_count"] == len(_PROGRAMS)
+            assert sess["runs"] == len(_PROGRAMS)
+            assert sess["forces"] == len(_PROGRAMS)
+            # metric integrity: every force point classified exactly once
+            assert (sess["hits"] + sess["misses"] + sess["uncacheable"]
+                    == sess["exec_count"])
+            total_requests += sess["exec_count"]
+
+    after = cache.stats()
+    hit_delta = after["hits"] - before["hits"]
+    assert total_requests == threads * sessions_per_thread * len(_PROGRAMS)
+    # after warmup the repeated shapes must mostly hit; the floor is
+    # deliberately loose (races can duplicate a miss per key, and noisy
+    # calibration can move a session's stats epoch)
+    assert hit_delta >= total_requests // 3, (before, after)
+
+
+def test_tracelog_concurrent_append_consistent():
+    """The bounded trace ring under an append race: never over limit, no
+    lost eviction counts, no exceptions."""
+    log = TraceLog(limit=64)
+    per_thread, n_threads = 500, 8
+
+    def hammer(tid):
+        for i in range(per_thread):
+            log.append(f"{tid}:{i}")
+
+    ts = [threading.Thread(target=hammer, args=(t,)) for t in range(n_threads)]
+    for t in ts:
+        t.start()
+    for t in ts:
+        t.join()
+    assert len(log) <= 64
+    assert len(log) + log.dropped == per_thread * n_threads
+
+
+# ---------------------------------------------------------------------------
+# Multi-process StatsStore: append-log + lock-guarded compaction.
+
+_WRITER = """\
+import sys
+sys.path.insert(0, {src!r})
+from repro.core.planner.feedback import StatsStore
+store = StatsStore()
+name = sys.argv[1]
+path = sys.argv[2]
+for i in range(20):
+    store.record_runtime("eng_" + name, 1000.0 + i, 0.01 + i * 1e-4)
+    store.record_peak("eng_" + name, 1 << 20, est_peak=1 << 19)
+    store.record(("obs", name, i), rows=100 + i, nbytes=800 + i)
+    store.save(path)   # one delta line per iteration, under the file lock
+print("done")
+"""
+
+
+def test_statsstore_multiprocess_append_merges_without_loss(tmp_path):
+    """Two processes appending runtime/peak/cardinality feedback to the
+    same stats path concurrently: compaction merges both streams without
+    losing a sample."""
+    path = str(tmp_path / "stats.json")
+    script = _WRITER.format(src=os.path.abspath("src"))
+    procs = [subprocess.Popen([sys.executable, "-c", script, name, path],
+                              stdout=subprocess.PIPE, text=True)
+             for name in ("a", "b")]
+    for p in procs:
+        out, _ = p.communicate(timeout=120)
+        assert p.returncode == 0 and "done" in out
+
+    merged = StatsStore()
+    assert merged.load(path)
+    # every sample from both writers survived (20 < the 64-sample ring)
+    assert len(merged.runtime_samples["eng_a"]) == 20
+    assert len(merged.runtime_samples["eng_b"]) == 20
+    assert len(merged.peak_samples["eng_a"]) == 20
+    assert len(merged.peak_samples["eng_b"]) == 20
+    for name in ("a", "b"):
+        for i in range(20):
+            assert merged.lookup(("obs", name, i)) == {
+                "rows": float(100 + i), "nbytes": float(800 + i)}
+    # explicit compaction folds the log into the base and truncates it
+    merged.compact(path)
+    assert os.path.getsize(path + ".log") == 0
+    again = StatsStore()
+    assert again.load(path)
+    assert len(again.runtime_samples["eng_a"]) == 20
+    assert again.lookup(("obs", "b", 19)) is not None
+
+
+_CHURN_WRITER = """\
+import sys
+sys.path.insert(0, {src!r})
+from repro.core.planner import feedback as F
+F._COMPACT_LOG_BYTES = 256      # force a compaction every few appends
+store = F.StatsStore()
+path = sys.argv[1]
+for i in range(300):
+    store.record_runtime("eng", 1000.0 + i, 0.01)
+    store.record(("churn", i), rows=i, nbytes=8 * i)
+    store.save(path)
+print("done")
+"""
+
+
+def test_statsstore_reader_never_sees_torn_file(tmp_path):
+    """A reader polling while a writer appends and compacts continuously
+    must always parse a consistent snapshot — the shared file lock means
+    no read overlaps the replace/truncate pair."""
+    path = str(tmp_path / "stats.json")
+    script = _CHURN_WRITER.format(src=os.path.abspath("src"))
+    proc = subprocess.Popen([sys.executable, "-c", script, path],
+                            stdout=subprocess.PIPE, text=True)
+    reads = 0
+    try:
+        while proc.poll() is None:
+            reader = StatsStore()
+            if reader.load(path):     # raises on a torn file — never should
+                reads += 1
+    finally:
+        out, _ = proc.communicate(timeout=120)
+    assert proc.returncode == 0 and "done" in out
+    assert reads > 0
+    final = StatsStore()
+    assert final.load(path)
+    # the last delta is never lost across all those compactions
+    assert final.lookup(("churn", 299)) == {"rows": 299.0,
+                                            "nbytes": 8.0 * 299}
+
+
+def test_statsstore_thread_safety_smoke():
+    """In-memory mutation from many threads: no lost samples below the
+    ring cap, no exceptions from concurrent calibration reads."""
+    store = StatsStore()
+    n_threads, per_thread = 8, 50
+
+    def work(tid):
+        for i in range(per_thread):
+            store.record(("t", tid, i), rows=i, nbytes=i)
+            store.record_runtime(f"eng{tid}", 100.0 + i, 0.01)
+            store.calibration()
+            store.peak_calibration()
+
+    ts = [threading.Thread(target=work, args=(t,)) for t in range(n_threads)]
+    for t in ts:
+        t.start()
+    for t in ts:
+        t.join()
+    assert len(store.observed) == n_threads * per_thread
+    for tid in range(n_threads):
+        assert len(store.runtime_samples[f"eng{tid}"]) == per_thread
