@@ -32,7 +32,7 @@ def filter_groupby(pd, rng):
 def feature_engineering(pd, rng):
     df = _taxi(pd, rng)
     df["day"] = df["pickup"].dt.dayofweek
-    df["quarter"] = df["pickup"].dt.quarter        # fallback: wrapped UDF
+    df["quarter"] = df["pickup"].dt.quarter        # native: DtField expr
     df["fare_clipped"] = df["fare"].clip(0, 50)    # native: rowwise expr
     return df.groupby("quarter")["fare_clipped"].sum().compute()
 
@@ -40,7 +40,7 @@ def feature_engineering(pd, rng):
 def order_statistics(pd, rng):
     df = _taxi(pd, rng)
     top = df.nlargest(10, "fare")                  # native: TopK(select)
-    return top["fare"].median()                    # fallback: materialize
+    return float(top["fare"].median().compute())   # native: Reduce(median)
 
 
 def missing_data(pd, rng):

@@ -91,9 +91,9 @@ _REG.register("distributed", DistributedBackend, BackendCapability(
     name="distributed",
     native_ops=frozenset({"scan", "materialized", "filter", "project",
                           "assign", "rename", "astype", "fillna",
-                          "reduce", "length", "groupby_agg", "join",
-                          "sort_values", "drop_duplicates", "head",
-                          "sink_print"}),
+                          "fused_rowwise", "reduce", "length",
+                          "groupby_agg", "join", "sort_values",
+                          "drop_duplicates", "head", "sink_print"}),
     # scan models parallel partition ingest across shard workers (cheaper
     # per byte than eager's single-device load), paid for by the highest
     # fixed startup: distributed only wins once tables are large enough

@@ -42,7 +42,7 @@ from ..physical.sharded import ShardedTable
 from .eager import EagerBackend
 
 _DIST_OPS = ("scan", "filter", "project", "assign", "rename", "astype",
-             "fillna")
+             "fillna", "fused_rowwise")
 
 
 def _default_mesh() -> Mesh:
@@ -262,6 +262,13 @@ class DistributedBackend:
                     out[c] = jnp.where(jnp.isnan(arr),
                                        jnp.asarray(n.value, arr.dtype), arr)
             return ShardedTable(out, t.valid)
+        if isinstance(n, G.FusedRowwise):
+            # members reuse the per-op sharded paths above; the validity
+            # mask plays the deferred-filter role, so no compaction needed
+            out = t
+            for m in n.ops:
+                out = self._rowwise_sharded(m, out)
+            return out
         raise NotImplementedError(n.op)
 
     def _reduce_sharded(self, n: G.Reduce, t: ShardedTable):

@@ -60,6 +60,9 @@ class EagerBackend:
             return X.apply_astype(vals[0], n.dtypes)
         if isinstance(n, G.FillNa):
             return X.apply_fillna(vals[0], n.value, n.columns)
+        if isinstance(n, G.FusedRowwise):
+            return X.apply_fused_rowwise(
+                vals[0], n.ops, ctx.backend_options.get("kernel_impl"))
         if isinstance(n, G.SortValues):
             return X.apply_sort(vals[0], n.by, n.ascending)
         if isinstance(n, G.DropDuplicates):

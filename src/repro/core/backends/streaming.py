@@ -26,7 +26,7 @@ from . import MemoryMeter
 Table = dict
 
 _STREAM_ROWWISE = ("filter", "project", "assign", "rename", "astype",
-                   "fillna", "map_rows")
+                   "fillna", "map_rows", "fused_rowwise")
 
 
 def _part_stream_from_table(table: Table, chunk: int) -> Iterator[Table]:
@@ -207,6 +207,10 @@ class StreamingBackend:
             return X.apply_fillna(part, n.value, n.columns)
         if isinstance(n, G.MapRows):
             return X.apply_map_rows(part, n.fn)
+        if isinstance(n, G.FusedRowwise):
+            # one chunk-loop body: the whole member chain per partition
+            return X.apply_fused_rowwise(
+                part, n.ops, self._ctx.backend_options.get("kernel_impl"))
         raise NotImplementedError(n.op)
 
     def _materialize(self, n: G.Node) -> Table:
@@ -347,6 +351,16 @@ class StreamingBackend:
             return int(uniq.shape[0]) if uniq is not None else 0
         if fn == "count":
             return sum(X.table_rows(p) for p in self.stream(n.inputs[0]))
+        if fn == "median":
+            # not decomposable into bounded partials: materialize the one
+            # column over the stream (accounted), then nanmedian (pandas
+            # skipna semantics, matching physical.apply_reduce)
+            parts = [np.asarray(p[n.column]) for p in self.stream(n.inputs[0])]
+            col = np.concatenate(parts) if parts else np.zeros(0)
+            self._meter.alloc(int(col.nbytes), f"median#{n.id}")
+            out = float(np.nanmedian(col)) if col.size else float("nan")
+            self._meter.free(int(col.nbytes))
+            return out
         acc = None
         for part in self.stream(n.inputs[0]):
             v = np.asarray(part[n.column])

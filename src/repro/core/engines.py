@@ -48,9 +48,9 @@ AUTO = "auto"
 # they run natively (the rest is priced via the fallback penalty)
 ALL_OPS = frozenset({
     "scan", "materialized", "filter", "project", "assign", "rename",
-    "astype", "fillna", "sort_values", "drop_duplicates", "head", "top_k",
-    "map_rows", "groupby_agg", "join", "concat", "reduce", "length",
-    "sink_print",
+    "astype", "fillna", "fused_rowwise", "sort_values", "drop_duplicates",
+    "head", "top_k", "map_rows", "groupby_agg", "join", "concat", "reduce",
+    "length", "sink_print",
 })
 
 

@@ -224,6 +224,15 @@ class ExplainReport:
 # Record construction
 
 
+def _op_label(n) -> str:
+    """Operator label for plan rendering: fused segments expand their
+    member ops — ``fused[filter,assign,...]`` — so a plan reader sees what
+    the single node executes."""
+    if n.op == "fused_rowwise":
+        return "fused[" + ",".join(m.op for m in n.ops) + "]"
+    return n.op
+
+
 def _candidate_records(candidates: dict[str, dict]
                        ) -> tuple[CandidateRecord, ...]:
     out = []
@@ -249,7 +258,7 @@ def segment_records(decisions, span_ids: dict[int, int] | None = None
             index=si,
             engine=str(d.backend),
             root_ids=tuple(r.id for r in d.roots),
-            ops=tuple(n.op for n in d.nodes),
+            ops=tuple(_op_label(n) for n in d.nodes),
             work=d.cost.total,
             peak_bytes=d.cost.peak_bytes,
             scale=d.scale,
@@ -290,7 +299,7 @@ def record_run(ctx, force_reason: str, backend_name: str, opt_roots) -> None:
         segments = (SegmentRecord(
             index=0, engine=str(backend_name),
             root_ids=tuple(r.id for r in opt_roots),
-            ops=tuple(n.op for n in G.walk(opt_roots)),
+            ops=tuple(_op_label(n) for n in G.walk(opt_roots)),
             work=None, peak_bytes=None, scale=1.0, feasible=True,
             candidates=(), handoff_in=(), span_id=span_ids.get(0)),)
     handoffs = tuple(HandoffRecord(**h) for h in handoff_dicts)

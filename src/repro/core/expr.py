@@ -45,18 +45,27 @@ _DT_FIELDS: dict[str, Callable] = {
 }
 
 
+def _where(cond, a, b):
+    """np.where that stays traceable: jax tracers (fused-chain jit) cannot
+    pass through numpy, so dispatch on the condition's array type."""
+    if isinstance(cond, (np.ndarray, np.generic, bool, int)):
+        return np.where(cond, a, b)
+    import jax.numpy as jnp
+    return jnp.where(cond, a, b)
+
+
 def _civil_from_days(days):
     """Days-since-epoch -> (year, month, day), vectorized (Howard Hinnant's
     algorithm, integer-only so it runs on device)."""
     z = days + 719468
-    era = np.where(z >= 0, z, z - 146096) // 146097
+    era = _where(z >= 0, z, z - 146096) // 146097
     doe = z - era * 146097
     yoe = (doe - doe // 1460 + doe // 36524 - doe // 146096) // 365
     y = yoe + era * 400
     doy = doe - (365 * yoe + yoe // 4 - yoe // 100)
     mp = (5 * doy + 2) // 153
     d = doy - (153 * mp + 2) // 5 + 1
-    m = mp + np.where(mp < 10, 3, -9)
+    m = mp + _where(mp < 10, 3, -9)
     y = y + (m <= 2)
     return y, m, d
 
@@ -64,6 +73,9 @@ def _civil_from_days(days):
 _DT_FIELDS["year"] = lambda ts: _civil_from_days(ts // 86400)[0]
 _DT_FIELDS["month"] = lambda ts: _civil_from_days(ts // 86400)[1]
 _DT_FIELDS["day"] = lambda ts: _civil_from_days(ts // 86400)[2]
+# pandas .dt.quarter: 1-4 from the calendar month
+_DT_FIELDS["quarter"] = \
+    lambda ts: (_civil_from_days(ts // 86400)[1] - 1) // 3 + 1
 
 
 class Expr:

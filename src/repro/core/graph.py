@@ -426,6 +426,59 @@ class MapRows(Node):
         return MapRows(inputs[0], self.fn, self.name)
 
 
+class FusedRowwise(Node):
+    """Maximal single-consumer chain of rowwise ops collapsed into one
+    physical pass (``core.fuse``; Dask's low-level ``fuse`` analogue).
+
+    ``ops`` holds the member nodes innermost-first.  Each member is kept as
+    a parameter template: execution rebinds it to the running table, so its
+    own ``inputs`` edge is never followed.  The chain is one device dispatch
+    on the jnp path and one chunk-loop body on the streaming path — no
+    intermediate tables between members."""
+    op = "fused_rowwise"
+
+    def __init__(self, child: Node, ops: Sequence[Node]):
+        super().__init__([child])
+        self.ops = tuple(ops)
+
+    def used_attrs(self):
+        used: set[str] = set()
+        produced: set[str] = set()
+        for m in self.ops:
+            used |= set(m.used_attrs()) - produced
+            produced |= set(m.mod_attrs())
+        return frozenset(used)
+
+    def mod_attrs(self):
+        out: set[str] = set()
+        for m in self.ops:
+            out |= set(m.mod_attrs())
+        return frozenset(out)
+
+    def preserves_rows(self):
+        return all(m.preserves_rows() for m in self.ops)
+
+    def out_cols(self, in_cols):
+        c = in_cols[0] if in_cols else None
+        for m in self.ops:
+            c = m.out_cols([c])
+        return c
+
+    def required_cols(self, live):
+        for m in reversed(self.ops):
+            live = m.required_cols(live)[0]
+        return [live]
+
+    def key(self):
+        # member keys minus their child component (every rowwise key ends
+        # with the child key), then the real child key once
+        return (("fused",) + tuple(m.key()[:-1] for m in self.ops)
+                + (self.inputs[0].key(),))
+
+    def with_inputs(self, inputs):
+        return FusedRowwise(inputs[0], self.ops)
+
+
 # ---------------------------------------------------------------------------
 # Row-count-changing / multi-input ops
 
@@ -539,7 +592,8 @@ class Concat(Node):
 
 
 class Reduce(Node):
-    """Column reduction to a scalar: mean/sum/min/max/count/nunique."""
+    """Column reduction to a scalar:
+    mean/sum/min/max/count/nunique/median."""
     op = "reduce"
 
     def __init__(self, child: Node, column: str | None, fn: str):

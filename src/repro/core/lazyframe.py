@@ -134,6 +134,7 @@ class LazyColumn:
     def max(self): return self._reduce("max")
     def count(self): return self._reduce("count")
     def nunique(self): return self._reduce("nunique")
+    def median(self): return self._reduce("median")
 
     def compute(self, live_df=None, force_reason="Series.compute"):
         node = self.frame._node_for_expr_column(self.expr)

@@ -471,7 +471,7 @@ def dtype_narrowing(roots: list[G.Node], ctx: LaFPContext | None,
 def optimize(roots: list[G.Node], ctx: LaFPContext | None = None,
              enable: Iterable[str] = ("cse", "rewrite", "pushdown",
                                       "selectivity", "columns", "zonemap",
-                                      "dtypes")
+                                      "dtypes", "fuse")
              ) -> tuple[list[G.Node], dict[int, G.Node]]:
     """Run the rule pipeline; returns (new_roots, combined id map)."""
     enable = set(enable)
@@ -513,5 +513,12 @@ def optimize(roots: list[G.Node], ctx: LaFPContext | None = None,
         absorb(m)
     if "dtypes" in enable:
         roots, m = dtype_narrowing(roots, ctx, trace)
+        absorb(m)
+    if "fuse" in enable and (ctx is None
+                             or ctx.backend_options.get("fusion", True)):
+        # runs last: fusion freezes chains, so every structural rewrite
+        # must already have happened
+        from .fuse import fuse_rowwise_chains
+        roots, m = fuse_rowwise_chains(roots, ctx, trace)
         absorb(m)
     return roots, combined

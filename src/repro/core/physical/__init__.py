@@ -28,7 +28,8 @@ from __future__ import annotations
 from .table import (Table, apply_concat, handoff_value, is_jax, table_nbytes,
                     table_rows, to_host_value, to_jax, to_numpy, xp_of)
 from .rowwise import (apply_assign, apply_astype, apply_fillna, apply_filter,
-                      apply_head, apply_map_rows, apply_project, apply_rename)
+                      apply_fused_rowwise, apply_head, apply_map_rows,
+                      apply_project, apply_rename)
 from .groupby import (_factorize, _factorize_multi, apply_groupby_agg,
                       combine_partials, partial_aggs)
 from .join import _factorize_multi_np_pair, apply_join
@@ -42,7 +43,8 @@ __all__ = [
     "Table", "is_jax", "xp_of", "table_rows", "table_nbytes", "to_numpy",
     "to_jax", "to_host_value", "handoff_value", "apply_concat",
     "apply_filter", "apply_project", "apply_assign", "apply_rename",
-    "apply_astype", "apply_fillna", "apply_head", "apply_map_rows",
+    "apply_astype", "apply_fillna", "apply_fused_rowwise", "apply_head",
+    "apply_map_rows",
     "_factorize", "_factorize_multi", "apply_groupby_agg", "partial_aggs",
     "combine_partials", "apply_join", "_factorize_multi_np_pair",
     "apply_sort", "apply_top_k", "apply_drop_duplicates", "apply_reduce",

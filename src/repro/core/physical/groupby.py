@@ -1,7 +1,9 @@
 """Group-by aggregation: factorize keys → dense segment reductions.
 
-The jnp path doubles as the oracle for the MXU one-hot kernel
-(``repro.kernels.groupby_sum``); the partial/combine pair is what the
+The jnp path routes its sum-shaped reductions (sum/mean/count) through
+``repro.kernels.ops.groupby_sum`` — the MXU one-hot kernel when the kernel
+config resolves to "pallas", its jnp oracle otherwise; the partial/combine
+pair is what the
 streaming backend uses for out-of-core aggregation (memory scales with the
 number of groups, not rows)."""
 from __future__ import annotations
@@ -60,8 +62,8 @@ def apply_groupby_agg(table: Table, keys: Sequence[str],
                       aggs: Mapping[str, tuple[str, str]]) -> Table:
     """Dense aggregation: factorize keys → segment reductions.
 
-    This jnp/np path is also the oracle for the MXU one-hot kernel
-    (``repro.kernels.groupby_sum``)."""
+    Device (jnp) tables dispatch sum-shaped reductions through the kernel
+    layer (``repro.kernels.ops.groupby_sum``)."""
     combined, decode = _factorize_multi(table, list(keys))
     if is_jax(combined):
         groups, inv = jnp.unique(combined, return_inverse=True)
@@ -79,17 +81,20 @@ def apply_groupby_agg(table: Table, keys: Sequence[str],
 
 
 def _segment_agg_jax(table, col, fn, seg_ids, num):
+    # sum-shaped aggregations dispatch through the kernel layer: the MXU
+    # one-hot kernel on TPU ("pallas"), the segment_sum oracle elsewhere
+    from ...kernels import ops as K
     ones = jnp.ones((seg_ids.shape[0],), jnp.float32)
     if fn == "count":
-        return jax.ops.segment_sum(ones, seg_ids, num).astype(jnp.int64)
+        return K.groupby_sum(seg_ids, ones, num).astype(jnp.int64)
     vals = table[col]
     if vals.dtype.kind in "iub" and vals.dtype.itemsize < 4:
         vals = vals.astype(jnp.int32)   # widen narrow ints: no int8 accumulate
     if fn == "sum":
-        return jax.ops.segment_sum(vals, seg_ids, num)
+        return K.groupby_sum(seg_ids, vals, num)
     if fn == "mean":
-        s = jax.ops.segment_sum(vals.astype(jnp.float32), seg_ids, num)
-        c = jax.ops.segment_sum(ones, seg_ids, num)
+        s = K.groupby_sum(seg_ids, vals.astype(jnp.float32), num)
+        c = K.groupby_sum(seg_ids, ones, num)
         return s / c
     if fn == "min":
         return jax.ops.segment_min(vals, seg_ids, num)

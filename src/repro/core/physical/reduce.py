@@ -28,6 +28,14 @@ def apply_reduce(table: Table, column: str | None, fn: str):
         return xp.max(vals)
     if fn == "nunique":
         return int(xp.unique(vals).shape[0])
+    if fn == "median":
+        # pandas skipna semantics; float64 on host like mean (jnp computes
+        # in its native f32 precision)
+        if vals.shape[0] == 0:
+            return float("nan")
+        if xp is np:
+            return float(np.nanmedian(vals.astype(np.float64)))
+        return jnp.nanmedian(vals.astype(jnp.float32))
     raise ValueError(fn)
 
 

@@ -64,6 +64,8 @@ def node_work(n: G.Node, stats: dict[int, TableStats], cap) -> float:
         return 0.0
     if isinstance(n, G.Join):
         return _join_work(n, stats, cap)
+    if isinstance(n, G.FusedRowwise):
+        return _fused_work(n, stats, cap)
     rows = max(in_rows, st.rows, 1.0)
     work = rows * cap.row_cost
     if isinstance(n, G.TopK):
@@ -79,6 +81,26 @@ def node_work(n: G.Node, stats: dict[int, TableStats], cap) -> float:
         in_bytes = sum(stats[i.id].total_bytes for i in n.inputs)
         work = work * cap.fallback_penalty + in_bytes * cap.transfer_cost_per_byte
     return work
+
+
+# per-member compute discount inside a fused chain: members run in one
+# dispatch with no intermediate tables, so each costs a fraction of a
+# stand-alone rowwise op
+_FUSED_MEMBER_DISCOUNT = 0.25
+
+
+def _fused_work(n: "G.FusedRowwise", stats: dict[int, TableStats],
+                cap) -> float:
+    """One pass over the child plus summed (discounted) per-member compute —
+    strictly below the op-at-a-time sum for any chain of ≥ 2 members, so
+    placement never penalizes a fused segment."""
+    in_st = stats[n.inputs[0].id]
+    rows = max(in_st.rows, stats[n.id].rows, 1.0)
+    work = rows * cap.row_cost * (1.0 + _FUSED_MEMBER_DISCOUNT * len(n.ops))
+    if n.op in cap.native_ops:
+        return work / cap.parallelism
+    return (work * cap.fallback_penalty
+            + in_st.total_bytes * cap.transfer_cost_per_byte)
 
 
 def _join_work(n: G.Join, stats: dict[int, TableStats], cap) -> float:
@@ -152,7 +174,7 @@ def _resident_peak(order, roots, stats) -> float:
 
 
 _ROWWISE = ("filter", "project", "assign", "rename", "astype", "fillna",
-            "map_rows", "head")
+            "map_rows", "head", "fused_rowwise")
 
 
 def _chunked_peak(order, roots, stats, chunk_rows: int,

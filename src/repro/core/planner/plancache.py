@@ -108,6 +108,8 @@ _NODE_FP = {
     "concat": lambda n: ("concat", len(n.inputs)),
     "reduce": lambda n: ("reduce", n.column, n.fn),
     "length": lambda n: ("length",),
+    "fused_rowwise": lambda n: (
+        ("fused",) + tuple(_NODE_FP[m.op](m) for m in n.ops)),
     # map_rows / sink_print / materialized / handoff deliberately absent:
     # opaque code, side effects, or embedded payloads → uncacheable.
 }
@@ -130,6 +132,8 @@ def _env_fp(ctx) -> tuple:
             str(opts.get("placement", "operator")),
             int(opts.get("chunk_rows", 1 << 16)),
             bool(opts.get("rewrites", True)),
+            bool(opts.get("fusion", True)),
+            str(opts.get("kernel_impl", "auto")),
             ctx.memory_budget)
 
 

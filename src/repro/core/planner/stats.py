@@ -195,6 +195,11 @@ def estimate_node(n: G.Node, child_stats: list[TableStats]) -> TableStats:
     if isinstance(n, G.SinkPrint):
         return TableStats(rows=0.0, col_bytes={}, ndv={}, zonemap={})
     c = child_stats[0] if child_stats else TableStats(0.0, {}, {}, {})
+    if isinstance(n, G.FusedRowwise):
+        st = c
+        for m in n.ops:          # fold member estimates innermost-first
+            st = estimate_node(m, [st])
+        return st
     if isinstance(n, G.Filter):
         return c.scaled(predicate_selectivity(n.predicate, c))
     if isinstance(n, G.Project):

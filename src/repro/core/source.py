@@ -89,10 +89,28 @@ class Source:
 
 
 def _zonemap(arrays: Mapping[str, np.ndarray]) -> dict:
+    """Per-partition (min, max) column stats for partition skipping.
+
+    When the kernel config resolves to a device implementation ("pallas"
+    on TPU hosts) numeric columns route through the blocked
+    ``repro.kernels.ops.zonemap`` kernel; host builds keep the numpy fast
+    path — same contract, no device round-trip."""
+    kernel = None
+    try:
+        from ..kernels import ops as _K
+        if _K.get_kernel_config().resolved() == "pallas":
+            kernel = _K
+    except Exception:  # noqa: BLE001 — stats are best-effort
+        kernel = None
     zm = {}
     for name, arr in arrays.items():
         if arr.dtype.kind in "ifu" and arr.size:
-            zm[name] = (arr.min().item(), arr.max().item())
+            if kernel is not None:
+                mins, maxs = kernel.zonemap(arr)
+                zm[name] = (np.asarray(mins).min().item(),
+                            np.asarray(maxs).max().item())
+            else:
+                zm[name] = (arr.min().item(), arr.max().item())
     return zm
 
 

@@ -42,10 +42,17 @@ def _compact_kernel(mask_ref, values_ref, out_ref, count_ref, off_ref):
     cnt = jnp.sum(mask.astype(jnp.int32))
     slots = jax.lax.broadcasted_iota(jnp.int32, (b, b), 1)
     onehot = ((pos[:, None] == slots) & mask[:, None]).astype(jnp.float32)
-    packed = jax.lax.dot_general(
-        onehot, values.astype(jnp.float32),
+    # NaN-safe permutation: 0·NaN = NaN would poison every matmul slot, so
+    # the matmul moves zeroed values alongside an isnan indicator column
+    # and NaNs are re-materialized in their permuted slots afterwards
+    nan_row = jnp.isnan(values)
+    rhs = jnp.stack([jnp.where(nan_row, 0.0, values.astype(jnp.float32)),
+                     nan_row.astype(jnp.float32)], axis=1)       # (B, 2)
+    packed2 = jax.lax.dot_general(
+        onehot, rhs,
         dimension_numbers=(((0,), (0,)), ((), ())),
-        preferred_element_type=jnp.float32)               # (B,) permuted
+        preferred_element_type=jnp.float32)               # (B, 2) permuted
+    packed = jnp.where(packed2[:, 1] > 0, jnp.nan, packed2[:, 0])
     off = off_ref[0]
     out_ref[pl.ds(off, b)] = packed
     off_ref[0] = off + cnt

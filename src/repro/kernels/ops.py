@@ -86,6 +86,10 @@ def filter_compact_chunked(values, mask, chunk: int = 1 << 20,
 
 def zonemap(values, block_rows: int = 4096, cfg: KernelConfig | None = None):
     cfg = cfg or _CONFIG
+    if values.shape[0] == 0:
+        # unified empty contract: no rows → no blocks (the Pallas kernel
+        # would otherwise emit one identity-padded block)
+        return (jnp.zeros((0,), values.dtype), jnp.zeros((0,), values.dtype))
     if cfg.resolved() == "pallas":
         return _zonemap_pallas(values, block_rows=block_rows,
                                interpret=cfg.interpret)

@@ -4,10 +4,10 @@ Any DataFrame / Series / GroupBy method or accessor field the lazy layer
 does not implement natively is served from a registered numpy-level kernel
 table instead of raising ``AttributeError``:
 
-* **aligned elementwise ops** (clip, abs, round, dt.quarter, str.len, …)
+* **aligned elementwise ops** (clip, abs, round, dt.dayofyear, str.len, …)
   stay lazy — the kernel is wrapped as a UDF expression node and executes
   per partition at force time (safe: value depends only on the row);
-* **everything else** (nlargest, value_counts, median, groupby.std, …)
+* **everything else** (nlargest, value_counts, quantile, groupby.std, …)
   *materializes its inputs*, runs the kernel eagerly on host numpy, and
   re-wraps the result as a new lazy in-memory source;
 * ops with **no registered kernel** raise ``AttributeError`` *after*
@@ -283,7 +283,7 @@ def _s_value_counts(arr):
 
 
 SERIES_KERNELS = {
-    "median": lambda arr: np.nanmedian(arr),
+    # median graduated to a native Reduce node (repro.core.physical.reduce)
     "std": lambda arr, ddof=1: np.nanstd(arr, ddof=ddof),
     "var": lambda arr, ddof=1: np.nanvar(arr, ddof=ddof),
     "quantile": lambda arr, q=0.5: np.nanquantile(arr, q),
@@ -458,7 +458,7 @@ def _dt_days_in_month(ts):
 DT_KERNELS = {
     "weekday": lambda ts: ((np.asarray(ts) // 86400) + 3) % 7,
     "dayofyear": _dt_dayofyear,
-    "quarter": lambda ts: (_dt_civil(ts)[1] - 1) // 3 + 1,
+    # quarter graduated to a native DtField expr (repro.core.expr._DT_FIELDS)
     "days_in_month": _dt_days_in_month,
     "is_month_start": lambda ts: _dt_civil(ts)[2] == 1,
     "is_month_end": lambda ts: _dt_civil(ts)[2] == _dt_days_in_month(ts),

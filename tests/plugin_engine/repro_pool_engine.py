@@ -278,6 +278,10 @@ class PoolEngine:
             return self._load_scan(n)
         if n.op in _ROWWISE:
             return self._rowwise(n, vals[0])
+        if isinstance(n, G.FusedRowwise):
+            # host tables take the sequential member path inside the shared
+            # physical implementation — semantics identical to the chain
+            return X.apply_fused_rowwise(vals[0], n.ops)
         if isinstance(n, G.Head):
             return {k: v[: n.n] for k, v in vals[0].items()}
         if isinstance(n, G.SortValues):

@@ -333,6 +333,26 @@ def test_conformance_plan_cache(engine, name, prog):
     assert_frame_matches(warm, _ground_truth(name), **opts)
 
 
+@pytest.mark.parametrize("fusion", (True, False), ids=("fused", "unfused"))
+@pytest.mark.parametrize("engine", ENGINES)
+@pytest.mark.parametrize("name,prog", CORPUS, ids=[n for n, _ in CORPUS])
+def test_conformance_fusion(engine, name, prog, fusion):
+    # the rowwise fusion pass must be invisible to results: every corpus
+    # program under session(fusion=True) is bit-identical to the same
+    # program with the pass disabled, on every engine
+    from repro.core.context import session
+
+    with session(engine=engine, fusion=fusion, name="fz") as ctx:
+        ctx.print_fn = lambda *a: None
+        got = prog(rpd, np.random.default_rng(0))
+    with session(engine=engine, fusion=not fusion, name="fz2") as ctx:
+        ctx.print_fn = lambda *a: None
+        other = prog(rpd, np.random.default_rng(0))
+    _assert_bit_identical(got, other)
+    _, opts = _REFS[name]
+    assert_frame_matches(got, _ground_truth(name), **opts)
+
+
 # ---------------------------------------------------------------------------
 # Distributed-engine conformance: join / sort / distinct programs.  These
 # paths were untested eager fallbacks before the native distributed

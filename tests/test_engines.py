@@ -412,7 +412,7 @@ def test_explain_covers_every_segment_handoff_fallback_and_scale(monkeypatch):
     df = core.read_source(src)
     df[df["fare"] > 10.0].groupby("vendor")["miles"].sum().compute()
     # a facade fallback event too
-    pd.Series(np.arange(10.0), name="v").median()
+    pd.Series(np.arange(10.0), name="v").std()
 
     rep = ctx.report()
     auto_runs = [r for r in rep.runs if r.engine == "auto"]
@@ -430,7 +430,7 @@ def test_explain_covers_every_segment_handoff_fallback_and_scale(monkeypatch):
     assert h.payload_kind == "table" and not h.device_resident
     assert h.producer == "streaming" and "eager" in h.consumers
     # fallback events covered
-    assert any(f.op == "Series.median" for f in rep.fallbacks)
+    assert any(f.op == "Series.std" for f in rep.fallbacks)
     # calibration scales covered once enough samples exist
     _calibrate_pool_fastest(ctx.stats_store)
     rep2 = ctx.report()

@@ -88,3 +88,96 @@ def test_kernel_config_dispatch():
     p = np.asarray(ops.groupby_sum(codes, vals, 2, cfg_p))
     np.testing.assert_allclose(x, p, rtol=1e-6)
     assert ops.KernelConfig(impl="auto").resolved() == "xla"  # CPU host
+
+
+# ---------------------------------------------------------------------------
+# Boundary shapes, differential against ref.py on both impls — the fused
+# physical path leans on these exact edges (empty partitions, filters that
+# kill every row, row counts that don't fill a block, NaN-bearing columns).
+
+_IMPLS = [ops.KernelConfig(impl="xla"), ops.KernelConfig(impl="pallas")]
+_IMPL_IDS = ["xla", "pallas"]
+
+
+@pytest.mark.parametrize("cfg", _IMPLS, ids=_IMPL_IDS)
+def test_filter_compact_empty_input(cfg):
+    vals = jnp.zeros((0,), jnp.float32)
+    mask = jnp.zeros((0,), bool)
+    got, cnt = ops.filter_compact(vals, mask, cfg)
+    want, wcnt = ref.filter_compact_ref(vals, mask)
+    assert int(cnt) == int(wcnt) == 0
+    assert got.shape == want.shape == (0,)
+
+
+@pytest.mark.parametrize("cfg", _IMPLS, ids=_IMPL_IDS)
+@pytest.mark.parametrize("n", [1, 127, 1000])
+def test_filter_compact_all_false_mask(rng, cfg, n):
+    vals = jnp.asarray(rng.normal(size=n).astype(np.float32))
+    mask = jnp.zeros((n,), bool)
+    got, cnt = ops.filter_compact(vals, mask, cfg)
+    want, wcnt = ref.filter_compact_ref(vals, mask)
+    assert int(cnt) == int(wcnt) == 0
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+@pytest.mark.parametrize("cfg", _IMPLS, ids=_IMPL_IDS)
+@pytest.mark.parametrize("n", [1, 65, 129, 1023])   # never a block multiple
+def test_filter_compact_non_block_multiple(rng, cfg, n):
+    vals = jnp.asarray(rng.normal(size=n).astype(np.float32))
+    mask = jnp.asarray(rng.random(n) < 0.5)
+    got, cnt = ops.filter_compact(vals, mask, cfg)
+    want, wcnt = ref.filter_compact_ref(vals, mask)
+    assert int(cnt) == int(wcnt)
+    np.testing.assert_allclose(np.asarray(got)[: int(cnt)],
+                               np.asarray(want)[: int(wcnt)], rtol=1e-6)
+
+
+@pytest.mark.parametrize("cfg", _IMPLS, ids=_IMPL_IDS)
+def test_filter_compact_nan_values_survive(rng, cfg):
+    vals = rng.normal(size=257).astype(np.float32)
+    vals[::5] = np.nan
+    mask = rng.random(257) < 0.4
+    got, cnt = ops.filter_compact(jnp.asarray(vals), jnp.asarray(mask), cfg)
+    packed = np.asarray(got)[: int(cnt)]
+    expect = vals[mask]
+    assert int(cnt) == int(mask.sum())
+    np.testing.assert_array_equal(np.isnan(packed), np.isnan(expect))
+    np.testing.assert_allclose(packed[~np.isnan(expect)],
+                               expect[~np.isnan(expect)], rtol=1e-6)
+
+
+@pytest.mark.parametrize("cfg", _IMPLS, ids=_IMPL_IDS)
+def test_groupby_sum_empty_input(cfg):
+    got = ops.groupby_sum(jnp.zeros((0,), jnp.int32),
+                          jnp.zeros((0,), jnp.float32), 4, cfg)
+    np.testing.assert_array_equal(np.asarray(got), np.zeros(4, np.float32))
+
+
+@pytest.mark.parametrize("cfg", _IMPLS, ids=_IMPL_IDS)
+@pytest.mark.parametrize("n", [1, 130, 999])
+def test_groupby_sum_non_block_multiple(rng, cfg, n):
+    codes = jnp.asarray(rng.integers(0, 5, n).astype(np.int32))
+    vals = jnp.asarray(rng.normal(size=n).astype(np.float32))
+    got = ops.groupby_sum(codes, vals, 5, cfg)
+    want = ref.groupby_sum_ref(codes, vals, 5)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=3e-4, atol=1e-3)
+
+
+@pytest.mark.parametrize("cfg", _IMPLS, ids=_IMPL_IDS)
+def test_zonemap_empty_input(cfg):
+    mn, mx = ops.zonemap(jnp.zeros((0,), jnp.float32), 64, cfg)
+    assert mn.shape == mx.shape == (0,)
+
+
+@pytest.mark.parametrize("cfg", _IMPLS, ids=_IMPL_IDS)
+@pytest.mark.parametrize("n", [1, 63, 4097])
+def test_zonemap_non_block_multiple(rng, cfg, n):
+    vals = jnp.asarray(rng.normal(size=n).astype(np.float32))
+    mn, mx = ops.zonemap(vals, 64, cfg)
+    rmn, rmx = ref.zonemap_ref(vals, 64)
+    np.testing.assert_allclose(np.asarray(mn), np.asarray(rmn))
+    np.testing.assert_allclose(np.asarray(mx), np.asarray(rmx))
+    # global reduction matches the raw column (partition-skip contract)
+    assert np.asarray(mn).min() == np.asarray(vals).min()
+    assert np.asarray(mx).max() == np.asarray(vals).max()

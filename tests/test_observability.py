@@ -20,8 +20,8 @@ def _corpus_program():
     df = df[df["fare"] > 10.0]
     df["tip"] = df["fare"] * 0.2
     by_vendor = df.groupby("vendor")["tip"].sum().compute()
-    med = df["fare"].median()                       # measured fallback
-    return by_vendor, med
+    std = df["fare"].std()                          # measured fallback
+    return by_vendor, std
 
 
 # ---------------------------------------------------------------------------
@@ -40,10 +40,11 @@ def test_profile_span_tree_covers_plan_segments_operators():
     for s in segs:
         assert s.duration > 0
         assert s.attrs.get("engine")
-    # operator spans carry row counts
+    # operator spans carry row counts; the rowwise chain (filter + assign)
+    # executes as one fused operator span
     ops = {s.attrs.get("op") for s in prof.find("operator")}
-    assert "filter" in ops and "groupby_agg" in ops
-    filt = prof.find("operator", op="filter")[0]
+    assert "fused_rowwise" in ops and "groupby_agg" in ops
+    filt = prof.find("operator", op="fused_rowwise")[0]
     assert filt.attrs["rows_in"] == 200 and filt.attrs["rows_out"] == 189
     assert filt.attrs.get("bytes_out", 0) > 0
     # spans nest: plan and segment are children of an execute span
@@ -64,7 +65,7 @@ def test_profile_render_is_indented_tree_with_counters():
     assert text.splitlines()[0].startswith("profile session=rendered")
     assert "  execute " in text
     assert "    segment " in text            # child of execute: deeper indent
-    assert "op=filter" in text
+    assert "op=fused_rowwise" in text        # the filter+assign chain fused
     assert "counters:" in text
 
 

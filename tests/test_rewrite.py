@@ -232,7 +232,7 @@ top = df.sort_values("fare").head(10)
 uniq = df.sort_values("fare").drop_duplicates()
 skip = df.sort_values("fare", ascending=False).drop_duplicates()
 big = df.nlargest(5, "fare")
-med = df["fare"].median()
+dev = df["fare"].std()
 boom = df.pivot_table(index="fare")
 vec = df.apply_rows(lambda t: {"x": t["fare"] * 2})
 '''
