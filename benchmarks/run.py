@@ -12,6 +12,8 @@ Prints ``name,us_per_call,derived`` CSV rows.
 * kernels             — dataframe-kernel microbenchmarks (XLA oracle path)
 * rewrites            — plan-rewrite figure: sort+head vs the TopK rewrite,
                         native nlargest vs the old fallback path
+* scan_pushdown       — columnar-IO figure: bytes read with scan pushdown +
+                        zone-map pruning on vs full read (scan_pushdown.json)
 * observability       — telemetry overhead: uninstrumented vs disabled vs
                         profiled, plus the trace_golden Chrome trace
 * serving             — concurrent sessions over repeated plan shapes:
@@ -484,6 +486,82 @@ def fusion():
     emit("fusion_json", 0.0, path)
 
 
+def scan_pushdown():
+    """Columnar-IO figure: a selective filter over a sorted on-disk key,
+    scan pushdown + zone-map pruning on (dead partitions never leave the
+    disk) vs the full-read escape hatch (``session(pushdown=False,
+    zonemap=False)``).  Parquet when pyarrow is available, NPZ fallback
+    otherwise.  Writes ``scan_pushdown.json``; CI gates on
+    ``bytes_reduction >= 2``."""
+    import tempfile
+
+    import repro.core as core
+    from repro.core.context import session
+
+    t_fig = time.perf_counter()
+    n = max(SCALE, 65_536)
+    n_parts = 16
+    rows = -(-n // n_parts)
+    rng = np.random.default_rng(0)
+    arrays = {"key": np.arange(n, dtype=np.float64),
+              "a": rng.random(n), "b": rng.random(n), "c": rng.random(n)}
+    cut = float(n - rows)            # keeps exactly the last partition live
+    reps = int(os.environ.get("REPRO_SCAN_REPS", 3))
+    out: dict = {"rows": n, "partitions": n_parts, "reps": reps}
+
+    with tempfile.TemporaryDirectory() as td:
+        try:
+            from repro.io.parquet import write_parquet_source
+            src = write_parquet_source(os.path.join(td, "t"), arrays, rows)
+            out["format"] = "parquet"
+        except ImportError:
+            from repro.core.source import write_npz_source
+            src = write_npz_source(os.path.join(td, "t"), arrays, rows)
+            out["format"] = "npz"
+
+        def run(**opts):
+            best, counters = float("inf"), {}
+            for _ in range(reps + 1):        # first rep is warmup
+                with session(engine="streaming", **opts) as ctx:
+                    ctx.print_fn = lambda *a: None
+                    df = core.read_source(src)
+                    r = df[df["key"] >= cut]
+                    t0 = time.perf_counter()
+                    float(r["a"].sum()), float(r["b"].sum())
+                    best = min(best, time.perf_counter() - t0)
+                    counters = {k: v for k, v in ctx.metrics.snapshot().items()
+                                if k.startswith("io.")}
+            return best, counters
+
+        t_on, io_on = run()
+        t_off, io_off = run(pushdown=False, zonemap=False)
+
+    b_on, b_off = io_on.get("io.bytes_read", 0), io_off.get("io.bytes_read", 0)
+    reduction = b_off / max(b_on, 1)
+    out["results"] = {
+        "pushdown": {"seconds": t_on, "io": io_on},
+        "fullread": {"seconds": t_off, "io": io_off},
+        "bytes_pushdown": b_on,
+        "bytes_fullread": b_off,
+        "bytes_reduction": reduction,
+        "speedup": t_off / max(t_on, 1e-12),
+    }
+    out["meta"] = _bench_meta(t_fig)
+    path = os.environ.get("REPRO_SCAN_PUSHDOWN_OUT", "scan_pushdown.json")
+    with open(path, "w") as f:
+        json.dump(out, f, indent=2)
+    emit("scan_pushdown_on", t_on * 1e6,
+         f"{out['format']} bytes={b_on / 1e6:.1f}MB "
+         f"loaded={io_on.get('io.partitions_loaded', 0)} "
+         f"pruned={io_on.get('io.partitions_pruned', 0)}")
+    emit("scan_pushdown_off", t_off * 1e6,
+         f"bytes={b_off / 1e6:.1f}MB "
+         f"loaded={io_off.get('io.partitions_loaded', 0)}")
+    emit("scan_pushdown_json", 0.0,
+         f"{path} reduction={reduction:.1f}x "
+         f"speedup={t_off / max(t_on, 1e-12):.2f}x")
+
+
 def analysis_overhead():
     """Paper §5.3: 0.04–0.59 s static-analysis overhead."""
     import inspect
@@ -860,7 +938,8 @@ def roofline():
 
 ALL_FIGURES = (fig12_applicability, fig13_exec_time, fig14_speedup,
                fig15_memory, backend_selection, api_coverage, rewrites,
-               fusion, analysis_overhead, ablation_persist, kernels,
+               fusion, scan_pushdown, analysis_overhead, ablation_persist,
+               kernels,
                observability, serving, roofline)
 
 

@@ -79,13 +79,15 @@ _REG.register("eager", EagerBackend, BackendCapability(
     name="eager", native_ops=_ALL_OPS,
     startup_cost=1e3, scan_cost_per_byte=1.0, row_cost=1.0,
     parallelism=4.0, transfer_cost_per_byte=0.5, fallback_penalty=1.0,
-    peak_model="resident"), source="builtin", replace=True)
+    peak_model="resident", scan_pushdown=True),
+    source="builtin", replace=True)
 
 _REG.register("streaming", StreamingBackend, BackendCapability(
     name="streaming", native_ops=_ALL_OPS,
     startup_cost=2e3, scan_cost_per_byte=1.5, row_cost=2.0,
     parallelism=1.0, transfer_cost_per_byte=0.0, fallback_penalty=1.0,
-    peak_model="chunked"), source="builtin", replace=True)
+    peak_model="chunked", scan_pushdown=True),
+    source="builtin", replace=True)
 
 _REG.register("distributed", DistributedBackend, BackendCapability(
     name="distributed",
@@ -102,7 +104,7 @@ _REG.register("distributed", DistributedBackend, BackendCapability(
     parallelism=8.0, transfer_cost_per_byte=2.0, fallback_penalty=3.0,
     peak_model="sharded",
     broadcast_join_bytes=_broadcast_build_bytes(),
-    keeps_device_payloads=True,
+    keeps_device_payloads=True, scan_pushdown=True,
     shard_count=_device_count), source="builtin", replace=True)
 
 

@@ -204,19 +204,19 @@ class DistributedBackend:
         return self.mesh.shape[self.axis]
 
     def _load_sharded(self, n: G.Scan) -> ShardedTable:
-        parts = []
-        for pi in range(n.source.n_partitions):
-            if pi in n.skip_partitions:
-                continue
-            part = n.source.load_partition(pi, n.columns)
-            for c, dt in n.dtype_overrides.items():
-                if c in part:
-                    part[c] = part[c].astype(dt)
-            parts.append({k: np.asarray(v) for k, v in part.items()})
+        # shared pushdown-aware loader (repro.io): per-partition column
+        # projection + pushed-down predicate, io.* accounting
+        from repro.io.scan import (empty_scan_table, load_scan_partition,
+                                   scan_partition_indices)
+        ctx = self._ctx
+        metrics = getattr(ctx, "metrics", None)
+        tracer = getattr(ctx, "tracer", None)
+        if metrics is not None and n.skip_partitions:
+            metrics.inc("io.partitions_pruned", len(n.skip_partitions))
+        parts = [load_scan_partition(n, pi, metrics=metrics, tracer=tracer)
+                 for pi in scan_partition_indices(n)]
         if not parts:
-            cols = n.columns or n.source.schema.names
-            parts = [{c: np.zeros(0, n.source.schema.col(c).np_dtype)
-                      for c in cols}]
+            parts = [empty_scan_table(n)]
         full = {c: np.concatenate([p[c] for p in parts]) for c in parts[0]}
         return X.shard_host_table(full, self.mesh, self.axis)
 

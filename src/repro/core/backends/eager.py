@@ -23,19 +23,19 @@ class EagerBackend:
         self.device_arrays = device_arrays
 
     # -- node evaluation ------------------------------------------------------
-    def _load_scan(self, n: G.Scan):
-        parts = []
-        for pi in range(n.source.n_partitions):
-            if pi in n.skip_partitions:
-                continue
-            part = n.source.load_partition(pi, n.columns)
-            for c, dt in n.dtype_overrides.items():
-                if c in part:
-                    part[c] = part[c].astype(dt)
-            parts.append(part)
+    def _load_scan(self, n: G.Scan, ctx: LaFPContext | None = None):
+        # shared pushdown-aware loader (repro.io): per-partition column
+        # projection + pushed-down predicate, io.* accounting
+        from repro.io.scan import (empty_scan_table, load_scan_partition,
+                                   scan_partition_indices)
+        metrics = getattr(ctx, "metrics", None)
+        tracer = getattr(ctx, "tracer", None)
+        if metrics is not None and n.skip_partitions:
+            metrics.inc("io.partitions_pruned", len(n.skip_partitions))
+        parts = [load_scan_partition(n, pi, metrics=metrics, tracer=tracer)
+                 for pi in scan_partition_indices(n)]
         if not parts:
-            cols = n.columns or n.source.schema.names
-            return {c: np.zeros(0, n.source.schema.col(c).np_dtype) for c in cols}
+            return empty_scan_table(n)
         table = {c: np.concatenate([p[c] for p in parts]) for c in parts[0]}
         if self.device_arrays:
             table = X.to_jax(table)
@@ -47,7 +47,7 @@ class EagerBackend:
         if isinstance(n, G.Materialized):
             return (X.to_jax(n.table) if self.device_arrays else n.table)
         if isinstance(n, G.Scan):
-            return self._load_scan(n)
+            return self._load_scan(n, ctx)
         if isinstance(n, G.Filter):
             return X.apply_filter(vals[0], n.predicate)
         if isinstance(n, G.Project):

@@ -109,25 +109,16 @@ class StreamingBackend:
             yield from _part_stream_from_table(n.table, self.chunk_rows)
             return
         if isinstance(n, G.Scan):
-            yielded = False
-            for pi in range(n.source.n_partitions):
-                if pi in n.skip_partitions:
-                    continue
-                part = n.source.load_partition(pi, n.columns)
-                part = {k: np.asarray(v) for k, v in part.items()}
-                for c, dt in n.dtype_overrides.items():
-                    if c in part:
-                        part[c] = part[c].astype(dt)
+            # shared pushdown-aware loader (repro.io): projection ∪
+            # predicate columns read, pushed-down conjuncts applied per
+            # partition, async prefetch for prefetchable sources; yields a
+            # 0-row schema-bearing table when everything is pruned
+            from repro.io.scan import iter_scan_partitions
+            for part in iter_scan_partitions(n, ctx=self._ctx):
                 nb = X.table_nbytes(part)
                 meter.alloc(nb, f"scan#{n.id}")
-                yielded = True
                 yield part
                 meter.free(nb)
-            if not yielded:
-                # all partitions zone-map-pruned: 0-row table, schema intact
-                cols = n.columns or n.source.schema.names
-                yield {c: np.zeros(0, n.source.schema.col(c).np_dtype)
-                       for c in cols}
             return
         if n.op in _STREAM_ROWWISE:
             for part in self.stream(n.inputs[0]):
@@ -254,8 +245,10 @@ class StreamingBackend:
             return None
         if isinstance(n, G.Length):
             child = n.inputs[0]
-            # fast path: pure scan → metadata row counts, no IO
-            if isinstance(child, G.Scan):
+            # fast path: pure scan → metadata row counts, no IO.  A scan
+            # with a pushed-down predicate filters rows at load time, so
+            # metadata counts would overcount — stream it instead.
+            if isinstance(child, G.Scan) and child.pushdown is None:
                 total = 0
                 metas_ok = True
                 for pi in range(child.source.n_partitions):

@@ -236,7 +236,11 @@ def session(engine: str | BackendEngines | None = None,
 
     Extra keyword options flow into ``ctx.backend_options`` — e.g.
     ``session(engine="auto", placement="per_root")`` selects the legacy
-    per-root planner strategy for the block.
+    per-root planner strategy for the block.  IO-layer knobs:
+    ``pushdown=False`` disables the scan-pushdown optimizer pass (filters
+    stay as plan nodes — the differential-testing escape hatch), and
+    ``io_prefetch=N`` sets the async partition-prefetch depth for
+    prefetchable on-disk sources (0 disables; default 2).
 
     ``stats_path`` persists the session's stats store (cardinality feedback
     + runtime/peak calibration samples) to a JSON file: reloaded here,

@@ -84,6 +84,12 @@ class BackendCapability:
     # True → the engine can hand ``Handoff`` payloads to a same-engine
     # consumer segment device-resident (no host gather at the boundary)
     keeps_device_payloads: bool = False
+    # True → the engine executes ``Scan.pushdown`` (pushed-down filter
+    # conjuncts evaluated at load time — e.g. via the shared
+    # ``repro.io.scan`` loader).  The optimizer only sinks predicates into
+    # scans when every engine the plan could land on declares this;
+    # engines that ignore the attribute would silently drop the filter.
+    scan_pushdown: bool = False
     # shard count used by the "sharded" peak model (None → 1)
     shard_count: Callable[[], int] | None = None
 

@@ -140,6 +140,9 @@ class ExplainReport:
     fallbacks: tuple[FallbackRecord, ...]
     calibration: tuple[CalibrationRecord, ...]
     diagnostics: tuple[DiagnosticRecord, ...] = ()
+    # cumulative ``io.*`` counters at report time (partitions loaded /
+    # pruned / prefetched, bytes read, pushdown row accounting)
+    io_counters: dict[str, int] = dataclasses.field(default_factory=dict)
 
     # -- rendering ----------------------------------------------------------
 
@@ -210,6 +213,13 @@ class ExplainReport:
                 bit += f" (n={c.runtime_samples}/{c.peak_samples})"
                 parts.append(bit)
             lines.append("calibration: " + "; ".join(parts))
+        if self.io_counters:
+            parts = []
+            for k, v in sorted(self.io_counters.items()):
+                short = k.split(".", 1)[1]
+                parts.append(f"{short}={v / 1e6:.1f}MB" if short == "bytes_read"
+                             else f"{short}={v}")
+            lines.append("io: " + " ".join(parts))
         return "\n".join(lines)
 
     def __str__(self) -> str:
@@ -227,9 +237,23 @@ class ExplainReport:
 def _op_label(n) -> str:
     """Operator label for plan rendering: fused segments expand their
     member ops — ``fused[filter,assign,...]`` — so a plan reader sees what
-    the single node executes."""
+    the single node executes; scans carrying pushdown state render it —
+    ``scan[cols=3,pred=2,pruned 4/16]`` — so a reader sees what never
+    leaves the disk."""
     if n.op == "fused_rowwise":
         return "fused[" + ",".join(m.op for m in n.ops) + "]"
+    if n.op == "scan":
+        bits = []
+        if n.columns is not None:
+            bits.append(f"cols={len(n.columns)}")
+        pushdown = getattr(n, "pushdown", None)
+        if pushdown is not None:
+            bits.append(f"pred={len(pushdown.conjuncts)}")
+        if n.skip_partitions:
+            total = getattr(n.source, "n_partitions", "?")
+            bits.append(f"pruned {len(n.skip_partitions)}/{total}")
+        if bits:
+            return "scan[" + ",".join(bits) + "]"
     return n.op
 
 
@@ -359,6 +383,14 @@ def _diagnostic_records(ctx) -> tuple[DiagnosticRecord, ...]:
     return tuple(out)
 
 
+def _io_counter_snapshot(ctx) -> dict[str, int]:
+    metrics = getattr(ctx, "metrics", None)
+    if metrics is None:
+        return {}
+    return {k: v for k, v in metrics.snapshot().items()
+            if k.startswith("io.")}
+
+
 def build_report(ctx) -> ExplainReport:
     """Typed report of everything ``ctx`` ran so far."""
     return ExplainReport(
@@ -367,7 +399,8 @@ def build_report(ctx) -> ExplainReport:
         runs=tuple(getattr(ctx, "run_records", ()) or ()),
         fallbacks=_fallback_records(ctx),
         calibration=_calibration_records(ctx),
-        diagnostics=_diagnostic_records(ctx))
+        diagnostics=_diagnostic_records(ctx),
+        io_counters=_io_counter_snapshot(ctx))
 
 
 def explain(obj=None, ctx=None) -> ExplainReport:

@@ -12,7 +12,7 @@ from __future__ import annotations
 import itertools
 from typing import Any, Iterable, Mapping, Sequence
 
-from .expr import Expr
+from .expr import Expr, conjoin
 
 _ids = itertools.count()
 
@@ -73,20 +73,60 @@ class Node:
 # Sources
 
 
+class ScanPushdown:
+    """Filter conjuncts sunk into a :class:`Scan` (scan-level predicate
+    pushdown, ``repro.io``).  The scan's loader evaluates the ANDed
+    conjuncts on each decoded partition and keeps only passing rows, so
+    filtered rows never reach the engine — and partitions the conjuncts
+    prove all-False are never read at all (``skip_partitions``).
+
+    Immutable; part of the scan's structural identity (``Scan.key`` and the
+    plan-cache fingerprint both cover the conjunct keys)."""
+
+    __slots__ = ("conjuncts",)
+
+    def __init__(self, conjuncts: Sequence[Expr]):
+        self.conjuncts: tuple[Expr, ...] = tuple(conjuncts)
+
+    @property
+    def predicate(self) -> Expr:
+        return conjoin(list(self.conjuncts))
+
+    def used_cols(self) -> frozenset[str]:
+        out: frozenset[str] = frozenset()
+        for c in self.conjuncts:
+            out |= c.used_cols()
+        return out
+
+    def key(self) -> tuple:
+        return ("pushdown",) + tuple(c.key() for c in self.conjuncts)
+
+    def __repr__(self):
+        return f"ScanPushdown({len(self.conjuncts)} conjuncts)"
+
+
 class Scan(Node):
     """Read a partitioned columnar source. ``columns=None`` → all columns.
 
     Column selection (§3.1) rewrites ``columns``; zone-map pruning (beyond
-    paper) fills ``skip_partitions`` at plan time."""
+    paper) fills ``skip_partitions`` at plan time; the scan-pushdown pass
+    (``repro.io``) sinks filter conjuncts into ``pushdown`` so rows are
+    dropped at decode time and proven-empty partitions are never read."""
     op = "scan"
 
     def __init__(self, source, columns: tuple[str, ...] | None = None,
-                 dtype_overrides: Mapping[str, str] | None = None):
+                 dtype_overrides: Mapping[str, str] | None = None,
+                 pushdown: ScanPushdown | None = None):
         super().__init__([])
         self.source = source
         self.columns = tuple(columns) if columns is not None else None
         self.dtype_overrides = dict(dtype_overrides or {})
         self.skip_partitions: frozenset[int] = frozenset()
+        self.pushdown = pushdown
+
+    def used_attrs(self):
+        return self.pushdown.used_cols() if self.pushdown is not None \
+            else frozenset()
 
     def out_cols(self, in_cols):
         if self.columns is not None:
@@ -97,11 +137,14 @@ class Scan(Node):
         token = getattr(self.source, "cache_token", None)
         token = token() if callable(token) else id(self.source)
         return ("scan", token, self.columns,
-                tuple(sorted(self.dtype_overrides.items())), self.skip_partitions)
+                tuple(sorted(self.dtype_overrides.items())),
+                self.skip_partitions,
+                self.pushdown.key() if self.pushdown is not None else None)
 
     def with_inputs(self, inputs):
         assert not inputs
-        n = Scan(self.source, self.columns, self.dtype_overrides)
+        n = Scan(self.source, self.columns, self.dtype_overrides,
+                 pushdown=self.pushdown)
         n.skip_partitions = self.skip_partitions
         return n
 

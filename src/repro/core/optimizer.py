@@ -342,7 +342,8 @@ def column_selection(roots: list[G.Node], ctx: LaFPContext | None = None,
                 cheapest = min(n.source.schema.columns, key=lambda c: c.itemsize)
                 need = frozenset([cheapest.name])
             if need < current:
-                ns = G.Scan(n.source, tuple(sorted(need)), n.dtype_overrides)
+                ns = G.Scan(n.source, tuple(sorted(need)), n.dtype_overrides,
+                            pushdown=n.pushdown)
                 ns.skip_partitions = n.skip_partitions
                 replace[n.id] = ns
                 if trace is not None:
@@ -405,7 +406,8 @@ def zone_map_pruning(roots: list[G.Node], trace=None
             if any(c.prune_partition(zonemap) for c in usable):
                 skips.add(pi)
         if skips != set(scan.skip_partitions):
-            ns = G.Scan(scan.source, scan.columns, scan.dtype_overrides)
+            ns = G.Scan(scan.source, scan.columns, scan.dtype_overrides,
+                        pushdown=scan.pushdown)
             ns.skip_partitions = frozenset(skips)
             replace[scan.id] = ns
             if trace is not None:
@@ -414,6 +416,89 @@ def zone_map_pruning(roots: list[G.Node], trace=None
     if not replace:
         return roots, {}
     return _rebuild(roots, replace)
+
+
+# ---------------------------------------------------------------------------
+# Scan predicate pushdown (beyond paper; the IO-subsystem boundary)
+
+
+def _has_udf(e: E.Expr) -> bool:
+    import dataclasses
+    if isinstance(e, E.UDF):
+        return True
+    if dataclasses.is_dataclass(e):
+        for f in dataclasses.fields(e):
+            v = getattr(e, f.name)
+            for x in (v if isinstance(v, (list, tuple)) else (v,)):
+                if isinstance(x, E.Expr) and _has_udf(x):
+                    return True
+    return False
+
+
+def scan_pushdown(roots: list[G.Node], trace=None
+                  ) -> tuple[list[G.Node], dict[int, G.Node]]:
+    """Sink a Filter's conjuncts into the Scan beneath it
+    (``Scan.pushdown``), so the source layer evaluates the predicate per
+    partition right after decode — the Filter node disappears from the
+    plan, and the scan's column set can then shrink to the output
+    projection (predicate-only columns are read transiently by the
+    loader, never materialized downstream).
+
+    Runs after ``push_filters`` (which lands fused filters directly on
+    scans) and after ``zone_map_pruning`` (which needs the Filter
+    present); conjuncts that reference UDFs or non-source columns stay in
+    a residual Filter.  Sources must opt in via ``supports_pushdown``."""
+    parents = G.parents_map(roots)
+    replace: dict[int, G.Node] = {}
+    scan_map: dict[int, G.Node] = {}
+    claimed: set[int] = set()
+    for n in G.walk(roots):
+        if not isinstance(n, G.Filter):
+            continue
+        u = n.inputs[0]
+        if not isinstance(u, G.Scan) or u.id in claimed:
+            continue
+        if not getattr(u.source, "supports_pushdown", False):
+            continue
+        if len(parents.get(u.id, [])) != 1 or u.persist:
+            continue
+        names = frozenset(u.source.schema.names)
+        pushable: list[E.Expr] = []
+        residual: list[E.Expr] = []
+        for c in _conjuncts(n.predicate):
+            if _has_udf(c) or not (c.used_cols() <= names):
+                residual.append(c)
+            else:
+                pushable.append(c)
+        if not pushable:
+            continue
+        merged = list(u.pushdown.conjuncts) if u.pushdown is not None else []
+        merged += [c for c in pushable if c not in merged]
+        ns = G.Scan(u.source, u.columns, u.dtype_overrides,
+                    pushdown=G.ScanPushdown(merged))
+        ns.skip_partitions = u.skip_partitions
+        if residual:
+            out: G.Node = G.Filter(ns, E.conjoin(residual))
+        else:
+            out = ns
+        G.copy_runtime_flags(n, out)
+        replace[n.id] = out
+        scan_map[u.id] = ns
+        claimed.add(u.id)
+        if trace is not None:
+            trace.append(f"scan_pushdown scan#{u.id}: "
+                         f"{len(pushable)} conjuncts sunk"
+                         + (f", {len(residual)} residual" if residual else ""))
+    if not replace:
+        return roots, {}
+    roots2, m = _rebuild(roots, replace)
+    # the absorbed Scan is never visited by the rebuild walk (its only
+    # parent — the Filter — is replaced before its inputs are descended),
+    # so record its image explicitly: the composed idmap must track it or
+    # the plan cache's rebinding slots keep the stale pushdown-free Scan
+    for uid, ns in scan_map.items():
+        m.setdefault(uid, ns)
+    return roots2, m
 
 
 # ---------------------------------------------------------------------------
@@ -454,7 +539,7 @@ def dtype_narrowing(roots: list[G.Node], ctx: LaFPContext | None,
             if target.itemsize < cs.np_dtype.itemsize:
                 overrides[c] = str(target)
         if overrides != n.dtype_overrides:
-            ns = G.Scan(n.source, n.columns, overrides)
+            ns = G.Scan(n.source, n.columns, overrides, pushdown=n.pushdown)
             ns.skip_partitions = n.skip_partitions
             replace[n.id] = ns
             if trace is not None:
@@ -464,6 +549,28 @@ def dtype_narrowing(roots: list[G.Node], ctx: LaFPContext | None,
     return _rebuild(roots, replace)
 
 
+def _engines_execute_pushdown(ctx) -> bool:
+    """True when every engine this plan could land on declares the
+    ``scan_pushdown`` capability.  An engine that does not know about
+    ``Scan.pushdown`` (e.g. an externally registered plugin with its own
+    scan loader) would silently drop the absorbed filter — so the pass
+    only runs when the session engine (or, under AUTO, every candidate)
+    opts in."""
+    from .engines import AUTO, default_registry
+    reg = default_registry()
+    engine = str(ctx.backend)
+    if engine == AUTO:
+        from .planner.select import candidate_engines
+        names = candidate_engines(ctx)
+    else:
+        names = (engine,)
+    try:
+        return all(getattr(reg.capability_of(n), "scan_pushdown", False)
+                   for n in names)
+    except Exception:  # noqa: BLE001 — unknown engine: stay conservative
+        return False
+
+
 # ---------------------------------------------------------------------------
 # Pipeline
 
@@ -471,7 +578,7 @@ def dtype_narrowing(roots: list[G.Node], ctx: LaFPContext | None,
 def optimize(roots: list[G.Node], ctx: LaFPContext | None = None,
              enable: Iterable[str] = ("cse", "rewrite", "pushdown",
                                       "selectivity", "columns", "zonemap",
-                                      "dtypes", "fuse")
+                                      "scan_pushdown", "dtypes", "fuse")
              ) -> tuple[list[G.Node], dict[int, G.Node]]:
     """Run the rule pipeline; returns (new_roots, combined id map)."""
     enable = set(enable)
@@ -508,9 +615,20 @@ def optimize(roots: list[G.Node], ctx: LaFPContext | None = None,
     if "columns" in enable:
         roots, m = column_selection(roots, ctx, trace)
         absorb(m)
-    if "zonemap" in enable:
+    if "zonemap" in enable and (ctx is None
+                                or ctx.backend_options.get("zonemap", True)):
         roots, m = zone_map_pruning(roots, trace)
         absorb(m)
+    if "scan_pushdown" in enable and (
+            ctx is None or (ctx.backend_options.get("pushdown", True)
+                            and _engines_execute_pushdown(ctx))):
+        roots, m = scan_pushdown(roots, trace)
+        absorb(m)
+        if m and "columns" in enable:
+            # the absorbed Filter's predicate columns are no longer live
+            # above the scan — shrink Scan.columns to the output projection
+            roots, m = column_selection(roots, ctx, trace)
+            absorb(m)
     if "dtypes" in enable:
         roots, m = dtype_narrowing(roots, ctx, trace)
         absorb(m)

@@ -59,7 +59,18 @@ def node_work(n: G.Node, stats: dict[int, TableStats], cap) -> float:
     st = stats[n.id]
     in_rows = sum(stats[i.id].rows for i in n.inputs)
     if isinstance(n, G.Scan):
-        return st.total_bytes * cap.scan_cost_per_byte
+        # price bytes-actually-read: pruned partitions and projected-away
+        # columns cost nothing; a pushed-down predicate adds its mask
+        # evaluation over every decoded row
+        from .stats import scan_read_profile
+        prof = scan_read_profile(n)
+        if prof is None:
+            return st.total_bytes * cap.scan_cost_per_byte
+        read_rows, read_bytes = prof
+        work = read_bytes * cap.scan_cost_per_byte
+        if n.pushdown is not None:
+            work += read_rows * cap.row_cost
+        return work
     if isinstance(n, (G.Materialized, G.SinkPrint, G.Handoff)):
         return 0.0
     if isinstance(n, G.Join):

@@ -86,9 +86,15 @@ def _schema_fp(source) -> tuple:
 
 def _scan_fp(n: G.Scan) -> tuple:
     # NO cache_token here — that is the whole point of the cache: the same
-    # shape over new data (new token) must still hit.
-    return ("scan", n.columns, tuple(sorted(n.dtype_overrides.items())),
-            tuple(sorted(n.skip_partitions)), _schema_fp(n.source))
+    # shape over new data (new token) must still hit.  Source *identity*
+    # beyond shape is covered by the source class + schema here and by the
+    # bind-time token comparison (which drops data-derived state on
+    # mismatch); pushed-down predicates are part of the shape.
+    pd_fp = (tuple(_expr_fp(c) for c in n.pushdown.conjuncts)
+             if n.pushdown is not None else None)
+    return ("scan", type(n.source).__name__, n.columns,
+            tuple(sorted(n.dtype_overrides.items())),
+            tuple(sorted(n.skip_partitions)), pd_fp, _schema_fp(n.source))
 
 
 _NODE_FP = {
@@ -133,6 +139,8 @@ def _env_fp(ctx) -> tuple:
             int(opts.get("chunk_rows", 1 << 16)),
             bool(opts.get("rewrites", True)),
             bool(opts.get("fusion", True)),
+            bool(opts.get("pushdown", True)),
+            bool(opts.get("zonemap", True)),
             str(opts.get("kernel_impl", "auto")),
             ctx.memory_budget)
 
@@ -261,14 +269,33 @@ class CachedPlan:
                 if _token(src) == self.source_tokens[oi]:
                     # same data: data-derived plan state (zone-map skips,
                     # dtype narrowing) is still proven — keep it
-                    out = G.Scan(src, t.columns, t.dtype_overrides)
+                    out = G.Scan(src, t.columns, t.dtype_overrides,
+                                 pushdown=t.pushdown)
                     out.skip_partitions = t.skip_partitions
                 else:
-                    # fresh data: keep schema-derived pruning (columns),
-                    # drop data-derived state
+                    # fresh data: keep schema-derived pruning (columns,
+                    # pushed-down predicate — its semantics don't depend on
+                    # data), drop data-derived state.  The template's
+                    # skip_partitions were proven against the *old*
+                    # source's zone maps; carrying them over would
+                    # silently drop live partitions of the new data, so
+                    # re-derive the prune set from the pushed-down
+                    # conjuncts against the new source's partition metas.
                     out = G.Scan(src, t.columns,
-                                 dict(new_scan.dtype_overrides))
-                    out.skip_partitions = new_scan.skip_partitions
+                                 dict(new_scan.dtype_overrides),
+                                 pushdown=t.pushdown)
+                    skips = set(new_scan.skip_partitions)
+                    if t.pushdown is not None:
+                        usable = [c for c in t.pushdown.conjuncts
+                                  if isinstance(c, E.BinOp)]
+                        if usable:
+                            for pi in range(src.n_partitions):
+                                zm = src.partition_meta(pi).get(
+                                    "zonemap", {})
+                                if zm and any(c.prune_partition(zm)
+                                              for c in usable):
+                                    skips.add(pi)
+                    out.skip_partitions = frozenset(skips)
             else:
                 out = t.with_inputs([clone(i) for i in t.inputs])
             memo[t.id] = out

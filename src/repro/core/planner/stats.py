@@ -179,10 +179,42 @@ def _table_stats_of(table: Mapping) -> TableStats:
                       zonemap={}, exact=True)
 
 
+def scan_read_profile(n: "G.Scan") -> tuple[float, float] | None:
+    """``(rows, bytes)`` the scan will actually read: rows over *unpruned*
+    partitions × the width of the read column set (output projection ∪
+    pushed-down predicate columns).  ``None`` when partition metas lack
+    row counts — callers fall back to whole-table size."""
+    rows = 0
+    for pi in range(n.source.n_partitions):
+        if pi in n.skip_partitions:
+            continue
+        meta = n.source.partition_meta(pi)
+        if "rows" not in meta:
+            return None
+        rows += meta["rows"]
+    names = n.columns if n.columns is not None else n.source.schema.names
+    read = set(names)
+    if n.pushdown is not None:
+        read |= {c for c in n.pushdown.used_cols()
+                 if c in n.source.schema.names}
+    width = sum(n.source.schema.col(c).itemsize for c in read)
+    return float(rows), float(rows * width)
+
+
+def scan_read_bytes(n: "G.Scan") -> float | None:
+    prof = scan_read_profile(n)
+    return prof[1] if prof is not None else None
+
+
 def estimate_node(n: G.Node, child_stats: list[TableStats]) -> TableStats:
     """One-step propagation of TableStats through an operator."""
     if isinstance(n, G.Scan):
-        return source_stats(n.source, n.columns, n.skip_partitions)
+        st = source_stats(n.source, n.columns, n.skip_partitions)
+        if n.pushdown is not None:
+            # the pushed-down predicate filters rows at load time, so the
+            # scan's *output* carries the filter's selectivity
+            st = st.scaled(predicate_selectivity(n.pushdown.predicate, st))
+        return st
     if isinstance(n, G.Materialized):
         return _table_stats_of(n.table)
     if isinstance(n, G.Handoff):

@@ -26,6 +26,13 @@ class Source:
     schema: TableSchema
     dicts: dict[str, list]          # vocab per dict-encoded column
     name: str = "source"
+    # scan-layer capabilities: whether the optimizer may sink filter
+    # conjuncts into scans over this source (predicate evaluation happens
+    # in the shared loader, so any host-array source qualifies), and
+    # whether the streaming backend should decode partitions ahead on the
+    # prefetch thread (only worthwhile when load_partition does real IO)
+    supports_pushdown: bool = False
+    prefetchable: bool = False
 
     @property
     def n_partitions(self) -> int:
@@ -117,6 +124,8 @@ def _zonemap(arrays: Mapping[str, np.ndarray]) -> dict:
 class InMemorySource(Source):
     """Arrays held in memory, split into fixed-size partitions."""
 
+    supports_pushdown = True
+
     def __init__(self, arrays: Mapping[str, np.ndarray],
                  partition_rows: int = 1 << 16,
                  dicts: Mapping[str, Sequence] | None = None,
@@ -197,6 +206,9 @@ class NpzDirectorySource(Source):
     generator.
     """
 
+    supports_pushdown = True
+    prefetchable = True
+
     def __init__(self, path: str):
         self.path = path
         with open(os.path.join(path, "_meta.json")) as f:
@@ -211,6 +223,8 @@ class NpzDirectorySource(Source):
                          is_datetime=c.get("is_datetime", False))
             for n, c in cols.items()))
         self.name = os.path.basename(path.rstrip("/"))
+        if any("rows" not in p or "zonemap" not in p for p in self._parts):
+            self._restore_stats()
         # content fingerprint over the partition metadata (files, row
         # counts, zone maps): a rewritten directory gets a fresh token, so
         # correctness-bearing key consumers (persist cache) never serve
@@ -219,8 +233,41 @@ class NpzDirectorySource(Source):
         self._fingerprint = hashlib.md5(
             json.dumps(meta, sort_keys=True).encode()).hexdigest()[:16]
 
+    def _restore_stats(self):
+        """Fill missing per-partition rows/zone maps from the ``_stats.json``
+        sidecar — or, when the sidecar is absent/stale, with ONE data scan
+        whose result is persisted to the sidecar, so the next open of this
+        directory is metadata-only.  (``_meta.json`` written by
+        ``write_npz_source`` already carries stats; this path serves
+        hand-built or pre-sidecar directories.)"""
+        # function-level import: repro.io.parquet imports this module
+        from repro.io import sidecar as SC
+        files = [os.path.join(self.path, p["file"]) for p in self._parts]
+        payload = SC.read_sidecar(self.path, data_files=files)
+        if payload is None:
+            stats = []
+            for p in self._parts:
+                with np.load(os.path.join(self.path, p["file"])) as z:
+                    arrays = {n: z[n] for n in z.files}
+                rows = len(next(iter(arrays.values()))) if arrays else 0
+                stats.append({"file": p["file"], "rows": rows,
+                              "zonemap": _zonemap(arrays)})
+            payload = SC.write_sidecar(self.path, stats, data_files=files)
+        by_file = {sp.get("file"): sp for sp in payload["partitions"]}
+        for p in self._parts:
+            sp = by_file.get(p["file"], {})
+            if "rows" not in p and "rows" in sp:
+                p["rows"] = sp["rows"]
+            if "zonemap" not in p:
+                p["zonemap"] = sp.get("zonemap", {})
+
     def cache_token(self):
-        return ("npz", os.path.abspath(self.path), self._fingerprint)
+        """Path-stable, covering file identity: the _meta.json content
+        fingerprint plus the stats sidecar's mtime (0 when absent) — a
+        rewritten directory or refreshed sidecar yields a fresh token."""
+        from repro.io import sidecar as SC
+        return ("npz", os.path.abspath(self.path), self._fingerprint,
+                SC.sidecar_mtime_ns(self.path))
 
     @property
     def n_partitions(self):
@@ -259,6 +306,13 @@ def write_npz_source(path: str, arrays: Mapping[str, np.ndarray],
     meta = {"partitions": parts, "columns": cols, "dicts": dicts}
     with open(os.path.join(path, "_meta.json"), "w") as f:
         json.dump(meta, f)
+    # stats sidecar at ingest: reopening never rescans data even if the
+    # partition list is later rewritten without stats
+    from repro.io import sidecar as SC
+    SC.write_sidecar(path, parts, columns=cols, dicts=dicts,
+                     datetimes=list(datetimes),
+                     data_files=[os.path.join(path, p["file"])
+                                 for p in parts])
     return NpzDirectorySource(path)
 
 

@@ -23,6 +23,16 @@ Counter glossary (what the built-in layers emit):
 ``exchange.shards``             shard partitions moved across those shuffles
 ``distributed.native_fallbacks`` sharded native paths that fell back to eager
 ``spans.dropped``               spans discarded by a full profile ring
+``io.partitions_loaded``        source partitions actually decoded from disk
+``io.partitions_pruned``        partitions skipped via zone-map/pushdown
+                                pruning (never read)
+``io.partitions_prefetched``    partitions decoded ahead of the consumer by
+                                the async prefetcher (streaming backend)
+``io.bytes_read``               decoded bytes of loaded partitions (the
+                                pushdown benchmark's figure of merit)
+``io.pushdown_rows_in``/
+``io.pushdown_rows_out``        rows entering / surviving pushed-down
+                                predicates at the scan layer
 ==============================  =============================================
 """
 from __future__ import annotations

@@ -226,6 +226,19 @@ def op_span(op: str, **attrs) -> Span | _NoopSpan:
     return tracer.span("operator", op=op, **attrs)
 
 
+def io_span(op: str, tracer: Tracer | None = None, **attrs) -> Span | _NoopSpan:
+    """IO-layer span (partition load, prefetch, ingest) with the same
+    disabled-cost profile as :func:`op_span`.  Accepts an explicit tracer
+    for call sites off the session thread — the prefetch worker passes the
+    owning session's tracer, since the context lookup is thread-local."""
+    if not _ACTIVE_TRACERS:
+        return NOOP_SPAN
+    t = tracer if tracer is not None else _current_tracer()
+    if t is None or not t._profiles:
+        return NOOP_SPAN
+    return t.span("io", op=op, **attrs)
+
+
 def metric_inc(name: str, n: int = 1) -> None:
     """Increment a counter on the current session's metrics registry."""
     from repro.core.context import get_context

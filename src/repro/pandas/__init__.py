@@ -50,13 +50,13 @@ from repro.obs import Profile, profile
 
 from .api import DataFrame, Series, concat, isna, merge, notna, to_datetime
 from .fallback import FallbackEvent, record_fallback
-from .io import from_arrays, read_csv, read_npz, read_source
+from .io import from_arrays, read_csv, read_npz, read_parquet, read_source
 
 __all__ = [
     "analyze", "flush", "session", "get_context", "default_context",
     "push_session", "pop_session", "LaFPContext",
     "DataFrame", "Series", "LazyFrame", "LazyColumn", "Result",
-    "read_csv", "read_npz", "read_source", "from_arrays",
+    "read_csv", "read_npz", "read_parquet", "read_source", "from_arrays",
     "concat", "merge", "to_datetime", "isna", "notna",
     "BackendEngines", "BACKEND_ENGINE", "set_backend",
     "register_engine", "unregister_engine", "engine_names",

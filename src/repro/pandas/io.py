@@ -36,8 +36,8 @@ def _apply_usecols(source, cols):
     return source
 
 
-def read_source(source):
-    cols = usecols_hint()
+def _frame_over(source, cols):
+    """Lazy frame over ``source``, projected to ``cols`` when given."""
     frame = _read_source(_apply_usecols(source, cols))
     if cols is not None:
         valid = [c for c in cols if c in source.schema]
@@ -47,9 +47,24 @@ def read_source(source):
     return frame
 
 
+def read_source(source):
+    return _frame_over(source, usecols_hint())
+
+
 def read_npz(path: str):
     from repro.core.source import NpzDirectorySource
     return read_source(NpzDirectorySource(path))
+
+
+def read_parquet(path: str, columns=None):
+    """Lazy frame over a parquet file or ``part-*.parquet`` directory
+    (``repro.io.ParquetSource``): scans are column-pruned and
+    predicate-pushed, partitions pruned via the sidecar zone maps.
+    Requires pyarrow."""
+    from repro.io import ParquetSource
+    src = ParquetSource(path)
+    cols = columns if columns is not None else usecols_hint()
+    return _frame_over(src, cols)
 
 
 def from_arrays(arrays, partition_rows: int = 1 << 16, dicts=None,
@@ -96,10 +111,10 @@ def _parse_datetimes(vals) -> np.ndarray:
     return out
 
 
-def read_csv(path: str, usecols=None, dtype=None, parse_dates=()):
+def _parse_csv(path: str, hint, dtype, parse_dates):
+    """CSV → (arrays, dicts, datetimes) under the inference rules above."""
     import csv as _csv
 
-    hint = usecols if usecols is not None else usecols_hint()
     with open(path, newline="") as f:
         reader = _csv.reader(f)
         header = next(reader)
@@ -132,6 +147,55 @@ def read_csv(path: str, usecols=None, dtype=None, parse_dates=()):
         if dtype and n in dtype:
             arr = arr.astype(dtype[n])
         arrays[n] = arr
+    return arrays, dicts, datetimes
+
+
+def _fresh_parquet_cache(cache_path: str, csv_path: str):
+    """Reopen a ``to_parquet_cache`` directory when its sidecar records the
+    CSV's current ``(size, mtime_ns)`` — else ``None`` (rebuild)."""
+    import os
+
+    from repro.io import HAS_PYARROW
+    if not HAS_PYARROW or not os.path.isdir(cache_path):
+        return None
+    from repro.io import ParquetSource, parquet_files
+    from repro.io import sidecar as SC
+    files = parquet_files(cache_path)
+    if not files:
+        return None
+    payload = SC.read_sidecar(cache_path, data_files=files)
+    if not payload:
+        return None
+    ingest = payload.get("ingest") or {}
+    try:
+        state = SC.file_state(csv_path)
+    except OSError:
+        return None
+    if list(ingest.get(os.path.abspath(csv_path), ())) != state:
+        return None
+    return ParquetSource(cache_path)
+
+
+def read_csv(path: str, usecols=None, dtype=None, parse_dates=(),
+             to_parquet_cache: str | None = None):
+    hint = usecols if usecols is not None else usecols_hint()
+    if to_parquet_cache is not None:
+        # opt-in columnar cache: parse once (ALL columns, so later reads
+        # with different projections reuse the same cache), serve every
+        # fresh re-open from parquet + sidecar without touching the CSV
+        import os
+
+        src = _fresh_parquet_cache(to_parquet_cache, path)
+        if src is None:
+            from repro.io import sidecar as SC
+            from repro.io.parquet import write_parquet_source
+            arrays, dicts, datetimes = _parse_csv(path, None, dtype,
+                                                  parse_dates)
+            src = write_parquet_source(
+                to_parquet_cache, arrays, dicts=dicts, datetimes=datetimes,
+                ingest={os.path.abspath(path): SC.file_state(path)})
+        return _frame_over(src, hint)
+    arrays, dicts, datetimes = _parse_csv(path, hint, dtype, parse_dates)
     src = InMemorySource(arrays, dicts=dicts, datetimes=datetimes,
                          name=path)
     return _read_source(_apply_usecols(src, hint))

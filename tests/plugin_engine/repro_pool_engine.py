@@ -56,6 +56,11 @@ CAPABILITY = BackendCapability(
     transfer_cost_per_byte=1.0,
     fallback_penalty=1.0,
     peak_model="resident",
+    # opt in to Scan.pushdown: _load_scan delegates to the shared
+    # repro.io.scan loader, which applies pushed-down conjuncts at load
+    # time.  Without this flag the optimizer keeps Filter nodes above
+    # scans for any plan that could land on this engine.
+    scan_pushdown=True,
 )
 
 _ROWWISE = ("filter", "project", "assign", "rename", "astype", "fillna",
@@ -252,20 +257,14 @@ class PoolEngine:
     # physical-operator layer) ----------------------------------------------
 
     def _load_scan(self, n: G.Scan) -> dict[str, np.ndarray]:
-        parts = []
-        for pi in range(n.source.n_partitions):
-            if pi in n.skip_partitions:
-                continue
-            part = n.source.load_partition(pi, n.columns)
-            part = {k: np.asarray(v) for k, v in part.items()}
-            for c, dt in n.dtype_overrides.items():
-                if c in part:
-                    part[c] = part[c].astype(dt)
-            parts.append(part)
+        # the shared loader honors Scan.pushdown / skip_partitions /
+        # dtype_overrides — the contract behind CAPABILITY.scan_pushdown
+        from repro.io.scan import (empty_scan_table, load_scan_partition,
+                                   scan_partition_indices)
+        parts = [load_scan_partition(n, pi)
+                 for pi in scan_partition_indices(n)]
         if not parts:
-            cols = n.columns or n.source.schema.names
-            return {c: np.zeros(0, n.source.schema.col(c).np_dtype)
-                    for c in cols}
+            return empty_scan_table(n)
         return self._concat(parts)
 
     def eval_node(self, n: G.Node, vals: list[Any], ctx) -> Any:

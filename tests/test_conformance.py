@@ -333,6 +333,79 @@ def test_conformance_plan_cache(engine, name, prog):
     assert_frame_matches(warm, _ground_truth(name), **opts)
 
 
+@pytest.mark.parametrize("engine", ENGINES)
+@pytest.mark.parametrize("name,prog", CORPUS, ids=[n for n, _ in CORPUS])
+def test_conformance_pushdown(engine, name, prog):
+    # the scan-pushdown pass must be invisible to results: every corpus
+    # program under session(pushdown=True) is bit-identical to the same
+    # program with the pass disabled (the escape hatch), on every engine
+    from repro.core.context import session
+
+    with session(engine=engine, pushdown=True, name="pdon") as ctx:
+        ctx.print_fn = lambda *a: None
+        on = prog(rpd, np.random.default_rng(0))
+    with session(engine=engine, pushdown=False, name="pdoff") as ctx:
+        ctx.print_fn = lambda *a: None
+        off = prog(rpd, np.random.default_rng(0))
+    _assert_bit_identical(on, off)
+    _, opts = _REFS[name]
+    assert_frame_matches(on, _ground_truth(name), **opts)
+
+
+# ---------------------------------------------------------------------------
+# Source-kind conformance: the same taxi data materialized as an NPZ
+# directory or a Parquet directory (repro.io) must be bit-identical to the
+# in-memory source through a representative pipeline, on every engine.
+
+SOURCE_KINDS = ("memory", "npz", "parquet")
+
+
+def _taxi_source(kind, base, rng, n=4_000, partition_rows=512):
+    from repro.core.source import encode_strings, write_npz_source
+    vendors = [["acme", "beta", "cabco"][i] for i in rng.integers(0, 3, n)]
+    codes, vocab = encode_strings(vendors)
+    arrays = {
+        "fare": rng.uniform(-5, 100, n),
+        "tip": rng.uniform(0, 20, n),
+        "vendor": codes,
+        "pickup": (1_577_836_800
+                   + rng.integers(0, 366 * 86400, n)).astype(np.int64),
+    }
+    dicts, datetimes = {"vendor": vocab}, ("pickup",)
+    if kind == "memory":
+        return core.InMemorySource(arrays, partition_rows, dicts=dicts,
+                                   datetimes=datetimes)
+    if kind == "npz":
+        return write_npz_source(os.path.join(base, "npz"), arrays,
+                                partition_rows, dicts=dicts,
+                                datetimes=datetimes)
+    pytest.importorskip("pyarrow")
+    from repro.io.parquet import write_parquet_source
+    return write_parquet_source(os.path.join(base, "parquet"), arrays,
+                                partition_rows, dicts=dicts,
+                                datetimes=datetimes)
+
+
+def _source_pipeline(src):
+    df = core.read_source(src)
+    r = df[df["fare"] > 60.0]
+    return (r.groupby("vendor")
+            .agg({"m": ("tip", "mean"), "n": ("fare", "count")})
+            .compute())
+
+
+@pytest.mark.parametrize("engine", ENGINES)
+@pytest.mark.parametrize("kind", [k for k in SOURCE_KINDS if k != "memory"])
+def test_conformance_source_kinds(engine, kind, tmp_path):
+    ctx = get_context()
+    ctx.backend = engine
+    base = _source_pipeline(
+        _taxi_source("memory", str(tmp_path), np.random.default_rng(0)))
+    disk = _source_pipeline(
+        _taxi_source(kind, str(tmp_path), np.random.default_rng(0)))
+    _assert_bit_identical(disk, base)
+
+
 @pytest.mark.parametrize("fusion", (True, False), ids=("fused", "unfused"))
 @pytest.mark.parametrize("engine", ENGINES)
 @pytest.mark.parametrize("name,prog", CORPUS, ids=[n for n, _ in CORPUS])

@@ -1,0 +1,293 @@
+"""On-disk IO subsystem (repro.io): sidecar-backed Parquet/NPZ sources,
+projection+predicate pushdown at the scan layer, zone-map partition
+pruning (prune-proof: pruned partitions are never ``load_partition``-ed),
+the async partition prefetcher, and the ``read_parquet`` /
+``to_parquet_cache`` facade entry points."""
+from __future__ import annotations
+
+import json
+import os
+import time
+
+import numpy as np
+import pytest
+
+import repro.core as core
+import repro.pandas as rpd
+from repro.core.context import session
+from repro.core.source import (NpzDirectorySource, encode_strings,
+                               write_npz_source)
+from repro.io import prefetch_iter
+from repro.io import sidecar as SC
+
+ENGINES = ("eager", "streaming", "auto")
+
+
+def _taxi_arrays(rng, n=4_000):
+    vendors = [["acme", "beta", "cabco"][i] for i in rng.integers(0, 3, n)]
+    codes, vocab = encode_strings(vendors)
+    return ({
+        "fare": rng.uniform(-5, 100, n),
+        "tip": rng.uniform(0, 20, n),
+        "vendor": codes,
+        "pickup": (1_577_836_800
+                   + rng.integers(0, 366 * 86400, n)).astype(np.int64),
+    }, {"vendor": vocab}, ("pickup",))
+
+
+def _write_source(kind, base, rng, partition_rows=512):
+    arrays, dicts, datetimes = _taxi_arrays(rng)
+    if kind == "npz":
+        return write_npz_source(os.path.join(base, "npz_src"), arrays,
+                                partition_rows, dicts=dicts,
+                                datetimes=datetimes)
+    pytest.importorskip("pyarrow")
+    from repro.io.parquet import write_parquet_source
+    return write_parquet_source(os.path.join(base, "pq_src"), arrays,
+                                partition_rows, dicts=dicts,
+                                datetimes=datetimes)
+
+
+def _canon(res):
+    return {k: np.asarray(res[k]) for k in res.columns}
+
+
+def _assert_identical(a, b):
+    a, b = _canon(a), _canon(b)
+    assert set(a) == set(b)
+    for k in a:
+        assert a[k].dtype == b[k].dtype, k
+        np.testing.assert_array_equal(a[k], b[k], err_msg=k)
+
+
+class SpyNpz(NpzDirectorySource):
+    """NPZ source recording which partitions were actually read."""
+
+    def __init__(self, path):
+        super().__init__(path)
+        self.loaded: list[int] = []
+
+    def load_partition(self, i, columns=None):
+        self.loaded.append(i)
+        return super().load_partition(i, columns)
+
+
+# ---------------------------------------------------------------------------
+# Prune proof: partitions outside the predicate's zone-map range are never
+# read from disk — the acceptance criterion, per engine.
+
+
+@pytest.mark.parametrize("engine", ENGINES)
+def test_pruned_partitions_never_loaded(engine, tmp_path):
+    n, rows = 4096, 512
+    key = np.arange(n, dtype=np.float64)
+    write_npz_source(str(tmp_path / "d"), {"key": key, "val": key % 7}, rows)
+    spy = SpyNpz(str(tmp_path / "d"))
+    with session(engine=engine) as ctx:
+        df = core.read_source(spy)
+        out = df[df["key"] >= 3584.0].compute()
+        assert len(out["key"]) == 512
+        live = {pi for pi in range(spy.n_partitions)
+                if spy.partition_meta(pi)["zonemap"]["key"][1] >= 3584.0}
+        assert live != set(range(spy.n_partitions))   # pruning is non-trivial
+        assert set(spy.loaded) <= live                # pruned: NEVER loaded
+        assert ctx.metrics.counter("io.partitions_pruned") > 0
+
+
+# ---------------------------------------------------------------------------
+# Pushdown differential: session(pushdown=False) is the escape hatch, and
+# results must be bit-identical with the pass on or off, per engine and
+# per on-disk source kind.
+
+
+@pytest.mark.parametrize("kind", ("npz", "parquet"))
+@pytest.mark.parametrize("engine", ENGINES)
+def test_pushdown_on_off_bit_identical(engine, kind, tmp_path):
+    src = _write_source(kind, str(tmp_path), np.random.default_rng(0))
+
+    def run(**opts):
+        with session(engine=engine, **opts):
+            df = core.read_source(src)
+            r = df[df["fare"] > 60.0]
+            return (r.groupby("vendor")
+                    .agg({"m": ("tip", "mean"), "n": ("fare", "count")})
+                    .compute())
+
+    _assert_identical(run(pushdown=True), run(pushdown=False))
+
+
+@pytest.mark.parametrize("kind", ("npz", "parquet"))
+def test_pushdown_reads_fewer_bytes(kind, tmp_path):
+    # selective filter on a sorted key, all columns in the output: with
+    # pushdown+zonemap the dead partitions never leave the disk, so
+    # bytes-read drops; full-read (both passes off) pays for everything
+    n, rows = 8192, 512
+    arrays = {"key": np.arange(n, dtype=np.float64),
+              "a": np.random.default_rng(1).random(n),
+              "b": np.random.default_rng(2).random(n)}
+    if kind == "npz":
+        src = write_npz_source(str(tmp_path / "d"), arrays, rows)
+    else:
+        pytest.importorskip("pyarrow")
+        from repro.io.parquet import write_parquet_source
+        src = write_parquet_source(str(tmp_path / "d"), arrays, rows)
+
+    def run(**opts):
+        with session(engine="streaming", **opts) as ctx:
+            df = core.read_source(src)
+            r = df[df["key"] >= float(n - rows)]
+            vals = (float(r["a"].sum()), float(r["b"].sum()))
+            return vals, ctx.metrics.counter("io.bytes_read")
+
+    out_on, bytes_on = run()
+    out_off, bytes_off = run(pushdown=False, zonemap=False)
+    np.testing.assert_allclose(out_on, out_off, rtol=1e-9)
+    assert bytes_on * 2 <= bytes_off, (bytes_on, bytes_off)
+
+
+# ---------------------------------------------------------------------------
+# Sidecar stats: reopening never rescans data; staleness rebuilds; tokens
+# are path-stable and cover the sidecar.
+
+
+def test_sidecar_restores_stats_without_data_rescan(tmp_path, monkeypatch):
+    arrays, dicts, datetimes = _taxi_arrays(np.random.default_rng(0), 1024)
+    base = str(tmp_path / "d")
+    write_npz_source(base, arrays, 256, dicts=dicts, datetimes=datetimes)
+    # simulate a pre-sidecar directory: strip stats from _meta.json
+    meta_path = os.path.join(base, "_meta.json")
+    with open(meta_path) as f:
+        meta = json.load(f)
+    for p in meta["partitions"]:
+        p.pop("rows", None)
+        p.pop("zonemap", None)
+    with open(meta_path, "w") as f:
+        json.dump(meta, f)
+
+    def bomb(*a, **k):
+        raise AssertionError("reopen rescanned partition data")
+    monkeypatch.setattr(np, "load", bomb)
+    src = NpzDirectorySource(base)                 # sidecar only — no np.load
+    m = src.partition_meta(0)
+    assert m["rows"] == 256 and "fare" in m["zonemap"]
+
+
+def test_sidecar_stale_on_data_change_and_token_moves(tmp_path):
+    arrays, dicts, datetimes = _taxi_arrays(np.random.default_rng(0), 1024)
+    base = str(tmp_path / "d")
+    src = write_npz_source(base, arrays, 256, dicts=dicts,
+                           datetimes=datetimes)
+    tok = src.cache_token()
+    assert NpzDirectorySource(base).cache_token() == tok  # path-stable
+    # touching a data file invalidates the recorded (size, mtime_ns) state
+    part = os.path.join(base, "part-00000.npz")
+    os.utime(part, ns=(time.time_ns(), time.time_ns()))
+    files = [os.path.join(base, p["file"]) for p in src._parts]
+    assert SC.read_sidecar(base, data_files=files) is None
+    # rewriting the sidecar moves the token (mtime component)
+    SC.write_sidecar(base, src._parts, data_files=files)
+    assert NpzDirectorySource(base).cache_token() != tok
+
+
+# ---------------------------------------------------------------------------
+# Prefetcher: ordering, exception propagation, early-exit shutdown — then
+# end-to-end through the streaming backend's Head early-exit.
+
+
+def test_prefetch_iter_preserves_order_and_counts():
+    seen = []
+    got = list(prefetch_iter(range(10), lambda i: i * i, depth=3,
+                             on_prefetch=seen.append))
+    assert got == [i * i for i in range(10)]
+    assert len(seen) >= 1
+
+
+def test_prefetch_iter_propagates_exceptions_in_order():
+    def load(i):
+        if i == 3:
+            raise ValueError("boom")
+        return i
+
+    out = []
+    with pytest.raises(ValueError, match="boom"):
+        for v in prefetch_iter(range(6), load, depth=2):
+            out.append(v)
+    assert out == [0, 1, 2]
+
+
+def test_prefetch_iter_early_exit_stops_worker():
+    import threading
+    before = threading.active_count()
+    for _ in range(3):
+        it = prefetch_iter(range(100), lambda i: i, depth=2)
+        for v in it:
+            if v == 5:
+                break
+        it.close()
+    time.sleep(0.1)
+    assert threading.active_count() <= before + 1
+
+
+@pytest.mark.parametrize("depth", (0, 2))
+def test_streaming_head_early_exit_with_prefetch(depth, tmp_path):
+    n, rows = 8192, 256
+    src = write_npz_source(str(tmp_path / "d"),
+                           {"x": np.arange(n, dtype=np.float64)}, rows)
+    with session(engine="streaming", io_prefetch=depth) as ctx:
+        df = core.read_source(src)
+        out = df.head(10).compute()
+        np.testing.assert_array_equal(np.asarray(out["x"]),
+                                      np.arange(10, dtype=np.float64))
+        loaded = ctx.metrics.counter("io.partitions_loaded")
+        assert loaded < n // rows              # early exit: not a full scan
+        if depth:
+            assert ctx.metrics.counter("io.partitions_prefetched") >= 1
+
+
+# ---------------------------------------------------------------------------
+# Facade: read_parquet and the read_csv parquet cache.
+
+
+def _write_csv(path, n=600):
+    rng = np.random.default_rng(0)
+    with open(path, "w") as f:
+        f.write("fare,vendor\n")
+        for i in range(n):
+            f.write(f"{rng.uniform(0, 100):.4f},v{i % 4}\n")
+
+
+def test_read_parquet_facade(tmp_path):
+    pytest.importorskip("pyarrow")
+    src = _write_source("parquet", str(tmp_path), np.random.default_rng(0))
+    df = rpd.read_parquet(src.path)
+    assert int(df["fare"].count()) == 4_000
+    only = rpd.read_parquet(src.path, columns=["fare"])
+    assert only.columns == ["fare"]
+
+
+def test_read_csv_parquet_cache_roundtrip_and_freshness(tmp_path,
+                                                       monkeypatch):
+    pytest.importorskip("pyarrow")
+    csv = str(tmp_path / "t.csv")
+    cache = str(tmp_path / "t.pq")
+    _write_csv(csv)
+    df = rpd.read_csv(csv, to_parquet_cache=cache)
+    first = df[df["fare"] > 50.0].groupby("vendor").agg(
+        {"n": ("fare", "count")}).compute()
+    assert os.path.exists(os.path.join(cache, SC.SIDECAR_NAME))
+
+    # warm: the CSV must not be parsed again
+    import repro.pandas.io as fio
+    monkeypatch.setattr(fio, "_parse_csv", lambda *a, **k: pytest.fail(
+        "warm cache re-parsed the CSV"))
+    df2 = rpd.read_csv(csv, to_parquet_cache=cache)
+    again = df2[df2["fare"] > 50.0].groupby("vendor").agg(
+        {"n": ("fare", "count")}).compute()
+    _assert_identical(first, again)
+    monkeypatch.undo()
+
+    # stale: appended rows must force a rebuild
+    with open(csv, "a") as f:
+        f.write("1.0,v0\n")
+    df3 = rpd.read_csv(csv, to_parquet_cache=cache)
+    assert int(df3["fare"].count()) == 601

@@ -40,13 +40,15 @@ def test_profile_span_tree_covers_plan_segments_operators():
     for s in segs:
         assert s.duration > 0
         assert s.attrs.get("engine")
-    # operator spans carry row counts; the rowwise chain (filter + assign)
-    # executes as one fused operator span
+    # the leading filter is pushed into the scan (scan_pushdown), so the
+    # rowwise chain reduces to the single assign; the pushdown row
+    # accounting replaces the old fused-operator row attrs
     ops = {s.attrs.get("op") for s in prof.find("operator")}
-    assert "fused_rowwise" in ops and "groupby_agg" in ops
-    filt = prof.find("operator", op="fused_rowwise")[0]
-    assert filt.attrs["rows_in"] == 200 and filt.attrs["rows_out"] == 189
-    assert filt.attrs.get("bytes_out", 0) > 0
+    assert "assign" in ops and "groupby_agg" in ops
+    assert prof.counters.get("io.pushdown_rows_in", 0) >= 200
+    assert prof.counters.get("io.pushdown_rows_out", 0) >= 189
+    assert prof.counters.get("io.pushdown_rows_out", 0) < \
+        prof.counters.get("io.pushdown_rows_in", 0)
     # spans nest: plan and segment are children of an execute span
     exec_ids = {s.id for s in prof.find("execute")}
     assert all(s.parent_id in exec_ids for s in prof.find("plan"))
@@ -65,7 +67,7 @@ def test_profile_render_is_indented_tree_with_counters():
     assert text.splitlines()[0].startswith("profile session=rendered")
     assert "  execute " in text
     assert "    segment " in text            # child of execute: deeper indent
-    assert "op=fused_rowwise" in text        # the filter+assign chain fused
+    assert "op=assign" in text               # the filter was pushed into the scan
     assert "counters:" in text
 
 

@@ -263,3 +263,46 @@ def test_cache_lru_bounded_and_clear():
     assert cache.lookup(entries[2].key) is not None
     cache.clear()
     assert len(cache) == 0
+
+
+def test_warm_rebind_rederives_pruned_partitions_from_new_zonemaps(tmp_path):
+    """Satellite of the scan-pushdown work: a warm hit binding a *different*
+    on-disk source (token mismatch) must re-derive the pruned-partition set
+    from the NEW source's zone maps — the partitions the cached template
+    skipped for source A are exactly the live ones for a reversed source B,
+    and neither run may touch its dead partitions on disk."""
+    from repro.core.source import NpzDirectorySource, write_npz_source
+
+    class Spy(NpzDirectorySource):
+        def __init__(self, path):
+            super().__init__(path)
+            self.loaded = []
+
+        def load_partition(self, i, columns=None):
+            self.loaded.append(i)
+            return super().load_partition(i, columns)
+
+    n, rows, cut = 4000, 512, 3500.0
+    asc = np.arange(n, dtype=np.float64)
+    write_npz_source(str(tmp_path / "asc"), {"key": asc}, rows)
+    write_npz_source(str(tmp_path / "desc"), {"key": asc[::-1].copy()}, rows)
+    a, b = Spy(str(tmp_path / "asc")), Spy(str(tmp_path / "desc"))
+
+    def live(src):
+        return {pi for pi in range(src.n_partitions)
+                if src.partition_meta(pi)["zonemap"]["key"][1] >= cut}
+
+    with session(engine="eager") as ctx:
+        ra = core.read_source(a)
+        out_a = ra[ra["key"] >= cut].compute()
+        assert ctx.metrics.counter("plan_cache.misses") == 1
+        rb = core.read_source(b)
+        out_b = rb[rb["key"] >= cut].compute()
+        assert ctx.metrics.counter("plan_cache.hits") == 1
+    np.testing.assert_array_equal(np.sort(np.asarray(out_a["key"])),
+                                  np.sort(np.asarray(out_b["key"])))
+    # the two sources prune opposite ends — reusing A's skip set on B
+    # would read the wrong partitions (and drop live rows)
+    assert live(a) and live(b) and live(a) != live(b)
+    assert set(a.loaded) <= live(a)
+    assert set(b.loaded) <= live(b)

@@ -474,10 +474,12 @@ def test_operator_granular_split_executes_through_handoff(monkeypatch):
     decisions = ctx.planner_decisions
     assert len(decisions) == 2
     assert decisions[0].backend == BackendEngines.STREAMING
-    assert [n.op for n in decisions[0].nodes] == ["scan", "filter"]
+    # scan_pushdown absorbs the filter into the scan, so the streaming
+    # segment is the single pushdown scan
+    assert [n.op for n in decisions[0].nodes] == ["scan"]
     assert decisions[1].backend == BackendEngines.EAGER
     assert [n.op for n in decisions[1].nodes] == ["groupby_agg"]
-    assert [b.op for b in decisions[1].boundary] == ["filter"]
+    assert [b.op for b in decisions[1].boundary] == ["scan"]
     assert any("handoff<-" in line for line in ctx.planner_trace)
     # node sets partition the plan: no operator runs twice
     seg_ids = [frozenset(n.id for n in d.nodes) for d in decisions]
