@@ -20,9 +20,16 @@ real timestamps) plus a sidecar, one file per partition.
 pyarrow is optional: ``HAS_PYARROW`` gates the source, and the NPZ
 directory layout (``repro.core.source.NpzDirectorySource``) is the
 no-pyarrow fallback with the same sidecar/pushdown contract.
+
+Null policy: parquet nulls are unsupported — the engine's host arrays are
+dense (float NaN round-trips as a real NaN value, not a parquet null), so
+externally-written files containing nulls are rejected with a clear
+``ValueError`` at stats build and again at partition decode, never a
+``KeyError`` deep in code mapping.
 """
 from __future__ import annotations
 
+import datetime
 import glob
 import os
 from typing import Mapping, Sequence
@@ -48,6 +55,25 @@ def _require_pyarrow():
         raise ImportError(
             "pyarrow is required for Parquet sources; install it or use "
             "the NPZ directory layout (write_npz_source/read_npz)")
+
+
+def _stats_epoch(v) -> int:
+    """Epoch seconds of a row-group min/max timestamp statistic.  pyarrow
+    decodes footer stats to *naive* ``datetime`` objects that represent
+    UTC instants; a naive ``.timestamp()`` would re-interpret them in the
+    machine's local zone and shift the zone map by the UTC offset —
+    silently wrong pruning on any non-UTC host."""
+    if isinstance(v, (int, float)):
+        return int(v)
+    if v.tzinfo is None:
+        v = v.replace(tzinfo=datetime.timezone.utc)
+    return int(v.timestamp())
+
+
+def _null_error(column: str, where: str) -> ValueError:
+    return ValueError(
+        f"ParquetSource does not support null values (column {column!r} "
+        f"in {where}); drop or fill nulls before ingest")
 
 
 def parquet_files(path: str) -> list[str]:
@@ -143,6 +169,8 @@ class ParquetSource(Source):
                 t = pq.ParquetFile(f).read(columns=str_cols)
                 for c in str_cols:
                     col = t.column(c)
+                    if col.null_count:
+                        raise _null_error(c, f)
                     if pa.types.is_dictionary(col.type):
                         col = col.cast(pa.string())
                     vocab_sets[c].update(
@@ -165,6 +193,9 @@ class ParquetSource(Source):
                         continue
                     spec = columns[name]
                     stats = rgm.column(ci).statistics
+                    if stats is not None and stats.has_null_count \
+                            and stats.null_count:
+                        raise _null_error(name, f)
                     if spec["is_dict"]:
                         if stats is not None and stats.has_min_max:
                             cmap = code_maps.get(name, {})
@@ -178,8 +209,8 @@ class ParquetSource(Source):
                     lo, hi = stats.min, stats.max
                     if spec["is_datetime"]:
                         try:
-                            lo = int(lo.timestamp())
-                            hi = int(hi.timestamp())
+                            lo = _stats_epoch(lo)
+                            hi = _stats_epoch(hi)
                         except (AttributeError, OSError, OverflowError):
                             continue
                     if isinstance(lo, (int, float)) \
@@ -205,8 +236,12 @@ class ParquetSource(Source):
                             p.get("zonemap", {}).items()}}
 
     def _handle(self, fname: str) -> "pq.ParquetFile":
-        fi = next(i for i, f in enumerate(self._files)
-                  if os.path.basename(f) == fname)
+        fi = next((i for i, f in enumerate(self._files)
+                   if os.path.basename(f) == fname), None)
+        if fi is None:
+            raise FileNotFoundError(
+                f"data file {fname!r} referenced by partition metadata is "
+                f"missing from {self.path!r} (directory changed after open?)")
         h = self._handles.get(fi)
         if h is None:
             h = self._handles[fi] = pq.ParquetFile(self._files[fi])
@@ -232,6 +267,8 @@ class ParquetSource(Source):
         out: dict[str, np.ndarray] = {}
         for name in (names if names is not None else table.column_names):
             col = table.column(name).combine_chunks()
+            if col.null_count:
+                raise _null_error(name, p["file"])
             cs = self.schema.col(name)
             if cs.is_dict:
                 out[name] = self._codes(name, col)
@@ -248,7 +285,7 @@ def write_parquet_source(path: str, arrays: Mapping[str, np.ndarray],
                          partition_rows: int = 1 << 18,
                          dicts: Mapping[str, Sequence[str]] | None = None,
                          datetimes: Sequence[str] = (),
-                         ingest: Mapping[str, Sequence[int]] | None = None
+                         ingest: Mapping[str, object] | None = None
                          ) -> ParquetSource:
     """Ingest engine arrays as a parquet directory source + sidecar.
 

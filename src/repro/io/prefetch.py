@@ -30,11 +30,14 @@ def prefetch_iter(indices: Sequence[int], load: Callable[[int], object],
     """Yield ``load(i)`` for each ``i`` in order, loading up to ``depth``
     items ahead on a background thread.
 
-    ``on_prefetch(i)`` (if given) fires on the worker thread for every
-    partition it decodes ahead of the consumer — the hook for
-    ``io.partitions_prefetched`` accounting.  Falls back to plain
-    sequential loading when ``depth`` < 1 or there is ≤ 1 item (nothing to
-    overlap)."""
+    ``on_prefetch(i)`` (if given) fires on the worker thread only for
+    partitions whose decode completed *before the consumer requested
+    them* — i.e. genuinely decoded ahead of the consumer, not merely
+    routed through the prefetch thread — the hook for
+    ``io.partitions_prefetched`` accounting.  A partition the consumer is
+    already blocked waiting for is demand-loaded, not prefetched.  Falls
+    back to plain sequential loading when ``depth`` < 1 or there is ≤ 1
+    item (nothing to overlap)."""
     indices = list(indices)
     if depth < 1 or len(indices) <= 1:
         for i in indices:
@@ -43,15 +46,19 @@ def prefetch_iter(indices: Sequence[int], load: Callable[[int], object],
 
     q: queue.Queue = queue.Queue(maxsize=depth)
     stop = threading.Event()
+    # number of q.get() calls the consumer has started; the k-th item was
+    # decoded ahead of the consumer iff the consumer had not yet begun its
+    # (k+1)-th get when the decode finished (int-in-list: GIL-atomic)
+    requested = [0]
 
     def worker():
         try:
-            for i in indices:
+            for k, i in enumerate(indices):
                 if stop.is_set():
                     return
                 try:
                     item = (i, load(i), None)
-                    if on_prefetch is not None:
+                    if on_prefetch is not None and requested[0] <= k:
                         on_prefetch(i)
                 except BaseException as exc:  # noqa: BLE001 — re-raised consumer-side
                     item = (i, None, exc)
@@ -75,6 +82,7 @@ def prefetch_iter(indices: Sequence[int], load: Callable[[int], object],
     t.start()
     try:
         while True:
+            requested[0] += 1
             item = q.get()
             if item is _DONE:
                 return

@@ -8,8 +8,9 @@ written once at ingest; reopening the source reads the sidecar instead of
 rescanning partitions.
 
 Staleness is detected by recording each data file's ``(size, mtime_ns)``
-at write time: a sidecar whose recorded states no longer match the files
-on disk is ignored (the source rebuilds stats and rewrites it).  The
+at write time: a sidecar whose recorded file set or states no longer
+match the files on disk — including a recorded file that was deleted —
+is ignored (the source rebuilds stats and rewrites it).  The
 sidecar file's own mtime participates in the source ``cache_token`` so a
 rewritten directory — or a hand-edited sidecar — never serves stale
 plan-key consumers (persist cache, stats feedback).
@@ -65,7 +66,7 @@ def write_sidecar(base: str, partitions: Sequence[dict],
                   dicts: Mapping[str, Sequence[str]] | None = None,
                   datetimes: Sequence[str] = (),
                   data_files: Sequence[str] | None = None,
-                  ingest: Mapping[str, Sequence[int]] | None = None) -> dict:
+                  ingest: Mapping[str, object] | None = None) -> dict:
     """Persist stats for a source rooted at ``base``.
 
     ``partitions`` — one ``{"file": name, "rows": int, "zonemap": {...}}``
@@ -97,8 +98,11 @@ def write_sidecar(base: str, partitions: Sequence[dict],
 def read_sidecar(base: str,
                  data_files: Sequence[str] | None = None) -> dict | None:
     """Load the sidecar for ``base``; ``None`` when absent, unparseable, a
-    different version, or stale (any recorded data-file state mismatches
-    the file on disk, or a current data file is not recorded)."""
+    different version, or stale.  Stale means the recorded data-file set
+    differs from ``data_files`` in EITHER direction — a current file not
+    recorded, or a recorded file deleted from disk (whose partitions would
+    reference a missing file) — or any recorded ``(size, mtime_ns)`` state
+    mismatches the file on disk."""
     path = sidecar_path(base)
     try:
         with open(path) as f:
@@ -108,13 +112,15 @@ def read_sidecar(base: str,
     if payload.get("version") != SIDECAR_VERSION:
         return None
     states = payload.get("files", {})
-    for f in data_files or ():
-        name = os.path.basename(f)
-        try:
-            if list(states.get(name, ())) != file_state(f):
-                return None
-        except OSError:
+    if data_files is not None:
+        if set(states) != {os.path.basename(f) for f in data_files}:
             return None
+        for f in data_files:
+            try:
+                if list(states[os.path.basename(f)]) != file_state(f):
+                    return None
+            except OSError:
+                return None
     return payload
 
 

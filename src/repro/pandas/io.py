@@ -150,9 +150,20 @@ def _parse_csv(path: str, hint, dtype, parse_dates):
     return arrays, dicts, datetimes
 
 
-def _fresh_parquet_cache(cache_path: str, csv_path: str):
+def _csv_cache_params(dtype, parse_dates) -> dict:
+    """Normalized parse options, part of the parquet cache's identity: the
+    cache pins the schema produced by ``(dtype, parse_dates)``, so a later
+    call with different options must read as stale, not silently serve the
+    first call's schema."""
+    return {"dtype": {str(k): np.dtype(v).str
+                      for k, v in sorted((dtype or {}).items())},
+            "parse_dates": sorted(str(c) for c in parse_dates)}
+
+
+def _fresh_parquet_cache(cache_path: str, csv_path: str, params: dict):
     """Reopen a ``to_parquet_cache`` directory when its sidecar records the
-    CSV's current ``(size, mtime_ns)`` — else ``None`` (rebuild)."""
+    CSV's current ``(size, mtime_ns)`` AND the same parse params — else
+    ``None`` (rebuild)."""
     import os
 
     from repro.io import HAS_PYARROW
@@ -173,6 +184,8 @@ def _fresh_parquet_cache(cache_path: str, csv_path: str):
         return None
     if list(ingest.get(os.path.abspath(csv_path), ())) != state:
         return None
+    if ingest.get("__params__") != params:
+        return None
     return ParquetSource(cache_path)
 
 
@@ -185,7 +198,8 @@ def read_csv(path: str, usecols=None, dtype=None, parse_dates=(),
         # fresh re-open from parquet + sidecar without touching the CSV
         import os
 
-        src = _fresh_parquet_cache(to_parquet_cache, path)
+        params = _csv_cache_params(dtype, parse_dates)
+        src = _fresh_parquet_cache(to_parquet_cache, path, params)
         if src is None:
             from repro.io import sidecar as SC
             from repro.io.parquet import write_parquet_source
@@ -193,7 +207,8 @@ def read_csv(path: str, usecols=None, dtype=None, parse_dates=(),
                                                   parse_dates)
             src = write_parquet_source(
                 to_parquet_cache, arrays, dicts=dicts, datetimes=datetimes,
-                ingest={os.path.abspath(path): SC.file_state(path)})
+                ingest={os.path.abspath(path): SC.file_state(path),
+                        "__params__": params})
         return _frame_over(src, hint)
     arrays, dicts, datetimes = _parse_csv(path, hint, dtype, parse_dates)
     src = InMemorySource(arrays, dicts=dicts, datetimes=datetimes,

@@ -189,17 +189,102 @@ def test_sidecar_stale_on_data_change_and_token_moves(tmp_path):
     assert NpzDirectorySource(base).cache_token() != tok
 
 
+def test_sidecar_stale_on_deleted_data_file(tmp_path):
+    # a recorded file deleted from disk must read as stale even though
+    # every *surviving* file still matches its recorded state — otherwise
+    # the sidecar's partitions reference a missing file
+    import glob as _glob
+    base = str(tmp_path / "d")
+    write_npz_source(base, {"x": np.arange(1024, dtype=np.float64)}, 256)
+    os.remove(os.path.join(base, "part-00003.npz"))
+    files = sorted(_glob.glob(os.path.join(base, "part-*.npz")))
+    assert len(files) == 3
+    assert SC.read_sidecar(base, data_files=files) is None
+
+
+def test_parquet_reopen_after_file_deletion_rebuilds(tmp_path):
+    pytest.importorskip("pyarrow")
+    from repro.io.parquet import ParquetSource, write_parquet_source
+    base = str(tmp_path / "d")
+    src = write_parquet_source(base,
+                               {"x": np.arange(1024, dtype=np.float64)}, 256)
+    assert src.n_partitions == 4
+    os.remove(os.path.join(base, "part-00003.parquet"))
+    reopened = ParquetSource(base)      # stale sidecar → rebuilt, no crash
+    assert reopened.n_partitions == 3
+    # a partition referencing a vanished file fails loudly, not with a
+    # bare StopIteration swallowed by streaming generators
+    with pytest.raises(FileNotFoundError, match="missing"):
+        reopened._handle("part-00003.parquet")
+
+
+# ---------------------------------------------------------------------------
+# Externally-written parquet: zone maps must be timezone-independent, and
+# nulls rejected with a clear error at the scan boundary.
+
+
+def test_timestamp_zone_maps_are_utc_under_local_tz(tmp_path, monkeypatch):
+    # footer stats decode to naive datetimes representing UTC instants;
+    # building zone maps via naive .timestamp() on a non-UTC machine would
+    # shift bounds by the UTC offset and mis-prune partitions
+    pa = pytest.importorskip("pyarrow")
+    import pyarrow.parquet as pq
+    from repro.io.parquet import ParquetSource
+    monkeypatch.setenv("TZ", "America/New_York")
+    time.tzset()
+    try:
+        lo, hi = 1_577_836_800, 1_577_923_200        # 2020-01-01/02 UTC
+        d = tmp_path / "pq"
+        d.mkdir()
+        ts = pa.array([lo, hi], pa.int64()).cast(pa.timestamp("s"))
+        pq.write_table(pa.table({"ts": ts}),
+                       str(d / "part-00000.parquet"))
+        src = ParquetSource(str(d))                  # no sidecar: footer pass
+        assert src.partition_meta(0)["zonemap"]["ts"] == (lo, hi)
+        loaded = src.load_partition(0, ["ts"])
+        assert loaded["ts"].tolist() == [lo, hi]     # bounds match the data
+    finally:
+        monkeypatch.undo()
+        time.tzset()
+
+
+def test_parquet_nulls_rejected_with_clear_error(tmp_path):
+    pa = pytest.importorskip("pyarrow")
+    import pyarrow.parquet as pq
+    from repro.io.parquet import ParquetSource
+    for name, arr in (("s", pa.array(["a", None, "b"], pa.string())),
+                      ("x", pa.array([1, None, 3], pa.int64()))):
+        d = tmp_path / f"nulls_{name}"
+        d.mkdir()
+        pq.write_table(pa.table({name: arr}), str(d / "part-00000.parquet"))
+        with pytest.raises(ValueError, match="null"):
+            ParquetSource(str(d))
+
+
 # ---------------------------------------------------------------------------
 # Prefetcher: ordering, exception propagation, early-exit shutdown — then
 # end-to-end through the streaming backend's Head early-exit.
 
 
 def test_prefetch_iter_preserves_order_and_counts():
-    seen = []
-    got = list(prefetch_iter(range(10), lambda i: i * i, depth=3,
-                             on_prefetch=seen.append))
+    # slow consumer (20ms) vs fast load (5ms): the worker runs ahead, so
+    # every partition EXCEPT the first counts as prefetched — the first is
+    # demand-loaded (the consumer is already blocked waiting on it), and
+    # on_prefetch must not fire for partitions the consumer requested
+    # before their decode finished
+    seen, got = [], []
+
+    def load(i):
+        time.sleep(0.005)
+        return i * i
+
+    for v in prefetch_iter(range(10), load, depth=3,
+                           on_prefetch=seen.append):
+        time.sleep(0.02)
+        got.append(v)
     assert got == [i * i for i in range(10)]
-    assert len(seen) >= 1
+    assert 0 not in seen                      # demand-loaded, not prefetched
+    assert 1 <= len(seen) <= 9
 
 
 def test_prefetch_iter_propagates_exceptions_in_order():
@@ -240,8 +325,38 @@ def test_streaming_head_early_exit_with_prefetch(depth, tmp_path):
                                       np.arange(10, dtype=np.float64))
         loaded = ctx.metrics.counter("io.partitions_loaded")
         assert loaded < n // rows              # early exit: not a full scan
-        if depth:
-            assert ctx.metrics.counter("io.partitions_prefetched") >= 1
+        # prefetched counts decoded-ahead partitions only — a subset of
+        # loads, and timing-dependent, so just the invariant here (the
+        # deterministic semantics test is below)
+        assert ctx.metrics.counter("io.partitions_prefetched") <= loaded
+
+
+def test_prefetched_counts_only_partitions_decoded_ahead(tmp_path):
+    # through the real scan loader: 8 partitions, load slower than nothing
+    # but faster than the consumer, so the worker is ahead for every
+    # partition except the first — prefetched must land strictly between
+    # 1 and partitions_loaded, never equal partitions_loaded (the old bug:
+    # every load through the prefetch thread counted as a prefetch)
+    from repro.core import graph as G
+    from repro.io.scan import iter_scan_partitions
+
+    n, rows = 2048, 256
+    base = str(tmp_path / "d")
+    write_npz_source(base, {"x": np.arange(n, dtype=np.float64)}, rows)
+
+    class SlowNpz(NpzDirectorySource):
+        def load_partition(self, i, columns=None):
+            time.sleep(0.005)
+            return super().load_partition(i, columns)
+
+    src = SlowNpz(base)
+    with session(engine="streaming", io_prefetch=2) as ctx:
+        for _ in iter_scan_partitions(G.Scan(src), ctx):
+            time.sleep(0.02)
+        loaded = ctx.metrics.counter("io.partitions_loaded")
+        prefetched = ctx.metrics.counter("io.partitions_prefetched")
+        assert loaded == src.n_partitions == 8
+        assert 1 <= prefetched < loaded
 
 
 # ---------------------------------------------------------------------------
@@ -291,3 +406,37 @@ def test_read_csv_parquet_cache_roundtrip_and_freshness(tmp_path,
         f.write("1.0,v0\n")
     df3 = rpd.read_csv(csv, to_parquet_cache=cache)
     assert int(df3["fare"].count()) == 601
+
+
+def test_read_csv_parquet_cache_stale_on_parse_param_change(tmp_path,
+                                                           monkeypatch):
+    # dtype/parse_dates are part of the cache identity: a later call with
+    # different parse options must rebuild, not silently serve the first
+    # call's schema
+    pytest.importorskip("pyarrow")
+    import repro.pandas.io as fio
+    csv = str(tmp_path / "t.csv")
+    cache = str(tmp_path / "t.pq")
+    _write_csv(csv)
+    calls = []
+    orig = fio._parse_csv
+
+    def counting(*a, **k):
+        calls.append(1)
+        return orig(*a, **k)
+
+    monkeypatch.setattr(fio, "_parse_csv", counting)
+    rpd.read_csv(csv, to_parquet_cache=cache)
+    assert len(calls) == 1
+    rpd.read_csv(csv, to_parquet_cache=cache)          # warm, same params
+    assert len(calls) == 1
+    df = rpd.read_csv(csv, dtype={"fare": "float32"}, to_parquet_cache=cache)
+    assert len(calls) == 2                             # params changed
+    assert np.asarray(df.compute()["fare"]).dtype == np.float32
+    rpd.read_csv(csv, dtype={"fare": "float32"}, to_parquet_cache=cache)
+    assert len(calls) == 2                             # warm under new params
+    # the recorded identity covers parse_dates too
+    with open(os.path.join(cache, SC.SIDECAR_NAME)) as f:
+        payload = json.load(f)
+    assert payload["ingest"]["__params__"] == {
+        "dtype": {"fare": "<f4"}, "parse_dates": []}
